@@ -1,0 +1,94 @@
+"""Fig 6: multi-client, multi-tenant system — 4 concurrent clients
+(5Q/1L, 5Q/2L, 7Q/1L, 7Q/2L) against 4 heterogeneous workers
+(5/10/15/20 qubits), multi-tenant vs single-tenant semantics.
+
+Headline paper claims reproduced here:
+  * 68.7% runtime reduction for 5Q/1L under multi-tenancy,
+  * 8.2% for 7Q/2L (the 5-qubit worker is useless to 7-qubit circuits),
+  * up to 3.9x circuits/sec (5Q/1L: 1.4 -> 5.5).
+"""
+from __future__ import annotations
+
+from benchmarks import paper_data as PD
+from repro.comanager import tenancy
+from repro.comanager.simulation import SystemSimulation
+from repro.comanager.worker import WorkerConfig
+
+CLIENTS = [("5q1l", 5, 1), ("5q2l", 5, 2), ("7q1l", 7, 1), ("7q2l", 7, 2)]
+
+
+def make_jobs(scale: float = 1.0):
+    """Fig-6 jobs are WORKER-bound: the e2-medium quantum simulators carry
+    the per-circuit cost (1/GCP-rate), the client side only dispatches."""
+    from repro.comanager.worker import PAPER_RATES_GCP
+    tenancy.reset_task_ids()
+    jobs = []
+    for cid, qc, nl in CLIENTS:
+        n = max(8, int(PD.N_CIRCUITS[(qc, nl)] * scale))
+        jobs.append(tenancy.JobSpec(cid, qc, nl, n,
+                                    service_override=1.0 / PAPER_RATES_GCP[(qc, nl)]))
+    return jobs
+
+
+#: co-residency slowdown 0.5: the paper's workers are e2-medium VMs with "1
+#: shared core", so two co-resident circuit simulations each run ~1.5x slower
+#: (half-serialized).  Calibrated once against Fig 6's 5q1l endpoint; the
+#: other seven numbers below are then predictions.
+CONTENTION = 0.5
+
+
+def workers():
+    return [WorkerConfig(f"w{i+1}", q, contention=CONTENTION)
+            for i, q in enumerate((5, 10, 15, 20))]
+
+
+def run(multi_tenant: bool, scale: float = 0.25):
+    """Single-tenant baseline = "single_circuit": one circuit occupies the
+    whole machine at a time ("one user occupies the entire machine while
+    others wait in a queue") — multi-tenancy's win is co-residency."""
+    sim = SystemSimulation(workers(), make_jobs(scale),
+                           tenancy="multi" if multi_tenant else "single_circuit",
+                           classical_overhead=0.01, fair_queue=True,
+                           assign_latency=PD.ASSIGN_LATENCY)
+    return sim.run()
+
+
+def rows(scale: float = 0.25):
+    multi = run(True, scale)
+    single = run(False, scale)
+    out = []
+    for cid, qc, nl in CLIENTS:
+        jm, js = multi.jobs[cid], single.jobs[cid]
+        red = 1 - jm.makespan / js.makespan
+        gain = jm.circuits_per_second / js.circuits_per_second
+        row = {
+            "figure": "fig6", "client": cid,
+            "multi_runtime_s": round(jm.makespan, 1),
+            "single_runtime_s": round(js.makespan, 1),
+            "runtime_reduction": f"{red:.1%}",
+            "cps_multi": round(jm.circuits_per_second, 2),
+            "cps_single": round(js.circuits_per_second, 2),
+            "cps_gain": f"{gain:.2f}x",
+            "paper_reduction": (f"{PD.FIG6_REDUCTION[cid]:.1%}"
+                                if cid in PD.FIG6_REDUCTION else ""),
+        }
+        out.append(row)
+    return out
+
+
+def main():
+    all_rows = rows()
+    keys = list(all_rows[0])
+    print(",".join(keys))
+    for r in all_rows:
+        print(",".join(str(r[k]) for k in keys))
+    # claim checks
+    r51 = next(r for r in all_rows if r["client"] == "5q1l")
+    r72 = next(r for r in all_rows if r["client"] == "7q2l")
+    print(f"# multi-tenancy helps 5q1l ({r51['runtime_reduction']}) far more "
+          f"than 7q2l ({r72['runtime_reduction']}) — paper: 68.7% vs 8.2%")
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""The paper's published numbers (Figs 3-6, §IV) + service-time calibration.
+
+Runtime model (matches the paper's Algorithm-1 lockstep dispatch loop):
+    T(w) = N * t_cl + (N / w) * (t_q + lat)
+where t_cl is the serial classical per-circuit cost on the manager
+(logical-circuit generation + quantum state analysis), t_q the quantum
+service time, lat the dispatch latency.  We calibrate (t_cl, t_q) per
+(qc, layers, env) from the paper's OWN 1-worker and 4-worker endpoints and
+then let the event-driven simulator produce every intermediate point — the
+2-worker values are therefore predictions, compared against the paper's.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: circuits per epoch (§IV-C1)
+N_CIRCUITS = {(5, 1): 1440, (5, 2): 2880, (5, 3): 4320,
+              (7, 1): 2016, (7, 2): 4032, (7, 3): 6048}
+
+#: paper epoch runtimes, seconds: (qc, layers) -> {workers: seconds}
+#: 2-worker entries derived from circuits/sec where runtime text omits them.
+FIG3_RUNTIME_5Q_IBMQ = {
+    (5, 1): {1: 94.7, 2: 85.2, 4: 73.1},
+    (5, 2): {1: 467.9, 2: 450.0, 4: 418.6},
+    (5, 3): {1: 749.8, 2: 651.7, 4: 569.8},
+}
+FIG4_RUNTIME_7Q_IBMQ = {
+    (7, 1): {1: 163.0, 2: 149.3, 4: 134.3},
+    (7, 2): {1: 566.5, 2: 560.0, 4: 510.8},
+    (7, 3): {1: 1366.1, 2: 1303.9, 4: 1246.5},
+}
+#: paper circuits/sec (Figs 3b, 4b)
+FIG3_CPS_5Q_IBMQ = {
+    (5, 1): {1: 15.2, 2: 16.9, 4: 19.7},
+    (5, 2): {1: 6.2, 2: 6.4, 4: 6.6},
+    (5, 3): {1: 5.9, 2: 6.6, 4: 7.6},
+}
+FIG4_CPS_7Q_IBMQ = {
+    (7, 1): {1: 12.4, 2: 13.5, 4: 15.0},
+    (7, 2): {1: 7.1, 2: 7.2, 4: 7.9},
+    (7, 3): {1: 4.4, 2: 4.6, 4: 4.8},
+}
+#: Fig 5b controlled-env (GCP e2-medium) circuits/sec, 5-qubit
+FIG5_CPS_5Q_GCP = {
+    (5, 1): {1: 3.8, 2: 4.2, 4: 5.2},
+    (5, 3): {1: 2.4, 2: 3.1, 4: 4.4},
+}
+#: Fig 5a runtime reductions of the 4-worker system vs 1- and 2-worker
+FIG5_REDUCTION_4W = {(5, 1): (0.271, 0.189), (5, 2): (0.373, 0.315),
+                     (5, 3): (0.432, 0.300)}
+#: Fig 6 multi-tenant vs single-tenant runtime reduction
+FIG6_REDUCTION = {"5q1l": 0.687, "7q2l": 0.082}
+
+ASSIGN_LATENCY = 0.005
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    qc: int
+    layers: int
+    t_classical: float      # serial manager cost per circuit
+    t_quantum: float        # worker service time per circuit
+
+    @property
+    def n_circuits(self) -> int:
+        return N_CIRCUITS[(self.qc, self.layers)]
+
+
+def calibrate(qc: int, layers: int, runtimes: dict[int, float]) -> Calibration:
+    """Solve T(w) = N t_cl + (N/w)(t_q + lat) from the w=1 and w=4 points."""
+    n = N_CIRCUITS[(qc, layers)]
+    t1, t4 = runtimes[1], runtimes[4]
+    tq_lat = 4.0 * (t1 - t4) / (3.0 * n)
+    t_q = max(tq_lat - ASSIGN_LATENCY, 1e-4)
+    t_cl = t1 / n - tq_lat
+    return Calibration(qc, layers, t_cl, t_q)
+
+
+def calibrate_from_cps(qc: int, layers: int, cps: dict[int, float]) -> Calibration:
+    n = N_CIRCUITS[(qc, layers)]
+    return calibrate(qc, layers, {w: n / r for w, r in cps.items()})

@@ -1,0 +1,63 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  Fig 3/4 : runtime + circuits/sec vs workers, IBM-Q (uncontrolled env)
+  Fig 5   : one client, controlled env (GCP), qubit-capped workers
+  Fig 6   : 4 concurrent clients, heterogeneous workers, multi- vs
+            single-tenant
+  §IV-B   : accuracy, distributed vs non-distributed  (--full only: slow)
+  extra   : fused-kernel microbenchmark (beyond paper)
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def section(title):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the slow accuracy training runs")
+    args = ap.parse_args()
+    t0 = time.time()
+
+    from benchmarks import (kernel_bench, multitenant, runtime_controlled,
+                            runtime_uncontrolled)
+
+    section("Fig 3 + Fig 4: IBM-Q backends (uncontrolled), runtime & c/s")
+    runtime_uncontrolled.main()
+
+    section("Fig 5: controlled environment (GCP), one client")
+    runtime_controlled.main()
+
+    section("Fig 6: multi-tenant system, 4 concurrent clients")
+    multitenant.main()
+
+    section("Kernel microbenchmark: fused Pallas VQC vs per-gate (beyond paper)")
+    kernel_bench.main()
+
+    section("Noise-aware scheduling (beyond paper — the paper's §V limitation)")
+    from benchmarks import noise_aware
+    noise_aware.main()
+
+    if args.full:
+        from benchmarks import accuracy
+        section("§IV-B accuracy: distributed vs non-distributed")
+        accuracy.main()
+    else:
+        section("§IV-B accuracy (skipped — pass --full; one-step gradient "
+                "equivalence check only)")
+        from benchmarks import accuracy
+        gap = accuracy.gradient_equivalence(1, 5)
+        print(f"task 1/5: max |distributed - local| theta-grad = {gap:.2e}")
+
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Fig 5: one client, multiple circuits, controlled environment (GCP
+e2-medium VMs, 1-manager + 1/2/4 quantum workers, 5-qubit circuits).
+
+Workers here ARE qubit-capped (5 qubits — one circuit resident at a time),
+matching the e2-medium single-core simulators.
+"""
+from __future__ import annotations
+
+from benchmarks import paper_data as PD
+from repro.comanager import tenancy
+from repro.comanager.simulation import SystemSimulation, homogeneous_workers
+
+
+def run_config(qc, layers, n_workers, cal):
+    tenancy.reset_task_ids()
+    jobs = [tenancy.JobSpec("client", qc, layers, cal.n_circuits,
+                            service_override=cal.t_quantum)]
+    workers = homogeneous_workers(n_workers, max_qubits=qc, contention=0.0)
+    sim = SystemSimulation(workers, jobs, lockstep=True,
+                           classical_overhead=cal.t_classical,
+                           assign_latency=PD.ASSIGN_LATENCY)
+    return sim.run()
+
+
+def rows():
+    out = []
+    for (qc, layers), cps in sorted(PD.FIG5_CPS_5Q_GCP.items()):
+        cal = PD.calibrate_from_cps(qc, layers, cps)
+        results = {}
+        for w in (1, 2, 4):
+            rep = run_config(qc, layers, w, cal)
+            results[w] = rep
+            out.append({
+                "figure": "fig5", "qc": qc, "layers": layers, "workers": w,
+                "sim_runtime_s": round(rep.makespan, 1),
+                "sim_cps": round(rep.circuits_per_second, 2),
+                "paper_cps": cps[w],
+                "cps_err": round(abs(rep.circuits_per_second - cps[w]) / cps[w], 3),
+            })
+        # 4-worker reduction vs 1- and 2-worker (Fig 5a's headline numbers)
+        red1 = 1 - results[4].makespan / results[1].makespan
+        red2 = 1 - results[4].makespan / results[2].makespan
+        p1, p2 = PD.FIG5_REDUCTION_4W[(qc, layers)]
+        out.append({
+            "figure": "fig5", "qc": qc, "layers": layers, "workers": "4v1/4v2",
+            "sim_runtime_s": f"{red1:.1%}/{red2:.1%}",
+            "sim_cps": "", "paper_cps": f"{p1:.1%}/{p2:.1%}", "cps_err": "",
+        })
+    return out
+
+
+def main():
+    all_rows = rows()
+    keys = list(all_rows[0])
+    print(",".join(keys))
+    for r in all_rows:
+        print(",".join(str(r[k]) for k in keys))
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Pytree checkpointing to .npz (offline container — no orbax).
+
+Flattens a pytree of arrays with '/'-joined key paths; restores into the
+same structure.  Suitable for both the quantum model params and the
+reduced-config transformer smoke runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree, metadata: dict | None = None) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __meta__=json.dumps(metadata or {}), **flat)
+
+
+def load(path: str, like=None):
+    """Load a checkpoint.  With ``like`` (a template pytree), restores the
+    exact structure; otherwise returns the flat {path: array} dict."""
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+        meta = json.loads(str(z["__meta__"])) if "__meta__" in z.files else {}
+    if like is None:
+        return flat, meta
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    restored = []
+    for path_keys, leaf in leaves_with_paths:
+        key = "/".join(_key_str(k) for k in path_keys)
+        arr = flat[key]
+        restored.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, restored), meta
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,247 @@
+"""The multi-tenant system simulation: EventLoop + workers + CoManager.
+
+Wires the paper's full runtime together on the virtual clock:
+  * workers register at t=0 and send heartbeats every ``heartbeat_period``;
+  * clients submit jobs (circuit banks) at their submit times;
+  * the co-Manager drains the pending queue on every state change
+    (submission / completion / heartbeat), per Algorithm 2;
+  * completions loop results back to the classical side.
+
+This is the engine behind every runtime figure reproduction
+(benchmarks/: Fig 3, 4, 5, 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.comanager.events import EventLoop
+from repro.comanager.manager import CoManager
+from repro.comanager.tenancy import JobResult, JobSpec
+from repro.comanager.worker import CircuitTask, QuantumWorker, WorkerConfig
+
+
+@dataclasses.dataclass
+class SimulationReport:
+    jobs: dict[str, JobResult]
+    total_circuits: int
+    makespan: float
+    assignments: list
+    evictions: list
+    worker_busy_time: dict[str, float]
+    #: mean over executed circuits of (1 - error_rate_w)^depth — the
+    #: fraction of SWAP-test signal surviving depolarization (1.0 = ideal).
+    fidelity_retention: float = 1.0
+
+    @property
+    def circuits_per_second(self) -> float:
+        return self.total_circuits / max(self.makespan, 1e-9)
+
+
+class SystemSimulation:
+    def __init__(self, worker_cfgs: list[WorkerConfig], jobs: list[JobSpec],
+                 *, env: str = "ibmq", multi_tenant: bool = True,
+                 tenancy: str | None = None, policy: str = "cru",
+                 fidelity_floor: float = 0.0,
+                 eager_completion: bool = True, heartbeat_period: float = 5.0,
+                 assign_latency: float = 0.01, classical_overhead: float = 0.0,
+                 lockstep: bool = False, fair_queue: bool = False,
+                 run_until: float = 1e7,
+                 worker_failures: dict[str, float] | None = None):
+        """``assign_latency``: manager->worker dispatch cost per circuit.
+
+        ``classical_overhead``: SERIAL per-circuit time on the classical
+        manager (logical-circuit generation + quantum-state analysis).  The
+        paper's runtime figures show strongly diminishing returns with more
+        workers (5q/1L: 94.7s -> 73.1s for 1 -> 4 workers, not 4x) because the
+        classical side — a single laptop/VM — processes every circuit
+        serially.  Modeling it as a serial resource reproduces those curves;
+        see benchmarks/runtime_uncontrolled.py for the calibration.
+
+        ``lockstep``: reproduce the paper's Algorithm-1 dispatch loop
+        ("for Circuit in cB: Result = Algorithm2(Circuit)"): the client sends
+        one circuit per worker, then waits for the whole round to return
+        before dispatching the next — round time ~ w*t_cl + t_q, which is
+        exactly the diminishing-returns shape of Figs 3-5 (see
+        benchmarks/calibration notes).
+
+        ``classical_overhead`` is charged to a PER-CLIENT serial ledger: each
+        client's classical process generates/analyzes its own circuits
+        serially, which is the real bottleneck on the paper's classical side.
+
+        ``worker_failures``: worker_id -> time at which it silently stops
+        heartbeating (exercises the 3-missed-heartbeats eviction path)."""
+        self.loop = EventLoop()
+        self.manager = CoManager(multi_tenant=multi_tenant, tenancy=tenancy,
+                                 eager_completion=eager_completion,
+                                 policy=policy, fidelity_floor=fidelity_floor)
+        self.workers = {c.worker_id: QuantumWorker(c) for c in worker_cfgs}
+        self.jobs = {j.client_id: j for j in jobs}
+        self.env = env
+        self.heartbeat_period = heartbeat_period
+        self.assign_latency = assign_latency
+        self.classical_overhead = classical_overhead
+        self.lockstep = lockstep
+        self.fair_queue = fair_queue  # round-robin across clients in the queue
+        self._client_free: dict[str, float] = {}  # per-client serial CPU
+        self._in_flight: dict[str, int] = {}      # per-client outstanding
+        self.run_until = run_until
+        self.failures = worker_failures or {}
+
+        self._remaining: dict[str, int] = {}
+        self._results: dict[str, JobResult] = {}
+        self._total = 0
+
+        lp = self.loop
+        lp.on("register", self._on_register)
+        lp.on("heartbeat", self._on_heartbeat)
+        lp.on("submit", self._on_submit)
+        lp.on("start", self._on_start)
+        lp.on("complete", self._on_complete)
+        lp.on("liveness", self._on_liveness)
+
+    # ------------------------------------------------------------ handlers
+    def _on_register(self, t: float, wid: str) -> None:
+        w = self.workers[wid]
+        self.manager.register_worker(wid, w.max_qubits, w.cru(t), t,
+                                     error_rate=w.cfg.error_rate)
+        self.loop.schedule(t + self.heartbeat_period, "heartbeat", wid)
+
+    def _on_heartbeat(self, t: float, wid: str) -> None:
+        if wid in self.failures and t >= self.failures[wid]:
+            return  # worker went silent: no report, no reschedule
+        if self._all_done():
+            return  # system idle: let the event loop drain
+        w = self.workers[wid]
+        self.manager.heartbeat(w.heartbeat_payload(t), t)
+        self._drain(t)
+        self.loop.schedule(t + self.heartbeat_period, "heartbeat", wid)
+
+    def _on_liveness(self, t: float, _) -> None:
+        self.manager.liveness_check(t, self.heartbeat_period)
+        self._drain(t)
+        if not self._all_done():
+            self.loop.schedule(t + self.heartbeat_period, "liveness", None)
+
+    def _all_done(self) -> bool:
+        jobs_submitted = len(self._remaining) == len(self.jobs)
+        return (jobs_submitted and not any(self._remaining.values())
+                and not self.manager.pending)
+
+    def _on_submit(self, t: float, job: JobSpec) -> None:
+        tasks = job.circuits(self.env)
+        self._remaining[job.client_id] = len(tasks)
+        self._total += len(tasks)
+        for task in tasks:
+            self.manager.submit(task)
+        self._drain(t)
+
+    def _on_start(self, t: float, payload) -> None:
+        task, wid = payload
+        w = self.workers.get(wid)
+        if w is None or task.demand > w.available_qubits:
+            # worker died (or optimistic over-commit after eviction): requeue
+            self._in_flight[task.client_id] -= 1
+            self.manager.submit(task)
+            return
+        finish = w.start(task, t)
+        self.loop.schedule(finish, "complete", (task, wid))
+
+    def _on_complete(self, t: float, payload) -> None:
+        task, wid = payload
+        if wid in self.failures and t >= self.failures[wid]:
+            return  # worker died mid-execution: result never loops back
+        if task.task_id in self.manager.completed_ids:
+            return  # duplicate (requeued-then-finished-twice guard)
+        w = self.workers[wid]
+        w.finish(task.task_id, t)
+        self.manager.complete(wid, task, t)
+        cid = task.client_id
+        self._in_flight[cid] -= 1
+        self._remaining[cid] -= 1
+        if self._remaining[cid] == 0:
+            job = self.jobs[cid]
+            self._results[cid] = JobResult(cid, job.n_circuits, job.submit_time, t)
+        self._drain(t)
+
+    def _drain(self, t: float) -> None:
+        def launch(task, wid):
+            # dispatch occupies the client's serial classical process first
+            cid = task.client_id
+            free = max(self._client_free.get(cid, 0.0), t) + self.classical_overhead
+            self._client_free[cid] = free
+            self._in_flight[cid] = self._in_flight.get(cid, 0) + 1
+            self.loop.schedule(free + self.assign_latency, "start", (task, wid))
+
+        if self.lockstep:
+            # round barrier: a client dispatches a new wave only when its
+            # previous wave has fully returned (Algorithm 1's serial loop),
+            # and at most one circuit per worker per wave.
+            busy = {c for c, n in self._in_flight.items() if n > 0}
+            placed = 0
+            remaining = []
+            used_workers: set[str] = set()
+            for task in self.manager.pending:
+                if task.client_id in busy:
+                    remaining.append(task)
+                    continue
+                wid = self.manager.assign(task, t, exclude=used_workers)
+                if wid is None:
+                    remaining.append(task)
+                    continue
+                used_workers.add(wid)
+                launch(task, wid)
+                placed += 1
+            self.manager.pending = remaining
+        else:
+            if self.fair_queue and self.manager.pending:
+                self.manager.pending = _round_robin(self.manager.pending)
+            self.manager.drain_pending(t, launch)
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> SimulationReport:
+        for wid in self.workers:
+            self.loop.schedule(0.0, "register", wid)
+        self.loop.schedule(self.heartbeat_period, "liveness", None)
+        for job in self.jobs.values():
+            self.loop.schedule(job.submit_time, "submit", job)
+        end = self.loop.run(until=self.run_until)
+        makespan = max((r.finish_time for r in self._results.values()), default=end)
+        # noise ledger: retention of each completed circuit on its worker
+        rets, reg = [], self.manager.task_registry
+        for (_, tid, wid) in self.manager.assignments:
+            task, w = reg.get(tid), self.workers.get(wid)
+            if task is not None and w is not None and tid in self.manager.completed_ids:
+                rets.append((1.0 - w.cfg.error_rate) ** task.depth)
+        return SimulationReport(
+            jobs=dict(self._results),
+            total_circuits=self._total,
+            makespan=makespan,
+            assignments=list(self.manager.assignments),
+            evictions=list(self.manager.evictions),
+            worker_busy_time={wid: w.busy_time for wid, w in self.workers.items()},
+            fidelity_retention=(sum(rets) / len(rets)) if rets else 1.0,
+        )
+
+
+def _round_robin(tasks):
+    """Interleave the queue across clients (fair multi-client service),
+    preserving each client's internal order."""
+    by_client: dict[str, list] = {}
+    order: list[str] = []
+    for task in tasks:
+        if task.client_id not in by_client:
+            by_client[task.client_id] = []
+            order.append(task.client_id)
+        by_client[task.client_id].append(task)
+    out, i = [], 0
+    while any(by_client.values()):
+        cid = order[i % len(order)]
+        if by_client[cid]:
+            out.append(by_client[cid].pop(0))
+        i += 1
+    return out
+
+
+def homogeneous_workers(n: int, max_qubits: int, **kw) -> list[WorkerConfig]:
+    return [WorkerConfig(worker_id=f"w{i+1}", max_qubits=max_qubits, **kw)
+            for i in range(n)]

@@ -1,0 +1,32 @@
+"""Config registry — one module per assigned architecture.
+
+``repro.configs.base.get(name)`` lazily imports everything here.
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = (
+    "nemotron_4_340b",
+    "phi_3_vision_4_2b",
+    "granite_34b",
+    "smollm_360m",
+    "qwen3_4b",
+    "granite_moe_3b_a800m",
+    "musicgen_large",
+    "xlstm_125m",
+    "jamba_v0_1_52b",
+    "deepseek_v3_671b",
+    "quclassi_paper",
+)
+
+_loaded = False
+
+
+def load_all() -> None:
+    global _loaded
+    if _loaded:
+        return
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True

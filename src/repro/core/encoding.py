@@ -1,0 +1,54 @@
+"""Classical-data -> qubit encodings (paper §III-A, Logical Circuit Generator).
+
+Two encodings:
+
+* ``rotation_angles`` — the paper's default ("we utilize X and Y rotations to
+  encode our data"): a flattened patch is mapped to 2 angles per data qubit
+  (RX, RY), either directly (pixel -> angle in [0, pi]) or through the
+  model's classical dense layer (Algorithm 1 line 10).
+
+* ``amplitude_encoding`` — the log_n encoding referenced in Algorithm 1
+  line 8: 2**m values are L2-normalized onto the amplitudes of m qubits.
+  Returned as an (re, im) register state for state-preparation-based loading.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rotation_angles(patch: jnp.ndarray, n_angles: int) -> jnp.ndarray:
+    """Map a flattened patch (..., P) to (..., n_angles) rotation angles.
+
+    Pixels are assumed in [0, 1]; angle = pixel * pi.  If P != n_angles the
+    patch is average-pooled (P > n) or tiled (P < n) — this is the direct
+    (dense-layer-free) path used by unit tests and the runtime benchmarks.
+    """
+    p = patch.shape[-1]
+    if p == n_angles:
+        v = patch
+    elif p > n_angles:
+        # average-pool groups of ceil(P/n) pixels
+        pad = (-p) % n_angles
+        v = jnp.pad(patch, [(0, 0)] * (patch.ndim - 1) + [(0, pad)])
+        v = v.reshape(*patch.shape[:-1], n_angles, -1).mean(-1)
+    else:
+        reps = -(-n_angles // p)
+        v = jnp.tile(patch, [1] * (patch.ndim - 1) + [reps])[..., :n_angles]
+    return (v * jnp.pi).astype(jnp.float32)
+
+
+def amplitude_encoding(values: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """log_n encoding: (..., 2**m) values -> normalized m-qubit state (re, im)."""
+    dim = values.shape[-1]
+    if dim & (dim - 1):
+        raise ValueError(f"amplitude encoding needs a power-of-two length, got {dim}")
+    norm = jnp.linalg.norm(values, axis=-1, keepdims=True)
+    # Guard the all-zero patch: fall back to |0...0>.
+    safe = jnp.where(norm > 1e-8, values / jnp.maximum(norm, 1e-8),
+                     jnp.zeros_like(values).at[..., 0].set(1.0))
+    return safe.astype(jnp.float32), jnp.zeros_like(safe, dtype=jnp.float32)
+
+
+def angles_to_unit_interval(angles: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of the pixel->angle map (for round-trip tests)."""
+    return angles / jnp.pi

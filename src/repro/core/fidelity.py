@@ -1,0 +1,44 @@
+"""SWAP-test fidelity readout + fidelity-based loss (Quantum Measurement +
+Quantum State Analyst modules of the paper's architecture, Fig 1).
+
+After the SWAP test, P(ancilla = 0) = (1 + F) / 2 where
+F = |<data|trainable>|^2, so F = 2 P0 - 1.  The paper's Quantum Measurement
+module "calculates the fidelity from one ancilla qubit which is used to
+calculate model loss".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sim
+from repro.core.sim import CircuitSpec
+
+_EPS = 1e-7
+
+
+def ancilla_p0(spec: CircuitSpec, theta, data) -> jnp.ndarray:
+    state = sim.run_circuit(spec, theta, data)
+    return sim.marginal_p0(state, qubit=0, n_qubits=spec.n_qubits)
+
+
+def fidelity(spec: CircuitSpec, theta, data) -> jnp.ndarray:
+    """F = |<phi(data)|psi(theta)>|^2 in [0, 1] via the SWAP test."""
+    return jnp.clip(2.0 * ancilla_p0(spec, theta, data) - 1.0, 0.0, 1.0)
+
+
+def fidelity_batch(spec: CircuitSpec, theta, data) -> jnp.ndarray:
+    """vmap over leading batch axes of both theta and data: (B,P),(B,D)->(B,)."""
+    return jax.vmap(lambda t, d: fidelity(spec, t, d))(theta, data)
+
+
+def bce_loss(fid: jnp.ndarray, label: jnp.ndarray) -> jnp.ndarray:
+    """Binary cross-entropy with fidelity as p(class=1) (QuClassi's loss)."""
+    f = jnp.clip(fid, _EPS, 1.0 - _EPS)
+    return -(label * jnp.log(f) + (1.0 - label) * jnp.log(1.0 - f))
+
+
+def bce_grad_wrt_fidelity(fid: jnp.ndarray, label: jnp.ndarray) -> jnp.ndarray:
+    """dL/dF, evaluated classically by the Quantum State Analyst."""
+    f = jnp.clip(fid, _EPS, 1.0 - _EPS)
+    return (f - label) / (f * (1.0 - f))

@@ -1,0 +1,151 @@
+"""Quantum gate matrices in (real, imag) float32 pairs.
+
+TPU has no native complex arithmetic in the MXU/VPU datapath, so the whole
+statevector stack represents complex tensors as a pair of float arrays
+``(re, im)``.  Every gate constructor returns ``(U_re, U_im)`` with shape
+``(2**k, 2**k)`` for a k-qubit gate.  Parameterized constructors accept a
+scalar (or batched) angle and are fully traceable/differentiable.
+
+Gate set = what DQuLearn's QuClassi workload needs (paper §IV-A):
+  Single Qubit Unitary layer : RY, RZ          (+ RX for data encoding)
+  Dual Qubit Unitary layer   : RYY, RZZ
+  Entanglement Unitary layer : CRY, CRZ
+  SWAP-test measurement      : H, CSWAP
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Mat = tuple[jnp.ndarray, jnp.ndarray]  # (re, im)
+
+_SQRT2_INV = 0.7071067811865476
+
+
+def _c(re, im) -> Mat:
+    return jnp.asarray(re, jnp.float32), jnp.asarray(im, jnp.float32)
+
+
+# ---------------------------------------------------------------- constants
+def h() -> Mat:
+    m = jnp.array([[1.0, 1.0], [1.0, -1.0]], jnp.float32) * _SQRT2_INV
+    return m, jnp.zeros_like(m)
+
+
+def x() -> Mat:
+    m = jnp.array([[0.0, 1.0], [1.0, 0.0]], jnp.float32)
+    return m, jnp.zeros_like(m)
+
+
+def swap() -> Mat:
+    m = jnp.zeros((4, 4), jnp.float32).at[0, 0].set(1).at[1, 2].set(1).at[2, 1].set(1).at[3, 3].set(1)
+    return m, jnp.zeros_like(m)
+
+
+def cswap() -> Mat:
+    """Controlled-SWAP (Fredkin), control = first qubit of the 3."""
+    m = jnp.eye(8, dtype=jnp.float32)
+    # |1ab> -> |1ba>: swap basis indices 0b101 (5) and 0b110 (6).
+    m = m.at[5, 5].set(0).at[6, 6].set(0).at[5, 6].set(1).at[6, 5].set(1)
+    return m, jnp.zeros_like(m)
+
+
+# ------------------------------------------------------------ rotations (1q)
+def rx(theta) -> Mat:
+    c = jnp.cos(theta / 2).astype(jnp.float32)
+    s = jnp.sin(theta / 2).astype(jnp.float32)
+    z = jnp.zeros_like(c)
+    re = jnp.stack([jnp.stack([c, z]), jnp.stack([z, c])])
+    im = jnp.stack([jnp.stack([z, -s]), jnp.stack([-s, z])])
+    return re, im
+
+
+def ry(theta) -> Mat:
+    c = jnp.cos(theta / 2).astype(jnp.float32)
+    s = jnp.sin(theta / 2).astype(jnp.float32)
+    re = jnp.stack([jnp.stack([c, -s]), jnp.stack([s, c])])
+    return re, jnp.zeros_like(re)
+
+
+def rz(theta) -> Mat:
+    c = jnp.cos(theta / 2).astype(jnp.float32)
+    s = jnp.sin(theta / 2).astype(jnp.float32)
+    z = jnp.zeros_like(c)
+    re = jnp.stack([jnp.stack([c, z]), jnp.stack([z, c])])
+    im = jnp.stack([jnp.stack([-s, z]), jnp.stack([z, s])])
+    return re, im
+
+
+# ------------------------------------------------------------ rotations (2q)
+def ryy(theta) -> Mat:
+    """exp(-i theta/2 Y⊗Y)."""
+    c = jnp.cos(theta / 2).astype(jnp.float32)
+    s = jnp.sin(theta / 2).astype(jnp.float32)
+    z = jnp.zeros_like(c)
+    re = jnp.stack([
+        jnp.stack([c, z, z, z]),
+        jnp.stack([z, c, z, z]),
+        jnp.stack([z, z, c, z]),
+        jnp.stack([z, z, z, c]),
+    ])
+    # Y⊗Y |00>=-|11>, |01>=|10> basis phases: exp(-i t/2 YY) has +i s on
+    # (00,11),(11,00) and -i s on (01,10),(10,01).
+    im = jnp.stack([
+        jnp.stack([z, z, z, s]),
+        jnp.stack([z, z, -s, z]),
+        jnp.stack([z, -s, z, z]),
+        jnp.stack([s, z, z, z]),
+    ])
+    return re, im
+
+
+def rzz(theta) -> Mat:
+    """exp(-i theta/2 Z⊗Z) = diag(e^-it/2, e^it/2, e^it/2, e^-it/2)."""
+    c = jnp.cos(theta / 2).astype(jnp.float32)
+    s = jnp.sin(theta / 2).astype(jnp.float32)
+    z = jnp.zeros_like(c)
+    re = jnp.stack([
+        jnp.stack([c, z, z, z]),
+        jnp.stack([z, c, z, z]),
+        jnp.stack([z, z, c, z]),
+        jnp.stack([z, z, z, c]),
+    ])
+    im = jnp.stack([
+        jnp.stack([-s, z, z, z]),
+        jnp.stack([z, s, z, z]),
+        jnp.stack([z, z, s, z]),
+        jnp.stack([z, z, z, -s]),
+    ])
+    return re, im
+
+
+def _controlled(u: Mat) -> Mat:
+    """diag(I2, U) for a 1q gate U -> 4x4, control = first qubit."""
+    u_re, u_im = u
+    re = jnp.eye(4, dtype=jnp.float32)
+    re = re.at[2:, 2:].set(u_re)
+    im = jnp.zeros((4, 4), jnp.float32).at[2:, 2:].set(u_im)
+    return re, im
+
+
+def cry(theta) -> Mat:
+    return _controlled(ry(theta))
+
+
+def crz(theta) -> Mat:
+    return _controlled(rz(theta))
+
+
+#: name -> (constructor, n_qubits, takes_angle)
+GATES = {
+    "h": (h, 1, False),
+    "x": (x, 1, False),
+    "swap": (swap, 2, False),
+    "cswap": (cswap, 3, False),
+    "rx": (rx, 1, True),
+    "ry": (ry, 1, True),
+    "rz": (rz, 1, True),
+    "ryy": (ryy, 2, True),
+    "rzz": (rzz, 2, True),
+    "cry": (cry, 2, True),
+    "crz": (crz, 2, True),
+}

@@ -1,0 +1,68 @@
+"""Task Segmentation module (paper §III-A, Fig 2).
+
+Decomposes a large classical input (an image) into filter-sized sections that
+are small enough to encode on low-qubit quantum workers.  The paper's
+evaluation settings: stride s=2, filter width w=4, nF=4 filters — "These
+settings allowed for images small enough that they could be processed by the
+lower qubit count computers."
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentationConfig:
+    filter_width: int = 4   # w in Algorithm 1
+    stride: int = 2         # s in Algorithm 1
+    n_filters: int = 4      # nF in Algorithm 1
+
+
+def n_patches(height: int, width: int, cfg: SegmentationConfig) -> tuple[int, int]:
+    """Patch grid dims after implicit zero-padding to cover the full image."""
+    def count(sz):
+        return max(1, -(-(sz - cfg.filter_width) // cfg.stride) + 1)
+    return count(height), count(width)
+
+
+def segment(images: jnp.ndarray, cfg: SegmentationConfig) -> jnp.ndarray:
+    """(B, H, W) images -> (B, n_patches, w*w) flattened sections.
+
+    Sections are extracted in row-major order with stride ``cfg.stride`` and
+    zero padding on the bottom/right edges ("there might be padding between
+    the sections", paper Fig 2).  Static shapes only — jit-safe.
+    """
+    b, h, w = images.shape
+    ph, pw = n_patches(h, w, cfg)
+    need_h = (ph - 1) * cfg.stride + cfg.filter_width
+    need_w = (pw - 1) * cfg.stride + cfg.filter_width
+    x = jnp.pad(images, ((0, 0), (0, need_h - h), (0, need_w - w)))
+
+    rows = []
+    for i in range(ph):
+        for j in range(pw):
+            r, c = i * cfg.stride, j * cfg.stride
+            rows.append(x[:, r:r + cfg.filter_width, c:c + cfg.filter_width]
+                        .reshape(b, -1))
+    return jnp.stack(rows, axis=1)  # (B, ph*pw, w*w)
+
+
+def reassemble_coverage(height: int, width: int, cfg: SegmentationConfig) -> np.ndarray:
+    """How many patches cover each source pixel (property-test helper)."""
+    ph, pw = n_patches(height, width, cfg)
+    need_h = (ph - 1) * cfg.stride + cfg.filter_width
+    need_w = (pw - 1) * cfg.stride + cfg.filter_width
+    cov = np.zeros((need_h, need_w), np.int32)
+    for i in range(ph):
+        for j in range(pw):
+            r, c = i * cfg.stride, j * cfg.stride
+            cov[r:r + cfg.filter_width, c:c + cfg.filter_width] += 1
+    return cov[:height, :width]
+
+
+def subtasks_per_image(height: int, width: int, cfg: SegmentationConfig) -> int:
+    ph, pw = n_patches(height, width, cfg)
+    return ph * pw * cfg.n_filters

@@ -1,0 +1,45 @@
+"""Batching / sharding data pipeline (the "Data Cleaning" -> model feed path
+of Fig 1, plus the classical-LM token pipeline for the architecture zoo).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def clean(images: np.ndarray, clip_percentile: float = 99.5) -> np.ndarray:
+    """Initial data cleaning (Fig 1): clamp extreme outliers, rescale to [0,1]."""
+    hi = np.percentile(images, clip_percentile)
+    x = np.clip(images, 0.0, hi) / max(hi, 1e-8)
+    return x.astype(np.float32)
+
+
+def batches(images: np.ndarray, labels: np.ndarray, batch_size: int,
+            *, seed: int = 0, drop_remainder: bool = True,
+            shuffle: bool = True) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Deterministic shuffled mini-batches."""
+    n = len(labels)
+    order = np.random.default_rng(seed).permutation(n) if shuffle else np.arange(n)
+    end = n - (n % batch_size) if drop_remainder else n
+    for i in range(0, end, batch_size):
+        idx = order[i:i + batch_size]
+        yield images[idx], labels[idx]
+
+
+def synthetic_tokens(rng_seed: int, batch: int, seq_len: int, vocab: int):
+    """Deterministic token batch for LM smoke tests / benchmarks."""
+    rng = np.random.default_rng(rng_seed)
+    toks = rng.integers(0, vocab, size=(batch, seq_len), dtype=np.int32)
+    return jnp.asarray(toks)
+
+
+def shard_batch(batch_arrays, mesh, axis: str = "data"):
+    """Place host arrays onto the mesh, sharded along the batch axis."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    def put(x):
+        spec = P(axis) if x.ndim == 1 else P(axis, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, batch_arrays)

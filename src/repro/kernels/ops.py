@@ -1,0 +1,37 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to auto: real Mosaic lowering on TPU, interpret mode
+on CPU (this container).  The wrappers are the executor used by the
+co-Manager data plane and by ``shift_rule`` when kernel execution is on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sim import CircuitSpec
+from repro.kernels import vqc_statevector as K
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def vqc_p0(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
+           tb: int = 4 * K.LANES) -> jnp.ndarray:
+    return K.vqc_p0(spec, theta, data, tb=tb)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def vqc_fidelity(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """Fused SWAP-test fidelity for a circuit bank: (C,P),(C,D) -> (C,)."""
+    return jnp.clip(2.0 * K.vqc_p0(spec, theta, data) - 1.0, 0.0, 1.0)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def vqc_state(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray):
+    return K.vqc_state(spec, theta, data)
+
+
+def kernel_executor(spec: CircuitSpec):
+    """shift_rule.Executor backed by the fused Pallas kernel."""
+    return lambda theta_bank, data_bank: vqc_fidelity(spec, theta_bank, data_bank)

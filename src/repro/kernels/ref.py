@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (no Pallas imports here).
+
+Deliberately written independently of the kernel code paths: the oracle uses
+the dense-matrix simulator from ``repro.core.sim`` (general k-qubit gate
+contraction) while the kernel uses structured row-combination micro-ops, so
+an agreement test covers both formulations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sim
+from repro.core.sim import CircuitSpec
+
+
+def vqc_state_ref(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray):
+    """(C,P),(C,D) -> final state (re, im), each (C, 2**n)."""
+    def one(t, d):
+        return sim.run_circuit(spec, t, d)
+    re, im = jax.vmap(one)(theta, data)
+    return re, im
+
+
+def vqc_p0_ref(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """(C,P),(C,D) -> ancilla P(|0>) per circuit, (C,)."""
+    re, im = vqc_state_ref(spec, theta, data)
+    return sim.marginal_p0((re, im), qubit=0, n_qubits=spec.n_qubits)
+
+
+def vqc_fidelity_ref(spec: CircuitSpec, theta, data) -> jnp.ndarray:
+    return jnp.clip(2.0 * vqc_p0_ref(spec, theta, data) - 1.0, 0.0, 1.0)

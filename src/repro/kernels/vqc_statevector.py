@@ -1,0 +1,254 @@
+"""Fused VQC statevector Pallas kernel — the DQuLearn compute hot-spot.
+
+The paper's data plane executes millions of *small* circuits (5–7 qubits,
+10–20 gates): the circuit bank of parameter-shifted subtasks.  On a GPU/RPC
+system each circuit is one round-trip; a mechanical port would launch one
+XLA op per gate per circuit.  The TPU-native adaptation is to FUSE the whole
+circuit — encoding rotations, variational layers, SWAP test, ancilla readout
+— into ONE kernel over a VMEM-resident batch of statevectors:
+
+  * layout: statevectors live as (2**n, TB) tiles — basis index on the
+    sublane axis, circuit batch on the 128-wide lane axis.  Gate application
+    is a 2x2 (or structured 4x4/8x8) linear combination of ROWS, vectorized
+    across lanes; per-circuit angles become per-lane cos/sin vectors.
+  * complex numbers are (re, im) float32 pairs (TPU has no complex MXU path).
+  * the gate sequence is static Python (unrolled at trace time); angles are
+    read from VMEM blocks of the banked parameters.
+  * HBM traffic: read (P + D) * TB angle floats, write TB results.  The
+    statevector NEVER touches HBM — it is created, evolved and measured in
+    VMEM/VREGs.  Per-gate dispatch would move 2 * 4 * 2**n * TB bytes per
+    gate; fusion removes all of it (see benchmarks/kernel_bench.py).
+
+VMEM budget: state tile is 2 * 4 * 2**n * TB bytes — for the paper's 7-qubit
+circuits and TB=512 that is 512 KB, far under the ~16 MB/core VMEM of a
+TPU v5e.  Qubit counts up to ~12 fit comfortably (2 * 4 * 4096 * 128 = 4 MB
+at TB=128); beyond that, shrink TB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sim import CircuitSpec
+
+LANES = 128  # TPU lane width; batch tiles are multiples of this.
+
+
+# ----------------------------------------------------------- gate micro-ops
+# Each helper operates on (re, im) arrays of shape (2**n, TB) and per-lane
+# angle vectors of shape (TB,).  Qubit q is the q-th MOST significant bit of
+# the basis (row) index, matching repro.core.sim.
+
+def _split1(x: jnp.ndarray, q: int, n: int):
+    """-> (x0, x1) halves along qubit q's bit; each (2**q, 2**(n-q-1), TB)."""
+    tb = x.shape[-1]
+    t = x.reshape(2 ** q, 2, 2 ** (n - q - 1), tb)
+    return t[:, 0], t[:, 1]
+
+
+def _merge1(x0, x1, q: int, n: int, tb: int):
+    t = jnp.stack([x0, x1], axis=1)
+    return t.reshape(2 ** n, tb)
+
+
+def _rot1(re, im, q, n, c, s, kind):
+    """Apply RX/RY/RZ with per-lane cos/sin (c, s) on qubit q."""
+    tb = re.shape[-1]
+    r0, r1 = _split1(re, q, n)
+    i0, i1 = _split1(im, q, n)
+    if kind == "ry":                      # [[c,-s],[s,c]] real
+        nr0, ni0 = c * r0 - s * r1, c * i0 - s * i1
+        nr1, ni1 = s * r0 + c * r1, s * i0 + c * i1
+    elif kind == "rx":                    # [[c,-is],[-is,c]]
+        nr0, ni0 = c * r0 + s * i1, c * i0 - s * r1
+        nr1, ni1 = c * r1 + s * i0, c * i1 - s * r0
+    elif kind == "rz":                    # diag(e^{-it/2}, e^{it/2})
+        nr0, ni0 = c * r0 + s * i0, c * i0 - s * r0
+        nr1, ni1 = c * r1 - s * i1, c * i1 + s * r1
+    else:
+        raise ValueError(kind)
+    return (_merge1(nr0, nr1, q, n, tb), _merge1(ni0, ni1, q, n, tb))
+
+
+def _split2(x, qa, qb, n):
+    """-> 2x2 blocks b[ba][bb] over qubits qa < qb; each block
+    (2**qa, 2**(qb-qa-1), 2**(n-qb-1), TB)."""
+    tb = x.shape[-1]
+    t = x.reshape(2 ** qa, 2, 2 ** (qb - qa - 1), 2, 2 ** (n - qb - 1), tb)
+    return ((t[:, 0, :, 0], t[:, 0, :, 1]), (t[:, 1, :, 0], t[:, 1, :, 1]))
+
+
+def _merge2(b, qa, qb, n, tb):
+    t = jnp.stack([jnp.stack([b[0][0], b[0][1]], axis=2),
+                   jnp.stack([b[1][0], b[1][1]], axis=2)], axis=1)
+    return t.reshape(2 ** n, tb)
+
+
+def _rot2(re, im, qa, qb, n, c, s, kind):
+    """RYY / RZZ / CRY / CRZ with per-lane (c, s); qa < qb required."""
+    tb = re.shape[-1]
+    R = _split2(re, qa, qb, n)
+    I = _split2(im, qa, qb, n)
+    r00, r01, r10, r11 = R[0][0], R[0][1], R[1][0], R[1][1]
+    i00, i01, i10, i11 = I[0][0], I[0][1], I[1][0], I[1][1]
+    if kind == "rzz":    # diag phases: e^{-it/2} on |00>,|11>; e^{+it/2} on |01>,|10>
+        nr00, ni00 = c * r00 + s * i00, c * i00 - s * r00
+        nr11, ni11 = c * r11 + s * i11, c * i11 - s * r11
+        nr01, ni01 = c * r01 - s * i01, c * i01 + s * r01
+        nr10, ni10 = c * r10 - s * i10, c * i10 + s * r10
+    elif kind == "ryy":  # couples (00,11) with +i s, (01,10) with -i s
+        nr00, ni00 = c * r00 - s * i11, c * i00 + s * r11
+        nr11, ni11 = c * r11 - s * i00, c * i11 + s * r00
+        nr01, ni01 = c * r01 + s * i10, c * i01 - s * r10
+        nr10, ni10 = c * r10 + s * i01, c * i10 - s * r01
+    elif kind == "cry":  # RY on qb within qa=1 block
+        nr00, ni00, nr01, ni01 = r00, i00, r01, i01
+        nr10, ni10 = c * r10 - s * r11, c * i10 - s * i11
+        nr11, ni11 = s * r10 + c * r11, s * i10 + c * i11
+    elif kind == "crz":  # RZ on qb within qa=1 block
+        nr00, ni00, nr01, ni01 = r00, i00, r01, i01
+        nr10, ni10 = c * r10 + s * i10, c * i10 - s * r10
+        nr11, ni11 = c * r11 - s * i11, c * i11 + s * r11
+    else:
+        raise ValueError(kind)
+    return (_merge2(((nr00, nr01), (nr10, nr11)), qa, qb, n, tb),
+            _merge2(((ni00, ni01), (ni10, ni11)), qa, qb, n, tb))
+
+
+def _h(re, im, q, n):
+    tb = re.shape[-1]
+    inv = 0.7071067811865476
+    r0, r1 = _split1(re, q, n)
+    i0, i1 = _split1(im, q, n)
+    return (_merge1((r0 + r1) * inv, (r0 - r1) * inv, q, n, tb),
+            _merge1((i0 + i1) * inv, (i0 - i1) * inv, q, n, tb))
+
+
+def _split3(x, qa, qb, qc_, n):
+    tb = x.shape[-1]
+    t = x.reshape(2 ** qa, 2, 2 ** (qb - qa - 1), 2, 2 ** (qc_ - qb - 1), 2,
+                  2 ** (n - qc_ - 1), tb)
+    return t
+
+
+def _cswap(re, im, qa, qb, qc_, n):
+    """Fredkin: control qa, swap qb<->qc_ (qa < qb < qc_)."""
+    tb = re.shape[-1]
+    outs = []
+    for x in (re, im):
+        t = _split3(x, qa, qb, qc_, n)
+        # within control=1 block, swap the (qb, qc_) bit pair (0,1)<->(1,0)
+        a01 = t[:, 1, :, 0, :, 1]
+        a10 = t[:, 1, :, 1, :, 0]
+        t = t.at[:, 1, :, 0, :, 1].set(a10).at[:, 1, :, 1, :, 0].set(a01)
+        outs.append(t.reshape(2 ** n, tb))
+    return outs[0], outs[1]
+
+
+def _apply_ops(spec: CircuitSpec, re, im, theta_blk, data_blk):
+    """Unrolled gate sequence on a (dim, TB) tile. theta_blk: (P, TB)."""
+    n = spec.n_qubits
+    for op in spec.ops:
+        if op.gate == "h":
+            re, im = _h(re, im, op.qubits[0], n)
+            continue
+        if op.gate == "cswap":
+            qa, qb, qc_ = op.qubits
+            re, im = _cswap(re, im, qa, qb, qc_, n)
+            continue
+        kind, j = op.param
+        ang = theta_blk[j] if kind == "theta" else data_blk[j]  # (TB,)
+        c, s = jnp.cos(ang / 2), jnp.sin(ang / 2)
+        if op.gate in ("rx", "ry", "rz"):
+            re, im = _rot1(re, im, op.qubits[0], n, c, s, op.gate)
+        elif op.gate in ("ryy", "rzz", "cry", "crz"):
+            qa, qb = op.qubits
+            if qa > qb:
+                raise NotImplementedError("kernel assumes ascending qubit pairs")
+            re, im = _rot2(re, im, qa, qb, n, c, s, op.gate)
+        else:
+            raise NotImplementedError(op.gate)
+    return re, im
+
+
+# ------------------------------------------------------------------ kernels
+def _fidelity_kernel(spec: CircuitSpec, theta_ref, data_ref, p0_ref):
+    tb = theta_ref.shape[-1]
+    dim = 2 ** spec.n_qubits
+    # |0...0> batch, built in VREGs — never read from HBM.
+    row = jax.lax.broadcasted_iota(jnp.int32, (dim, tb), 0)
+    re = jnp.where(row == 0, 1.0, 0.0).astype(jnp.float32)
+    im = jnp.zeros((dim, tb), jnp.float32)
+    re, im = _apply_ops(spec, re, im, theta_ref[...], data_ref[...])
+    prob = re * re + im * im
+    half = jax.lax.broadcasted_iota(jnp.int32, (dim, tb), 0) < (dim // 2)
+    p0 = jnp.where(half, prob, 0.0).sum(axis=0, keepdims=True)  # ancilla = MSB
+    p0_ref[...] = p0
+
+
+def _state_kernel(spec: CircuitSpec, theta_ref, data_ref, re_ref, im_ref):
+    tb = theta_ref.shape[-1]
+    dim = 2 ** spec.n_qubits
+    row = jax.lax.broadcasted_iota(jnp.int32, (dim, tb), 0)
+    re = jnp.where(row == 0, 1.0, 0.0).astype(jnp.float32)
+    im = jnp.zeros((dim, tb), jnp.float32)
+    re, im = _apply_ops(spec, re, im, theta_ref[...], data_ref[...])
+    re_ref[...] = re
+    im_ref[...] = im
+
+
+def _grid_call(spec: CircuitSpec, theta_t, data_t, tb: int, interpret: bool,
+               want_state: bool):
+    """theta_t: (P, C), data_t: (D, C) with C % tb == 0."""
+    p, c = theta_t.shape
+    d = data_t.shape[0]
+    dim = 2 ** spec.n_qubits
+    grid = (c // tb,)
+    in_specs = [
+        pl.BlockSpec((p, tb), lambda i: (0, i)),
+        pl.BlockSpec((d, tb), lambda i: (0, i)),
+    ]
+    if want_state:
+        out_shape = [jax.ShapeDtypeStruct((dim, c), jnp.float32)] * 2
+        out_specs = [pl.BlockSpec((dim, tb), lambda i: (0, i))] * 2
+        kern = functools.partial(_state_kernel, spec)
+    else:
+        out_shape = jax.ShapeDtypeStruct((1, c), jnp.float32)
+        out_specs = pl.BlockSpec((1, tb), lambda i: (0, i))
+        kern = functools.partial(_fidelity_kernel, spec)
+    return pl.pallas_call(
+        kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(theta_t, data_t)
+
+
+def vqc_p0(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
+           tb: int = 4 * LANES, interpret: bool | None = None) -> jnp.ndarray:
+    """Batched ancilla-P0 for a circuit bank. theta: (C,P), data: (C,D) -> (C,)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c = theta.shape[0]
+    tb = min(tb, max(LANES, 1 << (c - 1).bit_length()))
+    pad = (-c) % tb
+    theta_t = jnp.pad(theta, ((0, pad), (0, 0))).T
+    data_t = jnp.pad(data, ((0, pad), (0, 0))).T
+    p0 = _grid_call(spec, theta_t, data_t, tb, interpret, want_state=False)
+    return p0[0, :c]
+
+
+def vqc_state(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
+              tb: int = LANES, interpret: bool | None = None):
+    """Batched final statevector (re, im), each (C, 2**n) — for kernel tests."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c = theta.shape[0]
+    tb = min(tb, max(LANES, 1 << (c - 1).bit_length()))
+    pad = (-c) % tb
+    theta_t = jnp.pad(theta, ((0, pad), (0, 0))).T
+    data_t = jnp.pad(data, ((0, pad), (0, 0))).T
+    re, im = _grid_call(spec, theta_t, data_t, tb, interpret, want_state=True)
+    return re[:, :c].T, im[:, :c].T

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before any jax import: the dry-run (and ONLY
+#   the dry-run) builds the production meshes out of 512 host placeholders.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination with ShapeDtypeStruct inputs (no allocation), record
+memory_analysis / cost_analysis / collective bytes for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfg_base
+from repro.launch import partition, steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.models.sharding import axis_binding
+from repro.roofline import analysis as roofline
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+# --------------------------------------------------------------- input specs
+def cfg_for_shape(cfg, shape: cfg_base.InputShape):
+    """Shape-conditioned config tweaks (documented in DESIGN.md §4):
+
+    * long_500k on pure-attention archs -> sliding-window (8192) variant —
+      the sub-quadratic requirement; SSM/hybrid run native; MLA keeps its
+      full compressed-latent cache (linear memory).
+    * decode shapes on MoE archs keep standard capacity routing.
+    """
+    if shape.name == "long_500k":
+        has_ssm = any(k != "attn" for k in cfg.pattern)
+        if cfg.mla is None and not (has_ssm and "attn" not in cfg.pattern):
+            if cfg.sliding_window == 0:
+                cfg = cfg.with_(sliding_window=8192)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg, batch: int, seq_len: int) -> dict:
+    if cfg.n_codebooks:
+        return {"codes": _sds((batch, seq_len, cfg.n_codebooks), jnp.int32)}
+    if cfg.n_prefix_embeds:
+        return {"image_embeds": _sds((batch, cfg.n_prefix_embeds,
+                                      cfg.prefix_embed_dim), jnp.float32),
+                "tokens": _sds((batch, seq_len - cfg.n_prefix_embeds), jnp.int32)}
+    return {"tokens": _sds((batch, seq_len), jnp.int32)}
+
+
+def decode_specs(cfg, batch: int) -> dict:
+    if cfg.n_codebooks:
+        return {"codes": _sds((batch, 1, cfg.n_codebooks), jnp.int32)}
+    return {"tokens": _sds((batch, 1), jnp.int32)}
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public entry: ShapeDtypeStruct stand-ins for every model input."""
+    cfg = cfg_for_shape(cfg_base.get(arch), cfg_base.INPUT_SHAPES[shape_name])
+    shape = cfg_base.INPUT_SHAPES[shape_name]
+    model = transformer.Model(cfg)
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    caches = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len))
+    return {"batch": decode_specs(cfg, shape.global_batch),
+            "caches": caches,
+            "pos": _sds((), jnp.int32)}
+
+
+# ------------------------------------------------------------------ lowering
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              overrides: dict | None = None):
+    shape = cfg_base.INPUT_SHAPES[shape_name]
+    cfg = cfg_for_shape(cfg_base.get(arch), shape)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    part = partition.Partitioner(mesh)
+    binding = partition.logical_binding(mesh)
+    model = transformer.Model(cfg)
+
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(model.init_params, key)
+    p_sh = part.param_shardings(params_shapes)
+
+    if shape.kind == "train":
+        train_step, optimizer, _ = steps.make_train_step(
+            cfg, global_batch=shape.global_batch)
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        o_sh = part.opt_shardings(opt_shapes, params_shapes)
+        b = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        b_sh = part.batch_shardings(b)
+        with axis_binding(**binding):
+            jitted = jax.jit(train_step,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, part.replicated()),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shapes, opt_shapes, b)
+    elif shape.kind == "prefill":
+        prefill_step, _ = steps.make_prefill_step(cfg)
+        b = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        b_sh = part.batch_shardings(b)
+        with axis_binding(**binding):
+            jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_shapes, b)
+    else:  # decode
+        serve_step, _ = steps.make_serve_step(cfg)
+        b = decode_specs(cfg, shape.global_batch)
+        caches = jax.eval_shape(
+            lambda: model.init_caches(shape.global_batch, shape.seq_len))
+        b_sh = part.batch_shardings(b)
+        c_sh = part.cache_shardings(caches)
+        with axis_binding(**binding):
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_sh, b_sh, c_sh, part.replicated()),
+                             out_shardings=(part.replicated(), c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_shapes, b, caches,
+                                   _sds((), jnp.int32))
+    return lowered, cfg, params_shapes, mesh
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+            overrides: dict | None = None, variant: str = ""):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (f"__{variant}" if variant else "")
+    t0 = time.time()
+    lowered, cfg, params_shapes, mesh = lower_one(arch, shape_name, multi_pod,
+                                                  overrides)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = roofline.collective_bytes(hlo)
+    # trip-count-aware static analysis: raw cost_analysis counts while bodies
+    # ONCE (scan-over-layers + microbatch scan => up to 3 orders of magnitude
+    # undercount); hlo_analyzer multiplies by known_trip_count.
+    from repro.roofline import hlo_analyzer
+    corrected = hlo_analyzer.analyze(hlo)
+
+    n_chips = mesh.devices.size
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # trip-count-corrected, per device (partitioned-module shapes)
+        "flops_per_device": corrected.flops,
+        "bytes_accessed_per_device": corrected.bytes,
+        "collective_bytes_per_device": corrected.coll_bytes,
+        "collectives": {k: int(v) for k, v in corrected.coll_by_kind.items()},
+        # raw XLA numbers (loop bodies counted once) for reference
+        "raw_cost_analysis": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "collective_bytes_body_once": coll["total"],
+        },
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "param_count": transformer.param_count(params_shapes),
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{tag}.json"), "w") as f:
+        json.dump(record, f, indent=1)
+    with gzip.open(os.path.join(RESULTS_DIR, f"{tag}.hlo.gz"), "wt") as f:
+        f.write(hlo)      # kept for §Perf iteration (collective inspection)
+    if verbose:
+        terms = roofline.roofline_terms(record)
+        print(f"[dryrun] {tag}: compile {t_compile:.0f}s  "
+              f"mem(temp) {record['memory']['temp_size_bytes']/1e9:.2f}GB  "
+              f"compute {terms['compute_s']*1e3:.2f}ms  "
+              f"memory {terms['memory_s']*1e3:.2f}ms  "
+              f"collective {terms['collective_s']*1e3:.2f}ms  "
+              f"-> {terms['dominant']}")
+    return record
+
+
+ALL_ARCHS = (
+    "nemotron-4-340b", "phi-3-vision-4.2b", "granite-34b", "smollm-360m",
+    "qwen3-4b", "granite-moe-3b-a800m", "musicgen-large", "xlstm-125m",
+    "jamba-v0.1-52b", "deepseek-v3-671b",
+)
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    combos = []
+    archs = ALL_ARCHS if (args.all or not args.arch) else (args.arch,)
+    shapes = ALL_SHAPES if (args.all or not args.shape) else (args.shape,)
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.multi_pod and not args.all:
+        meshes = [True]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    failures = []
+    for a, s, m in combos:
+        mesh_name = "2x16x16" if m else "16x16"
+        out = os.path.join(RESULTS_DIR, f"{a}__{s}__{mesh_name}.json")
+        if args.skip_existing and os.path.exists(out):
+            print(f"[dryrun] skip existing {a}__{s}__{mesh_name}")
+            continue
+        try:
+            run_one(a, s, m)
+        except Exception as e:  # noqa
+            failures.append((a, s, mesh_name, repr(e)))
+            print(f"[dryrun] FAIL {a}__{s}__{mesh_name}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(combos)} dry-run combos compiled OK")
+
+
+if __name__ == "__main__":
+    main()

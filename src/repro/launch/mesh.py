@@ -1,0 +1,34 @@
+"""Production mesh definitions (TPU v5e pods; host-device placeholders in
+the dry-run).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before any jax import, everything else
+sees the real (single-CPU) topology.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_axis_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the real local device (CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

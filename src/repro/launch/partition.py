@@ -1,0 +1,170 @@
+"""Sharding rules: param/optimizer/batch/cache pytrees -> NamedShardings.
+
+Baseline policy (§Perf iterates on this):
+  * batch axis of inputs/activations -> ("pod", "data")      [data parallel]
+  * weight matrices -> 2-D sharded: last dim over "model" (tensor parallel),
+    second-to-last over "data" (FSDP-style) when divisible — this is what
+    lets 340B/671B parameter + optimizer state fit 16 GB/chip.
+  * MoE expert banks (L, E, in, out): E over "model" (expert parallel),
+    `in` over "data".
+  * small vectors (norms, biases) replicated.
+  * decode caches: batch over ("pod","data") when divisible, else the cache
+    LENGTH axis over "data" (context parallelism for long_500k's batch=1).
+
+Divisibility is checked against the actual mesh; anything non-divisible is
+left unsharded on that axis (correct, just less parallel).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+
+def _divides(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+class Partitioner:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.model_n = mesh.shape.get("model", 1)
+        self.data_n = mesh.shape.get("data", 1)
+        self.batch_ax = batch_axes(mesh)
+        self.batch_n = int(np.prod([mesh.shape[a] for a in self.batch_ax]))
+
+    # ------------------------------------------------------------ weights
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        dims: list = [None] * len(shape)
+        if len(shape) == 0:
+            return P()
+        is_block = path.startswith("blocks/")
+        lead = 1 if is_block else 0          # blocks carry the period axis
+
+        if "experts/" in path and len(shape) - lead == 3:
+            e_i, in_i, out_i = lead, lead + 1, lead + 2
+            if _divides(shape[e_i], self.model_n):
+                dims[e_i] = "model"
+            if _divides(shape[in_i], self.data_n):
+                dims[in_i] = "data"
+            return P(*dims)
+
+        if path == "embed" or path.startswith("embed"):
+            # (V, D) or (K, V, D): vocab-parallel
+            v_i = len(shape) - 2
+            if _divides(shape[v_i], self.model_n):
+                dims[v_i] = "model"
+            if _divides(shape[-1], self.data_n):
+                dims[-1] = "data"
+            return P(*dims)
+
+        mat_dims = len(shape) - lead
+        if mat_dims >= 2:
+            if _divides(shape[-1], self.model_n):
+                dims[-1] = "model"
+            if _divides(shape[-2], self.data_n):
+                dims[-2] = "data"
+            return P(*dims)
+        # 1-D vectors (norm scales, biases): replicate
+        return P(*dims)
+
+    def param_shardings(self, params_shapes) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+        out = []
+        for path_keys, leaf in flat:
+            path = "/".join(_k(k) for k in path_keys)
+            out.append(NamedSharding(self.mesh, self.param_spec(path, leaf.shape)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def opt_shardings(self, opt_shapes, params_shapes):
+        """Optimizer moments mirror the param specs; scalars replicate."""
+        p_flat = {"/".join(_k(k) for k in p): l for p, l in
+                  jax.tree_util.tree_flatten_with_path(params_shapes)[0]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shapes)
+        out = []
+        for path_keys, leaf in flat:
+            path = "/".join(_k(k) for k in path_keys)
+            # strip the leading m/ v/ to find the mirrored param
+            sub = path.split("/", 1)[1] if "/" in path else ""
+            if sub in p_flat and p_flat[sub].shape == leaf.shape:
+                out.append(NamedSharding(self.mesh, self.param_spec(sub, leaf.shape)))
+            else:
+                out.append(NamedSharding(self.mesh, P()))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------- inputs
+    def batch_spec(self, shape: tuple[int, ...]) -> P:
+        dims: list = [None] * len(shape)
+        if len(shape) and _divides(shape[0], self.batch_n):
+            dims[0] = self.batch_ax if len(self.batch_ax) > 1 else self.batch_ax[0]
+        return P(*dims)
+
+    def batch_shardings(self, batch_shapes):
+        return jax.tree.map(
+            lambda l: NamedSharding(self.mesh, self.batch_spec(l.shape)),
+            batch_shapes)
+
+    def cache_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """Cache leaves carry (period, B, ...) leading axes.
+
+        Batch axis shards over ("pod","data") when divisible; the cache
+        LENGTH/state axis (index 2: T for attention, d_inner for Mamba,
+        d_model for sLSTM) additionally shards over "model" — sequence/
+        context parallelism for decode, which keeps a 128x32k KV cache
+        within HBM and turns full-cache reads into 1/16th reads + small
+        softmax all-reduces.  With batch=1 (long_500k) the length axis
+        takes every available mesh axis instead.
+        """
+        dims: list = [None] * len(shape)
+        batch_dim = self.batch_ax if len(self.batch_ax) > 1 else self.batch_ax[0]
+        if len(shape) >= 2 and _divides(shape[1], self.batch_n):
+            dims[1] = batch_dim
+            if len(shape) >= 3 and _divides(shape[2], self.model_n):
+                dims[2] = "model"
+            elif len(shape) >= 4 and _divides(shape[3], self.model_n):
+                dims[3] = "model"
+            return P(*dims)
+        # batch not shardable: context-parallel over everything available
+        all_axes = tuple(self.batch_ax) + ("model",)
+        total = self.batch_n * self.model_n
+        if len(shape) >= 3:
+            if _divides(shape[2], total):
+                dims[2] = all_axes
+            elif _divides(shape[2], self.data_n):
+                dims[2] = "data"
+                if len(shape) >= 4 and _divides(shape[3], self.model_n):
+                    dims[3] = "model"
+        return P(*dims)
+
+    def cache_shardings(self, cache_shapes):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+        out = []
+        for path_keys, leaf in flat:
+            path = "/".join(_k(k) for k in path_keys)
+            out.append(NamedSharding(self.mesh, self.cache_spec(path, leaf.shape)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def replicated(self):
+        return NamedSharding(self.mesh, P())
+
+
+def _k(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def logical_binding(mesh: Mesh) -> dict:
+    """Logical-axis binding for models.sharding.axis_binding."""
+    return {
+        "__mesh__": mesh,
+        "batch": batch_axes(mesh),
+        "model": ("model",),
+        "model_act": None,     # activations: keep d_model unsharded (baseline)
+    }

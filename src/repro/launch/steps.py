@@ -1,0 +1,88 @@
+"""train_step / serve_step factories — the compiled units of the framework.
+
+``make_train_step``: microbatched gradient accumulation (scan over
+interleaved row-slices so every microbatch stays spread across the data
+axis), f32 accumulators, grad clipping, optimizer update.
+
+``make_serve_step``: one-token decode against a threaded KV/state cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.optim import optimizers as opt_mod
+
+
+def make_loss_fn(model: transformer.Model) -> Callable:
+    return lambda params, batch: model.loss(params, batch)
+
+
+def _micro_split(batch: dict, n_micro: int) -> dict:
+    """(B, ...) -> (n_micro, B/n_micro, ...) with INTERLEAVED rows, so each
+    microbatch keeps rows on every data shard."""
+    def f(a):
+        b = a.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return jnp.swapaxes(a.reshape((b // n_micro, n_micro) + a.shape[1:]), 0, 1)
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(cfg: ModelConfig, *, global_batch: int,
+                    clip_norm: float = 1.0):
+    model = transformer.Model(cfg)
+    optimizer = opt_mod.make(cfg.optimizer, cfg.learning_rate)
+    loss_fn = make_loss_fn(model)
+    n_micro = max(1, global_batch // max(cfg.microbatch, 1))
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = _micro_split(batch, n_micro)
+
+            def mb(acc, mbatch):
+                g_acc, l_acc = acc
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), 0
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(mb, (g0, jnp.zeros((), jnp.float32)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+        if clip_norm:
+            grads, gnorm = opt_mod.clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_mod.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step, optimizer, model
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, batch, caches, pos) -> (logits, new_caches).
+    ``batch`` holds the single new token; ``pos`` its absolute position."""
+    model = transformer.Model(cfg)
+
+    def serve_step(params, batch, caches, pos):
+        return model.decode_step(params, batch, caches, pos)
+
+    return serve_step, model
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = transformer.Model(cfg)
+
+    def prefill_step(params, batch):
+        logits, aux = model.prefill(params, batch)
+        return logits
+
+    return prefill_step, model

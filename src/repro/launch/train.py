@@ -1,0 +1,79 @@
+import os
+import sys
+if "--reduced" not in sys.argv and __name__ == "__main__":
+    # full-config path lowers against the 512-placeholder production mesh;
+    # must be set before jax initializes (reduced runs keep 1 real device).
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 50 --batch 8 --seq 64
+
+``--reduced`` runs REAL steps on the local device(s) with the smoke-scale
+config; without it, the full config is lowered + compiled against the
+production mesh (dry-run semantics — this container has no TPU pod).
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import base as cfg_base
+from repro.launch import steps
+from repro.models import multimodal, transformer
+
+
+def run_reduced(arch: str, steps_n: int, batch: int, seq: int,
+                ckpt: str | None = None, log_every: int = 10) -> float:
+    cfg = cfg_base.get(arch).reduced()
+    model = transformer.Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n = transformer.param_count(params)
+    print(f"[train] {arch} (reduced): {n/1e6:.1f}M params, "
+          f"batch {batch} x seq {seq}")
+
+    train_step, optimizer, _ = steps.make_train_step(cfg, global_batch=batch)
+    opt_state = optimizer.init(params)
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    losses, t0 = [], time.time()
+    for i in range(steps_n):
+        batch_data = multimodal.batch_for(cfg, batch, seq, seed=i)
+        params, opt_state, loss = step_fn(params, opt_state, batch_data)
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps_n - 1:
+            print(f"[train] step {i:4d}  loss {losses[-1]:.4f}")
+    dt = time.time() - t0
+    print(f"[train] {steps_n} steps in {dt:.1f}s "
+          f"({batch * seq * steps_n / dt:,.0f} tok/s); "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if ckpt:
+        from repro.checkpoint import checkpoint
+        checkpoint.save(ckpt, params, metadata={"arch": arch, "step": steps_n})
+        print(f"[train] checkpoint -> {ckpt}")
+    return losses[-1]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    if args.reduced:
+        run_reduced(args.arch, args.steps, args.batch, args.seq, args.ckpt)
+    else:
+        print("[train] full config -> lowering against the production mesh "
+              "(no TPU attached; dry-run)")
+        from repro.launch import dryrun
+        dryrun.run_one(args.arch, args.shape, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

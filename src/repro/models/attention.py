@@ -1,0 +1,302 @@
+"""Attention blocks: GQA/MQA (+qk_norm, sliding window) and DeepSeek MLA.
+
+Shapes: x (B, S, D).  KV caches are explicit pytrees so ``serve_step`` can
+thread them functionally.  All softmax/logit math is f32; projections run in
+the model dtype (bf16 on TPU).
+
+Cache layouts:
+  GQA  : {"k": (B, T, KV, hd), "v": (B, T, KV, hd), "pos": ()} — T is the
+         cache capacity (seq_len, or the sliding window for windowed archs,
+         maintained as a ring buffer).
+  MLA  : {"ckv": (B, T, kv_lora), "krope": (B, T, rope_dim), "pos": ()} —
+         the compressed latent is cached once, NOT per head (that is the
+         point of MLA: 576 floats/token instead of H*(nope+v)=32k).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import common
+from repro.models.common import apply_rope, causal_mask, rms_norm, softmax_f32
+
+
+# ----------------------------------------------------------------- params
+def init_gqa_params(key, cfg: ModelConfig, dtype):
+    hd = cfg.resolved_head_dim
+    ks = common.keygen(key)
+    p = {
+        "wq": common.init_dense(next(ks), cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": common.init_dense(next(ks), cfg.d_model, cfg.kv_heads * hd, dtype),
+        "wv": common.init_dense(next(ks), cfg.d_model, cfg.kv_heads * hd, dtype),
+        "wo": common.init_dense(next(ks), cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_mla_params(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    ks = common.keygen(key)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": common.init_dense(next(ks), cfg.d_model, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": common.init_dense(next(ks), m.q_lora_rank, cfg.n_heads * qk_head, dtype),
+        "wkv_a": common.init_dense(next(ks), cfg.d_model,
+                                   m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": common.init_dense(next(ks), m.kv_lora_rank,
+                                   cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim),
+                                   dtype),
+        "wo": common.init_dense(next(ks), cfg.n_heads * m.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+# ------------------------------------------------------------- GQA apply
+def _qk_normalize(q, k, params, cfg, eps):
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], eps)
+        k = rms_norm(k, params["k_norm"], eps)
+    return q, k
+
+
+def gqa_attention(params, x, cfg: ModelConfig, *, positions=None):
+    """Full (or sliding-window) causal self-attention over x (B, S, D)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.kv_heads
+    g = h // kv
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q, k = _qk_normalize(q, k, params, cfg, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bsigd,btid->bigst", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = scores + causal_mask(s, s, 0, cfg.sliding_window)[None, None, None]
+    probs = softmax_f32(scores).astype(x.dtype)
+    out = jnp.einsum("bigst,btid->bsigd", probs, v).reshape(b, s, h * hd)
+    return out @ params["wo"]
+
+
+def chunked_gqa_attention(params, x, cfg: ModelConfig, *, positions=None):
+    """Flash-style causal attention: scan over KV chunks with an online
+    softmax (running max / normalizer / accumulator), so the (B,H,S,S)
+    score tensor is never materialized — per-step live memory is one
+    (B, KV, G, Q, K) tile.  Numerically identical to gqa_attention.
+
+    Fully-masked (future) KV chunks still execute (static shapes) but
+    contribute zero; the causal skip is a compute win left to the Pallas
+    variant — here the target is the HBM term, which this kills.
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.kv_heads
+    g = h // kv
+    ck = min(cfg.attention_chunk, s)
+    assert s % ck == 0, (s, ck)
+    n_chunks = s // ck
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q, k = _qk_normalize(q, k, params, cfg, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    qg = q.reshape(b, n_chunks, ck, kv, g, hd) * (hd ** -0.5)
+    kc = k.reshape(b, n_chunks, ck, kv, hd)
+    vc = v.reshape(b, n_chunks, ck, kv, hd)
+
+    def q_block(qi, q_tile):
+        # q_tile: (b, ck, kv, g, hd); scan KV chunks with online softmax
+        def kv_step(carry, kj_tiles):
+            m_run, l_run, acc = carry
+            kj, k_tile, v_tile = kj_tiles
+            scores = jnp.einsum("bsigd,btid->bigst", q_tile,
+                                k_tile).astype(jnp.float32)
+            q_pos = qi * ck + jnp.arange(ck)[:, None]
+            k_pos = kj * ck + jnp.arange(ck)[None, :]
+            ok = k_pos <= q_pos
+            if cfg.sliding_window:
+                ok = ok & (k_pos > q_pos - cfg.sliding_window)
+            scores = jnp.where(ok[None, None, None], scores, -1e30)
+            m_new = jnp.maximum(m_run, scores.max(-1))          # (b,kv,g,ck)
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            pv = jnp.einsum("bigst,btid->bigsd", p.astype(x.dtype),
+                            v_tile).astype(jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), 0
+
+        m0 = jnp.full((b, kv, g, ck), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, ck), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, ck, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0),
+             jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1)                          # (b,ck,kv,g,hd)
+
+    if cfg.attention_impl == "chunked_seqpar":
+        # sequence parallelism: q-chunks spread over the (otherwise idle
+        # during attention) "model" axis; K/V stay whole per device — XLA
+        # all-gathers them once per layer.  Turns the per-device score-tile
+        # traffic into 1/model_parallelism of the total.
+        from repro.models.sharding import shard_hint
+        qg = shard_hint(qg, "batch", "model", None, None, None, None)
+        outs = jax.vmap(q_block, in_axes=(0, 1), out_axes=1)(
+            jnp.arange(n_chunks), qg)
+        outs = shard_hint(outs, "batch", "model", None, None, None, None)
+        out = outs.reshape(b, s, h * hd).astype(x.dtype)
+    else:
+        outs = jax.lax.map(lambda args: q_block(*args),
+                           (jnp.arange(n_chunks), jnp.moveaxis(qg, 1, 0)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h * hd).astype(x.dtype)
+    return out @ params["wo"]
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    hd = cfg.resolved_head_dim
+    t = min(capacity, cfg.sliding_window) if cfg.sliding_window else capacity
+    zeros = jnp.zeros((batch, t, cfg.kv_heads, hd), dtype)
+    return {"k": zeros, "v": zeros}
+
+
+def gqa_decode(params, x, cache, pos, cfg: ModelConfig):
+    """One decode step. x (B, 1, D); pos () int32 = absolute position of the
+    new token.  Returns (out (B,1,D), new_cache)."""
+    b, s, d = x.shape
+    assert s == 1
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.kv_heads
+    g = h // kv
+    t = cache["k"].shape[1]
+
+    q = (x @ params["wq"]).reshape(b, 1, h, hd)
+    k = (x @ params["wk"]).reshape(b, 1, kv, hd)
+    v = (x @ params["wv"]).reshape(b, 1, kv, hd)
+    q, k = _qk_normalize(q, k, params, cfg, cfg.norm_eps)
+    ppos = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, ppos, cfg.rope_theta)
+    k = apply_rope(k, ppos, cfg.rope_theta)
+
+    slot = (pos % t) if cfg.sliding_window else pos   # ring buffer when windowed
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bigd,btid->bigt", qg, ck).astype(jnp.float32) * (hd ** -0.5)
+    # valid slots: every filled position (serve_step decodes against a cache
+    # pre-filled with seq_len context, so pos >= t for windowed rings).
+    slot_idx = jnp.arange(t)
+    if cfg.sliding_window:
+        valid = (slot_idx <= pos) | jnp.full((t,), pos >= t)
+    else:
+        valid = slot_idx <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = softmax_f32(scores).astype(x.dtype)
+    out = jnp.einsum("bigt,btid->bigd", probs, cv).reshape(b, 1, h * hd)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------- MLA apply
+def _mla_dims(m: MLAConfig):
+    return m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+
+def mla_attention(params, x, cfg: ModelConfig, *, positions=None):
+    """Training/prefill MLA (naive decompressed form)."""
+    b, s, d = x.shape
+    m = cfg.mla
+    nope, rope_d, vd = _mla_dims(m)
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q_lat = rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = (q_lat @ params["wq_b"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]                        # (B,S,kv_lora+rope)
+    ckv = rms_norm(kv_a[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., None, m.kv_lora_rank:], positions, cfg.rope_theta)
+
+    kvb = (ckv @ params["wkv_b"]).reshape(b, s, h, nope + vd)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+
+    scale = (nope + rope_d) ** -0.5
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+              + jnp.einsum("bshd,btxd->bhst", q_rope,
+                           jnp.broadcast_to(k_rope, (b, s, 1, rope_d))))
+    scores = scores.astype(jnp.float32) * scale
+    scores = scores + causal_mask(s, s, 0)[None, None]
+    probs = softmax_f32(scores).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, s, h * vd)
+    return out @ params["wo"]
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype)}
+
+
+def mla_decode(params, x, cache, pos, cfg: ModelConfig):
+    """One decode step with the ABSORBED latent form: attention runs in the
+    kv_lora_rank space, so per-token cache is kv_lora+rope floats."""
+    b, s, d = x.shape
+    m = cfg.mla
+    nope, rope_d, vd = _mla_dims(m)
+    h = cfg.n_heads
+    t = cache["ckv"].shape[1]
+
+    q_lat = rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = (q_lat @ params["wq_b"]).reshape(b, 1, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ppos = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, ppos, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]
+    ckv_new = rms_norm(kv_a[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kv_a[..., None, m.kv_lora_rank:], ppos, cfg.rope_theta)[:, :, 0]
+
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"],
+                                       ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"],
+                                         kr_new.astype(cache["krope"].dtype), (0, pos, 0))
+
+    # absorb W^UK into the query: q_lat[b,h,r] = sum_d q_nope[b,h,d] * Wuk[r,h,d]
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, h, nope + vd)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)          # (B,H,R)
+
+    scale = (nope + rope_d) ** -0.5
+    scores = (jnp.einsum("bhr,btr->bht", q_abs, ckv)
+              + jnp.einsum("bhd,btd->bht", q_rope[:, 0], krope))
+    scores = scores.astype(jnp.float32) * scale
+    valid = jnp.arange(t) <= pos
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    probs = softmax_f32(scores).astype(x.dtype)
+    ctx = jnp.einsum("bht,btr->bhr", probs, ckv)                    # latent ctx
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(b, 1, h * vd)
+    return out @ params["wo"], {"ckv": ckv, "krope": krope}

@@ -1,0 +1,96 @@
+"""Block wiring: (mixer -> FFN/MoE) with pre-norm residuals, per layer kind.
+
+A model is ``n_periods`` repetitions of a static ``pattern`` of blocks
+(ModelConfig.pattern).  Uniform models have pattern=("attn",); Jamba's
+period is 8 blocks (1 attn + 7 mamba, MoE on every 2nd); xLSTM alternates
+mLSTM/sLSTM.  Scanning over periods keeps the lowered HLO one-period-sized.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, ffn as ffn_mod, moe as moe_mod, ssm
+from repro.models.common import rms_norm
+from repro.models.sharding import shard_hint
+
+
+def init_block_params(key, kind: str, use_moe: bool, cfg: ModelConfig, dtype):
+    ks = common.keygen(key)
+    p = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["mixer"] = (attention.init_mla_params(next(ks), cfg, dtype) if cfg.mla
+                      else attention.init_gqa_params(next(ks), cfg, dtype))
+    elif kind == "mamba":
+        p["mixer"] = ssm.init_mamba_params(next(ks), cfg, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm_params(next(ks), cfg, dtype)
+    elif kind == "slstm":
+        p["mixer"] = ssm.init_slstm_params(next(ks), cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff or use_moe:
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        if use_moe:
+            p["ffn"] = moe_mod.init_moe_params(next(ks), cfg, dtype)
+        else:
+            p["ffn"] = ffn_mod.init_ffn_params(next(ks), cfg.d_model, cfg.d_ff,
+                                               cfg.activation, dtype)
+    return p
+
+
+def apply_block(params, x, kind: str, use_moe: bool, cfg: ModelConfig, *,
+                cache=None, pos=None):
+    """-> (x, aux_loss, new_cache).  ``cache`` enables one-token decode."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    new_cache = None
+    if kind == "attn":
+        if cache is not None:
+            fn = attention.mla_decode if cfg.mla else attention.gqa_decode
+            out, new_cache = fn(params["mixer"], h, cache, pos, cfg)
+        else:
+            if cfg.mla:
+                fn = attention.mla_attention
+            elif cfg.attention_impl in ("chunked", "chunked_seqpar"):
+                fn = attention.chunked_gqa_attention
+            elif cfg.attention_impl == "flash":
+                from repro.kernels.flash_attention import gqa_flash_attention
+                fn = gqa_flash_attention
+            else:
+                fn = attention.gqa_attention
+            out = fn(params["mixer"], h, cfg)
+    elif kind == "mamba":
+        out, new_cache = ssm.mamba_mixer(params["mixer"], h, cfg, state=cache)
+    elif kind == "mlstm":
+        out, new_cache = ssm.mlstm_mixer(params["mixer"], h, cfg, state=cache)
+    elif kind == "slstm":
+        out, new_cache = ssm.slstm_mixer(params["mixer"], h, cfg, state=cache)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    x = shard_hint(x, "batch", None, "model_act")
+
+    if "ffn" in params:
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if use_moe:
+            y, aux = moe_mod.moe_ffn(params["ffn"], h2, cfg)
+        else:
+            y = ffn_mod.ffn(params["ffn"], h2, cfg.activation)
+        x = x + y
+        x = shard_hint(x, "batch", None, "model_act")
+    return x, aux, new_cache
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, capacity: int, dtype):
+    if kind == "attn":
+        if cfg.mla:
+            return attention.init_mla_cache(cfg, batch, capacity, dtype)
+        return attention.init_gqa_cache(cfg, batch, capacity, dtype)
+    if kind == "mamba":
+        return ssm.init_mamba_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return ssm.init_mlstm_state(cfg, batch, dtype)
+    if kind == "slstm":
+        return ssm.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(kind)

@@ -1,0 +1,80 @@
+"""Shared model substrate: norms, RoPE, initializers, embedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv).astype(dt) * scale.astype(dt)
+
+
+def init_dense(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * s).astype(dtype)
+
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def keygen(key):
+    """Infinite deterministic key splitter."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset, window: int = 0) -> jnp.ndarray:
+    """(q_len, kv_len) additive mask.  ``q_offset`` = absolute position of
+    query row 0 (traced OK).  ``window`` > 0 -> sliding-window causal."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    ok = k_pos <= q_pos
+    if window:
+        ok = ok & (k_pos > q_pos - window)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def softmax_f32(logits: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=axis)
+
+
+def activation_fn(name: str):
+    if name == "silu_gated" or name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                 # Nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE in f32. logits (..., V), labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()

@@ -1,0 +1,30 @@
+"""Feed-forward blocks: gated (SwiGLU), plain GeLU, squared-ReLU (Nemotron)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+def is_gated(activation: str) -> bool:
+    return activation.endswith("_gated")
+
+
+def init_ffn_params(key, d_model: int, d_ff: int, activation: str, dtype):
+    ks = common.keygen(key)
+    p = {"w_in": common.init_dense(next(ks), d_model, d_ff, dtype),
+         "w_out": common.init_dense(next(ks), d_ff, d_model, dtype)}
+    if is_gated(activation):
+        p["w_gate"] = common.init_dense(next(ks), d_model, d_ff, dtype)
+    return p
+
+
+def ffn(params, x, activation: str):
+    act = common.activation_fn(activation.replace("_gated", ""))
+    h = x @ params["w_in"]
+    if is_gated(activation):
+        h = act(x @ params["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ params["w_out"]

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Design (TPU/GSPMD-friendly — everything static-shaped):
+  * router: softmax top-k with optional always-on shared experts
+    (DeepSeek-V3 style: 1 shared + 256 routed, top-8).
+  * dispatch: scatter tokens into a per-expert capacity buffer
+    (E, C, D) with position-in-expert computed by a cumulative count over
+    the flattened token stream; tokens beyond capacity are DROPPED
+    (their combine weight contributes nothing — standard Switch behavior).
+  * experts: batched gated FFN over the leading E axis; E is sharded over
+    the mesh "model" axis (expert parallelism) — the scatter/gather across
+    the data->expert sharding boundary is where GSPMD emits the
+    all-to-all traffic the roofline's collective term tracks.
+  * load-balance auxiliary loss (Switch/DeepSeek): E * sum_e f_e * p_e.
+
+The co-management connection (DESIGN.md §4): capacity-based expert dispatch
+is the same bin-packing math as DQuLearn's qubit-capacity worker assignment —
+demand (tokens) packed into capacity-bounded workers (experts), overflow
+queued/dropped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import common, ffn as ffn_mod
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    ks = common.keygen(key)
+    act = cfg.activation
+    gated = ffn_mod.is_gated(act)
+
+    def expert_bank(k, n):
+        kk = common.keygen(k)
+        p = {"w_in": _stack(next(kk), n, cfg.d_model, m.d_ff_expert, dtype),
+             "w_out": _stack(next(kk), n, m.d_ff_expert, cfg.d_model, dtype)}
+        if gated:
+            p["w_gate"] = _stack(next(kk), n, cfg.d_model, m.d_ff_expert, dtype)
+        return p
+
+    n_bank = max(m.n_experts, m.pad_to)   # dead pad experts (never routed)
+    p = {"router": common.init_dense(next(ks), cfg.d_model, m.n_experts, dtype,
+                                     scale=0.02),
+         "experts": expert_bank(next(ks), n_bank)}
+    if m.n_shared_experts:
+        p["shared"] = ffn_mod.init_ffn_params(
+            next(ks), cfg.d_model, m.d_ff_expert * m.n_shared_experts, act, dtype)
+    return p
+
+
+def _stack(key, n, din, dout, dtype):
+    return (jax.random.normal(key, (n, din, dout), jnp.float32)
+            * din ** -0.5).astype(dtype)
+
+
+def _expert_ffn(experts, xs, activation: str):
+    """xs: (E, C, D) -> (E, C, D), batched over experts."""
+    act = common.activation_fn(activation.replace("_gated", ""))
+    h = jnp.einsum("ecd,edf->ecf", xs, experts["w_in"])
+    if "w_gate" in experts:
+        h = act(jnp.einsum("ecd,edf->ecf", xs, experts["w_gate"])) * h
+    else:
+        h = act(h)
+    return jnp.einsum("ecf,efd->ecd", h, experts["w_out"])
+
+
+def moe_ffn(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (y (B, S, D), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    e_bank = max(m.n_experts, m.pad_to)   # buffer/bank size incl. dead pads
+    logits = (xt @ params["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)     # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Capacity: Switch-style ceil(T*K*cf/E), lower-bounded; tokens past an
+    # expert's capacity are dropped (combine weight 0).  ``dropless`` (or a
+    # small token count, e.g. one-token decode) switches to capacity = T*K,
+    # which can never drop — used where cached-decode must exactly match the
+    # full forward pass, and by the correctness tests.
+    if m.dropless or t * m.top_k <= 64:
+        capacity = t * m.top_k
+    else:
+        capacity = max(8, -(-t * m.top_k * int(100 * m.capacity_factor)
+                            // (100 * m.n_experts)))
+
+    if m.dispatch == "per_k":
+        # K scatters/gathers of (T, D) — never materializes the (T*K, D)
+        # replicated-token payload (whose f32 backward gather dominated the
+        # deepseek-v3 collective term).  Priority is k-major (all tokens'
+        # 1st choices before any 2nd choice) vs flat's token-major; both are
+        # deterministic FCFS variants.
+        buf = jnp.zeros((e_bank, capacity + 1, d), x.dtype)
+        counts = jnp.zeros((e_bank,), jnp.int32)
+        slots, keeps = [], []
+        for k in range(m.top_k):
+            e_k = expert_idx[:, k]                            # (T,)
+            oh = jax.nn.one_hot(e_k, e_bank, dtype=jnp.int32)
+            pos = counts[e_k] + jnp.take_along_axis(
+                jnp.cumsum(oh, axis=0) - oh, e_k[:, None], axis=1)[:, 0]
+            counts = counts + oh.sum(0)
+            keep_k = pos < capacity
+            slot_k = jnp.where(keep_k, pos, capacity)
+            buf = buf.at[e_k, slot_k].add(xt)                 # (T, D) payload
+            slots.append(slot_k)
+            keeps.append(keep_k)
+        expert_out = _expert_ffn(params["experts"], buf[:, :capacity],
+                                 cfg.activation)
+        expert_out = jnp.pad(expert_out, ((0, 0), (0, 1), (0, 0)))
+        y = jnp.zeros((t, d), x.dtype)
+        for k in range(m.top_k):
+            w_k = (gate_vals[:, k] * keeps[k]).astype(x.dtype)
+            y = y + expert_out[expert_idx[:, k], slots[k]] * w_k[:, None]
+        keep = jnp.stack(keeps, 1).reshape(-1)
+        flat_e = expert_idx.reshape(-1)
+    else:
+        # position of each (token, k) within its expert: cumulative count
+        # over the flattened (T*K,) stream — token-major FCFS priority.
+        flat_e = expert_idx.reshape(-1)                       # (T*K,)
+        onehot = jax.nn.one_hot(flat_e, e_bank, dtype=jnp.int32)
+        pos_in_e = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                                       flat_e[:, None], axis=1)[:, 0]
+        keep = pos_in_e < capacity
+        slot = jnp.where(keep, pos_in_e, capacity)            # overflow slot
+
+        # scatter tokens (with a spill row at index `capacity`)
+        buf = jnp.zeros((e_bank, capacity + 1, d), x.dtype)
+        tok_rep = jnp.repeat(xt, m.top_k, axis=0)             # (T*K, D)
+        buf = buf.at[flat_e, slot].add(tok_rep)
+        expert_out = _expert_ffn(params["experts"], buf[:, :capacity],
+                                 cfg.activation)
+        expert_out = jnp.pad(expert_out, ((0, 0), (0, 1), (0, 0)))
+
+        gathered = expert_out[flat_e, slot]                   # (T*K, D)
+        w = (gate_vals.reshape(-1) * keep).astype(x.dtype)
+        y = (gathered * w[:, None]).reshape(t, m.top_k, d).sum(1)
+
+    # load-balance aux loss: E * sum_e (fraction routed to e) * (mean prob e)
+    f_e = jnp.zeros((e_bank,), jnp.float32).at[flat_e].add(
+        keep.astype(jnp.float32))[: m.n_experts]
+    f_e = f_e / jnp.maximum(f_e.sum(), 1.0)
+    p_e = probs.mean(0)
+    aux = m.n_experts * jnp.sum(f_e * p_e) * m.router_aux_weight
+
+    if m.n_shared_experts:
+        y = y + ffn_mod.ffn(params["shared"], xt, cfg.activation)
+    return y.reshape(b, s, d), aux

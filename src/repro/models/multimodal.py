@@ -1,0 +1,62 @@
+"""Modality frontends — STUBS by explicit carve-out of the brief.
+
+The [vlm] and [audio] architectures implement the TRANSFORMER BACKBONE; the
+ViT/SigLIP vision tower and the EnCodec audio codec are not rebuilt.  These
+helpers produce the precomputed embeddings / token grids the backbones
+consume, with the right shapes and deterministic contents, for smoke tests,
+examples and the dry-run input_specs().
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def vlm_batch(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0) -> dict:
+    """Phi-3-vision style: ``image_embeds`` (B, P, clip_dim) precomputed patch
+    features + text tokens filling the rest of the sequence."""
+    p = cfg.n_prefix_embeds
+    assert seq_len > p, (seq_len, p)
+    rng = np.random.default_rng(seed)
+    return {
+        "image_embeds": jnp.asarray(
+            rng.standard_normal((batch, p, cfg.prefix_embed_dim), np.float32) * 0.5),
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, seq_len - p), dtype=np.int32)),
+    }
+
+
+def audio_batch(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0) -> dict:
+    """MusicGen style: EnCodec RVQ token grid (B, S, K) — one token per
+    codebook per frame (we model the flattened/parallel pattern)."""
+    rng = np.random.default_rng(seed)
+    return {"codes": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, seq_len, cfg.n_codebooks),
+                     dtype=np.int32))}
+
+
+def text_batch(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, seq_len), dtype=np.int32))}
+
+
+def batch_for(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0) -> dict:
+    if cfg.n_codebooks:
+        return audio_batch(cfg, batch, seq_len, seed)
+    if cfg.n_prefix_embeds:
+        return vlm_batch(cfg, batch, seq_len, seed)
+    return text_batch(cfg, batch, seq_len, seed)
+
+
+def decode_batch_for(cfg: ModelConfig, batch: int, seed: int = 0) -> dict:
+    """The single new token fed to serve_step."""
+    rng = np.random.default_rng(seed)
+    if cfg.n_codebooks:
+        return {"codes": jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, 1, cfg.n_codebooks), np.int32))}
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, 1), dtype=np.int32))}

@@ -1,0 +1,57 @@
+"""Logical-axis sharding hints, resolved against the active mesh.
+
+Models annotate activations with LOGICAL axes ("batch", "model", ...); the
+launcher binds logical axes to mesh axes (e.g. batch -> ("pod", "data")).
+Outside any binding the hints are no-ops, so the same model code runs in CPU
+smoke tests and in the 512-chip dry-run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BINDING: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "axis_binding", default=None)
+
+
+@contextlib.contextmanager
+def axis_binding(**logical_to_mesh):
+    """e.g. axis_binding(batch=("pod", "data"), model=("model",))."""
+    tok = _BINDING.set(logical_to_mesh)
+    try:
+        yield
+    finally:
+        _BINDING.reset(tok)
+
+
+def shard_hint(x, *logical_axes):
+    """with_sharding_constraint on logical axes; identity when unbound.
+
+    ``logical_axes`` entries: logical axis name, None, or a tuple of names.
+    The binding dict may carry a ``__mesh__`` entry (jax Mesh) so constraints
+    resolve to NamedShardings without global mesh state.
+    """
+    binding = _BINDING.get()
+    if binding is None or "__mesh__" not in binding:
+        return x
+
+    def resolve(a):
+        if a is None:
+            return None
+        names = a if isinstance(a, tuple) else (a,)
+        mesh_axes = []
+        for n in names:
+            m = binding.get(n)
+            if m:
+                mesh_axes.extend(m if isinstance(m, tuple) else (m,))
+        if not mesh_axes:
+            return None
+        return tuple(mesh_axes) if len(mesh_axes) > 1 else mesh_axes[0]
+
+    spec = P(*[resolve(a) for a in logical_axes])
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(binding["__mesh__"], spec))

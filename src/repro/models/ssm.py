@@ -1,0 +1,347 @@
+"""Sub-quadratic sequence mixers: Mamba selective SSM and xLSTM cells.
+
+All three mixers share one primitive: the diagonal linear recurrence
+    h_t = a_t * h_{t-1} + b_t          (elementwise on the state)
+computed CHUNKED over the sequence: a lax.scan over chunks carries the state;
+within a chunk an associative scan materializes only (B, chunk, ...) — the
+full (B, S, d_inner, d_state) tensor never exists.  This is the TPU-friendly
+shape of the paper['s] recurrent-scan workloads (xlstm-125m, jamba).
+
+Simplifications vs. the source papers (documented in DESIGN.md):
+  * mLSTM uses log-space decay with per-row max stabilization inside each
+    chunk (not the exact m_t running-max recursion across the whole
+    sequence); normalizer lower-bounded at 1.
+  * sLSTM keeps the exact sequential recurrence (lax.scan over steps) —
+    there is no parallel form; that is the point of including it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import common
+
+
+# ------------------------------------------------- chunked linear recurrence
+def linear_recurrence_chunked(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t.  a, b: (B, S, ...), h0: (B, ...).
+
+    Returns (h (B, S, ...), h_last (B, ...)).  Sequences that don't divide by
+    ``chunk`` are zero-padded at the end (padded a=0 -> padded h=0, so
+    ``h_last`` equals the true final state only when S % chunk == 0; the
+    training path never consumes h_last).
+    """
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
+        a = jnp.pad(a, widths)
+        b = jnp.pad(b, widths)
+    S_p = S + pad
+    n_chunks = S_p // chunk
+    rest = a.shape[2:]
+    a_c = a.reshape((B, n_chunks, chunk) + rest)
+    b_c = b.reshape((B, n_chunks, chunk) + rest)
+    del a, b
+
+    def assoc(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    def step(h, ab):
+        a_k, b_k = ab                                  # (B, chunk, ...)
+        aa, bb = jax.lax.associative_scan(assoc, (a_k, b_k), axis=1)
+        h_all = aa * h[:, None] + bb                   # (B, chunk, ...)
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0)))
+    h = jnp.moveaxis(h_chunks, 0, 1).reshape((B, S_p) + rest)[:, :S]
+    return h, h_last
+
+
+# ------------------------------------------------------------------- Mamba
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_inner, dt_rank, s.d_state
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype):
+    d_inner, dt_rank, n = mamba_dims(cfg)
+    ks = common.keygen(key)
+    # S4D-real initialization for A
+    a_init = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                              (d_inner, n))
+    return {
+        "in_proj": common.init_dense(next(ks), cfg.d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(next(ks), (cfg.ssm.d_conv, d_inner), jnp.float32)
+                   * (cfg.ssm.d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_dtbc": common.init_dense(next(ks), d_inner, dt_rank + 2 * n, dtype),
+        "dt_proj": common.init_dense(next(ks), dt_rank, d_inner, dtype, scale=dt_rank ** -0.5),
+        "dt_bias": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": common.init_dense(next(ks), d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x (B,S,C), w (K,C).  With ``state`` (B,K-1,C)
+    performs a single-step update (S==1) and returns (y, new_state)."""
+    k = w.shape[0]
+    if state is not None:
+        buf = jnp.concatenate([state, x], axis=1)       # (B, K, C)
+        y = jnp.einsum("bkc,kc->bc", buf, w)[:, None] + b
+        return y, buf[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return y, None
+
+
+def mamba_mixer(params, x, cfg: ModelConfig, *, state=None):
+    """x (B,S,D) -> (y (B,S,D), new_state or None).
+
+    ``state`` = {"h": (B, d_inner, N), "conv": (B, K-1, d_inner)} enables
+    single-token decode (S == 1).
+    """
+    b_sz, s_len, _ = x.shape
+    d_inner, dt_rank, n = mamba_dims(cfg)
+    decode = state is not None
+
+    xz = x @ params["in_proj"]
+    xs, z = xz[..., :d_inner], xz[..., d_inner:]
+    xs, conv_state = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                  state["conv"] if decode else None)
+    xs = jax.nn.silu(xs)
+
+    dtbc = xs @ params["w_dtbc"]
+    dt = jax.nn.softplus((dtbc[..., :dt_rank] @ params["dt_proj"]).astype(jnp.float32)
+                         + params["dt_bias"])                       # (B,S,di)
+    b_in = dtbc[..., dt_rank:dt_rank + n].astype(jnp.float32)       # (B,S,N)
+    c_in = dtbc[..., dt_rank + n:].astype(jnp.float32)              # (B,S,N)
+
+    a = jnp.exp(-jnp.exp(params["a_log"])[None, None] * dt[..., None])  # (B,S,di,N)
+    bu = (dt * xs.astype(jnp.float32))[..., None] * b_in[:, :, None, :]
+
+    if decode:
+        h = state["h"] * a[:, 0] + bu[:, 0]                         # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, c_in[:, 0])[:, None]
+        new_state = {"h": h, "conv": conv_state}
+    else:
+        h0 = jnp.zeros((b_sz, d_inner, n), jnp.float32)
+        h_all, _ = linear_recurrence_chunked(a, bu, h0, cfg.ssm.chunk)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_in)
+        new_state = None
+
+    y = (y + params["d_skip"] * xs.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    d_inner, _, n = mamba_dims(cfg)
+    return {"h": jnp.zeros((batch, d_inner, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, d_inner), dtype)}
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm_params(key, cfg: ModelConfig, dtype):
+    h = cfg.ssm.n_heads
+    hd = cfg.d_model // h
+    ks = common.keygen(key)
+    return {
+        "wq": common.init_dense(next(ks), cfg.d_model, cfg.d_model, dtype),
+        "wk": common.init_dense(next(ks), cfg.d_model, cfg.d_model, dtype),
+        "wv": common.init_dense(next(ks), cfg.d_model, cfg.d_model, dtype),
+        "w_if": common.init_dense(next(ks), cfg.d_model, 2 * h, dtype, scale=0.02),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # forget-gate bias -> remember
+        "w_gate": common.init_dense(next(ks), cfg.d_model, cfg.d_model, dtype),
+        "wo": common.init_dense(next(ks), cfg.d_model, cfg.d_model, dtype),
+    }
+
+
+def mlstm_mixer(params, x, cfg: ModelConfig, *, state=None):
+    """Matrix-memory LSTM: C_t = f_t C_{t-1} + i_t v_t k_t^T, y_t = C_t q_t.
+
+    Training path: chunked — inter-chunk state carried exactly, intra-chunk
+    computed as decay-masked linear attention in log space (f32).
+    Decode path (state given): exact single-step recurrence.
+    state = {"c": (B,H,dk,dv), "n": (B,H,dk)}.
+    """
+    b_sz, s_len, d = x.shape
+    h = cfg.ssm.n_heads
+    hd = d // h
+
+    q = (x @ params["wq"]).reshape(b_sz, s_len, h, hd) * hd ** -0.5
+    k = (x @ params["wk"]).reshape(b_sz, s_len, h, hd) * hd ** -0.5
+    v = (x @ params["wv"]).reshape(b_sz, s_len, h, hd)
+    gates = (x @ params["w_if"]).astype(jnp.float32).reshape(b_sz, s_len, 2, h)
+    log_i = -jax.nn.softplus(-(gates[:, :, 0] + params["b_i"]))   # log sigmoid
+    log_f = -jax.nn.softplus(-(gates[:, :, 1] + params["b_f"]))
+
+    if state is not None:
+        i_t, f_t = jnp.exp(log_i[:, 0]), jnp.exp(log_f[:, 0])     # (B,H)
+        qh = q[:, 0].astype(jnp.float32)                          # (B,H,hd)
+        kh = k[:, 0].astype(jnp.float32)
+        vh = v[:, 0].astype(jnp.float32)
+        c = state["c"] * f_t[..., None, None] + \
+            i_t[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kh, vh)
+        n = state["n"] * f_t[..., None] + i_t[..., None] * kh
+        num = jnp.einsum("bhkv,bhk->bhv", c, qh)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qh)), 1.0)
+        y = (num / den[..., None]).reshape(b_sz, 1, d)
+        new_state = {"c": c, "n": n}
+    else:
+        chunk = min(cfg.ssm.chunk, s_len)
+        pad = (-s_len) % chunk
+        if pad:
+            # zero-pad the tail chunk: padded keys/values contribute nothing
+            # (k=v=0), padded i-gates get -inf so they never write state.
+            pw3 = ((0, 0), (0, pad), (0, 0), (0, 0))
+            q, k, v = (jnp.pad(t, pw3) for t in (q, k, v))
+            log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=-1e30)
+            log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        s_p = s_len + pad
+        nc = s_p // chunk
+        qc = q.reshape(b_sz, nc, chunk, h, hd)
+        kc = k.reshape(b_sz, nc, chunk, h, hd)
+        vc = v.reshape(b_sz, nc, chunk, h, hd)
+        li = log_i.reshape(b_sz, nc, chunk, h)
+        lf = log_f.reshape(b_sz, nc, chunk, h)
+
+        def step(carry, inp):
+            c_st, n_st = carry                        # (B,H,dk,dv), (B,H,dk)
+            qk, kk, vk, lik, lfk = inp                # (B, chunk, ...)
+            cum_f = jnp.cumsum(lfk, axis=1)           # (B,chunk,H)
+            # intra-chunk decay matrix: D[s,t] = exp(cumf_s - cumf_t + i_t), t<=s
+            dmat = (cum_f[:, :, None] - cum_f[:, None, :]
+                    + lik[:, None, :, :])             # (B,S,T,H)
+            tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+            dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+            # stabilize rows against both intra max and inter decay
+            m_row = jnp.maximum(jnp.max(dmat, axis=2), cum_f)      # (B,S,H)
+            w_intra = jnp.exp(dmat - m_row[:, :, None])            # (B,S,T,H)
+            scores = jnp.einsum("bshd,bthd->bsth", qk.astype(jnp.float32),
+                                kk.astype(jnp.float32))
+            y_intra = jnp.einsum("bsth,bthd->bshd", scores * w_intra,
+                                 vk.astype(jnp.float32))
+            n_intra = jnp.einsum("bsth,bthd->bshd", w_intra,
+                                 kk.astype(jnp.float32))
+            # inter-chunk: contribution of carried state
+            w_inter = jnp.exp(cum_f - m_row)                       # (B,S,H)
+            y_inter = jnp.einsum("bshd,bhdv->bshv", qk.astype(jnp.float32),
+                                 c_st) * w_inter[..., None]
+            n_inter = jnp.einsum("bshd,bhd->bsh", qk.astype(jnp.float32),
+                                 n_st)[..., None] * w_inter[..., None]
+            num = y_intra + y_inter
+            den = jnp.abs(jnp.einsum("bshd,bshd->bsh", qk.astype(jnp.float32),
+                                     n_intra)[..., None] + n_inter)
+            y_k = num / jnp.maximum(den, jnp.exp(-m_row)[..., None])
+            # exact state update to end of chunk
+            tot_f = cum_f[:, -1]                                   # (B,H)
+            decay_to_end = tot_f[:, None] - cum_f + lik            # (B,chunk,H)
+            wk_end = jnp.exp(decay_to_end)
+            c_new = c_st * jnp.exp(tot_f)[..., None, None] + \
+                jnp.einsum("bthd,bthv,bth->bhdv", kk.astype(jnp.float32),
+                           vk.astype(jnp.float32), wk_end)
+            n_new = n_st * jnp.exp(tot_f)[..., None] + \
+                jnp.einsum("bthd,bth->bhd", kk.astype(jnp.float32), wk_end)
+            return (c_new, n_new), y_k
+
+        c0 = jnp.zeros((b_sz, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b_sz, h, hd), jnp.float32)
+        (_, _), ys = jax.lax.scan(
+            step, (c0, n0),
+            (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+             jnp.moveaxis(li, 1, 0), jnp.moveaxis(lf, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b_sz, s_p, h, hd)[:, :s_len]
+        y = y.reshape(b_sz, s_len, d)
+        new_state = None
+
+    y = y.astype(x.dtype) * jax.nn.silu(x @ params["w_gate"])
+    return y @ params["wo"], new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype):
+    h = cfg.ssm.n_heads
+    hd = cfg.d_model // h
+    return {"c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32)}
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm_params(key, cfg: ModelConfig, dtype):
+    h = cfg.ssm.n_heads
+    hd = cfg.d_model // h
+    ks = common.keygen(key)
+    return {
+        "w_in": common.init_dense(next(ks), cfg.d_model, 4 * cfg.d_model, dtype),
+        # block-diagonal recurrent weights per head: (4, H, hd, hd)
+        "r": (jax.random.normal(next(ks), (4, h, hd, hd), jnp.float32)
+              * hd ** -0.5).astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((2 * cfg.d_model,), jnp.float32),
+                              jnp.full((cfg.d_model,), 3.0, jnp.float32),
+                              jnp.zeros((cfg.d_model,), jnp.float32)]),
+        "wo": common.init_dense(next(ks), cfg.d_model, cfg.d_model, dtype),
+    }
+
+
+def slstm_mixer(params, x, cfg: ModelConfig, *, state=None):
+    """Scalar-memory LSTM with recurrent block-diagonal connections.
+
+    Exact sequential recurrence (z, i, f, o gates; stabilizer m):
+      state = {"c","n","h","m"} each (B, D)-shaped f32 (h in model dtype).
+    """
+    b_sz, s_len, d = x.shape
+    h_heads = cfg.ssm.n_heads
+    hd = d // h_heads
+
+    pre_all = (x @ params["w_in"]).astype(jnp.float32)  # (B,S,4D)
+
+    def cell(carry, pre_t):
+        c, n, hm, m = carry
+        hr = hm.reshape(b_sz, h_heads, hd)
+        rec = jnp.einsum("bhd,ghde->gbhe", hr.astype(params["r"].dtype),
+                         params["r"]).astype(jnp.float32)
+        rec = rec.reshape(4, b_sz, d)
+        pre = pre_t.reshape(b_sz, 4, d).transpose(1, 0, 2) + rec + \
+            params["b"].reshape(4, d)[:, None]
+        z_t = jnp.tanh(pre[0])
+        i_log = pre[1]
+        f_log = -jax.nn.softplus(-pre[2])               # log sigmoid(f)
+        o_t = jax.nn.sigmoid(pre[3])
+        m_new = jnp.maximum(f_log + m, i_log)
+        i_t = jnp.exp(i_log - m_new)
+        f_t = jnp.exp(f_log + m - m_new)
+        c_new = f_t * c + i_t * z_t
+        n_new = jnp.maximum(f_t * n + i_t, 1e-6)
+        h_new = o_t * (c_new / n_new)
+        return (c_new, n_new, h_new.astype(x.dtype), m_new), h_new
+
+    if state is None:
+        zeros = jnp.zeros((b_sz, d), jnp.float32)
+        carry = (zeros, zeros, jnp.zeros((b_sz, d), x.dtype), zeros)
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    carry, hs = jax.lax.scan(cell, carry, jnp.moveaxis(pre_all, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)          # (B,S,D)
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]} \
+        if state is not None else None
+    return y @ params["wo"], new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": jnp.zeros((batch, d), dtype), "m": zeros}

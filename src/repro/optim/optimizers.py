@@ -1,0 +1,107 @@
+"""Pure-JAX optimizer substrate (pytree-generic, no external deps).
+
+Used by both the quantum training loop (SGD, the paper's optimizer with
+lr=1e-4..1e-3) and the classical architecture zoo (AdamW etc.).  API mirrors
+optax: ``init(params) -> state``, ``update(grads, state, params) ->
+(updates, state)``; ``apply_updates`` adds them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray]) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        eta = lr(step) if callable(lr) else lr
+        ups = jax.tree.map(lambda g: -eta * g, grads)
+        return ups, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "m": _zeros_like_f32(params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        eta = lr(step) if callable(lr) else lr
+        m = jax.tree.map(lambda m_, g: beta * m_ + g, state["m"], grads)
+        if nesterov:
+            ups = jax.tree.map(lambda m_, g: -eta * (beta * m_ + g), m, grads)
+        else:
+            ups = jax.tree.map(lambda m_: -eta * m_, m)
+        return ups, {"step": step, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam / AdamW (decoupled decay when weight_decay > 0)."""
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _zeros_like_f32(params), "v": _zeros_like_f32(params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        eta = lr(step) if callable(lr) else lr
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -eta * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - eta * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            ups = jax.tree.map(lambda m_, v_: upd(m_, v_, None), m, v)
+        else:
+            ups = jax.tree.map(upd, m, v, params)
+        return ups, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+BY_NAME = {"sgd": sgd, "momentum": momentum, "adam": adam, "adamw": adamw}
+
+
+def make(name: str, lr, **kw) -> Optimizer:
+    return BY_NAME[name](lr, **kw)

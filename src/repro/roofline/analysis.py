@@ -1,0 +1,96 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all PER-DEVICE seconds (XLA's
+cost_analysis on the SPMD-partitioned module reports per-device numbers):
+
+    compute_s    = flops_per_device / PEAK_FLOPS
+    memory_s     = bytes_accessed_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+
+Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``collective_bytes`` parses the optimized HLO text: sums the output-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (cost_analysis does not attribute collective traffic).
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# matches e.g.:  %all-gather.5 = bf16[8,4096,1152]{2,1,0} all-gather(
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in optimized HLO text."""
+    by_kind: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    counts: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_shapes, single_shape, kind = m.group(1), m.group(2), m.group(3)
+        shape_str = tuple_shapes if tuple_shapes is not None else single_shape
+        b = _shape_bytes(shape_str)
+        by_kind[kind] += b
+        counts[kind] += 1
+    return {"total": int(sum(by_kind.values())),
+            "by_kind": {k: int(v) for k, v in by_kind.items() if v},
+            "counts": {k: v for k, v in counts.items() if v}}
+
+
+def roofline_terms(record: dict) -> dict:
+    """record = dryrun JSON.  Returns the 3 terms + dominant + ratios."""
+    compute_s = record["flops_per_device"] / PEAK_FLOPS
+    memory_s = record["bytes_accessed_per_device"] / HBM_BW
+    collective_s = record["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get).replace("_s", "")
+    bound_s = max(compute_s, memory_s, collective_s)
+    return {**terms, "dominant": dominant, "bound_s": bound_s,
+            "compute_fraction_of_bound": compute_s / bound_s if bound_s else 0.0}
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str) -> float:
+    """6*N*D for training; 2*N*D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * n_tokens
+
+
+def useful_compute_ratio(record: dict, n_params_active: int, n_tokens: int,
+                         kind: str, chips: int) -> float:
+    """MODEL_FLOPS / total compiled HLO FLOPs — catches remat/redundancy."""
+    total_hlo = record["flops_per_device"] * chips
+    if total_hlo <= 0:
+        return 0.0
+    return model_flops(n_params_active, n_tokens, kind) / total_hlo

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
+single-CPU device count (only launch/dryrun.py forces 512 placeholders)."""
+import os
+
+import numpy as np
+import pytest
+
+# Keep hypothesis deterministic and CI-friendly.
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

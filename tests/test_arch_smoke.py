@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests (deliverable f): instantiate the REDUCED
+variant of each assigned architecture's family (<=2 periods, d_model<=256,
+<=4 experts), run one forward/train step and one decode step on CPU, assert
+output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfg_base
+from repro.launch import steps
+from repro.models import multimodal, transformer
+
+ALL_ARCHS = [
+    "nemotron-4-340b", "phi-3-vision-4.2b", "granite-34b", "smollm-360m",
+    "qwen3-4b", "granite-moe-3b-a800m", "musicgen-large", "xlstm-125m",
+    "jamba-v0.1-52b", "deepseek-v3-671b",
+]
+
+SEQ, BATCH = 16, 2
+
+
+@pytest.fixture(scope="module")
+def reduced_setups():
+    out = {}
+    for arch in ALL_ARCHS:
+        cfg = cfg_base.get(arch).reduced()
+        model = transformer.Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        out[arch] = (cfg, model, params)
+    return out
+
+
+def test_all_archs_registered():
+    names = cfg_base.all_names()
+    for a in ALL_ARCHS:
+        assert a in names, f"missing config for {a}"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config carries the exact assigned numbers + citation."""
+    spec = {
+        "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+    }[arch]
+    cfg = cfg_base.get(arch)
+    # MoE archs whose pool spec gives d_ff as the per-expert width
+    dff = (cfg.moe.d_ff_expert
+           if arch in ("granite-moe-3b-a800m", "deepseek-v3-671b") else cfg.d_ff)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads, dff, cfg.vocab)
+    assert got == spec, (arch, got, spec)
+    assert cfg.source, f"{arch} missing its pool citation"
+
+
+def test_family_specifics():
+    assert cfg_base.get("nemotron-4-340b").activation == "relu2"
+    assert cfg_base.get("qwen3-4b").qk_norm
+    assert cfg_base.get("granite-moe-3b-a800m").moe.n_experts == 40
+    assert cfg_base.get("granite-moe-3b-a800m").moe.top_k == 8
+    assert cfg_base.get("deepseek-v3-671b").moe.n_experts == 256
+    assert cfg_base.get("deepseek-v3-671b").moe.n_shared_experts == 1
+    assert cfg_base.get("deepseek-v3-671b").mla is not None
+    assert cfg_base.get("deepseek-v3-671b").mtp_depth == 1
+    jamba = cfg_base.get("jamba-v0.1-52b")
+    assert jamba.pattern.count("mamba") == 7 and jamba.pattern.count("attn") == 1
+    assert jamba.moe.n_experts == 16 and jamba.moe.top_k == 2
+    xl = cfg_base.get("xlstm-125m")
+    assert set(xl.pattern) == {"mlstm", "slstm"}
+    assert cfg_base.get("musicgen-large").n_codebooks == 4
+    assert cfg_base.get("phi-3-vision-4.2b").n_prefix_embeds > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = cfg_base.get(arch).reduced()
+    assert cfg.n_periods <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(arch, reduced_setups):
+    cfg, model, params = reduced_setups[arch]
+    batch = multimodal.batch_for(cfg, BATCH, SEQ)
+    logits, aux = model.prefill(params, batch)
+    if cfg.n_codebooks:
+        assert logits.shape == (BATCH, SEQ, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (BATCH, SEQ, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), f"{arch}: NaN/Inf"
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_runs_and_loss_finite(arch, reduced_setups):
+    cfg, model, params = reduced_setups[arch]
+    train_step, optimizer, _ = steps.make_train_step(cfg, global_batch=BATCH)
+    opt_state = optimizer.init(params)
+    batch = multimodal.batch_for(cfg, BATCH, SEQ)
+    new_params, new_opt, loss = jax.jit(train_step)(params, opt_state, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    # parameters actually changed
+    deltas = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                          params, new_params)
+    assert max(jax.tree.leaves(deltas)) > 0.0
+    for leaf in jax.tree.leaves(new_params):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_step_shapes(arch, reduced_setups):
+    cfg, model, params = reduced_setups[arch]
+    caches = model.init_caches(BATCH, SEQ)
+    batch = multimodal.decode_batch_for(cfg, BATCH)
+    logits, new_caches = model.decode_step(params, batch, caches, jnp.int32(3))
+    if cfg.n_codebooks:
+        assert logits.shape == (BATCH, 1, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (BATCH, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert jax.tree.structure(caches) == jax.tree.structure(new_caches)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "xlstm-125m",
+                                  "granite-moe-3b-a800m"])
+def test_two_train_steps_reduce_loss(arch, reduced_setups):
+    """Loss moves in the right direction on a repeated batch."""
+    cfg, model, params = reduced_setups[arch]
+    train_step, optimizer, _ = steps.make_train_step(cfg, global_batch=BATCH)
+    opt_state = optimizer.init(params)
+    batch = multimodal.batch_for(cfg, BATCH, SEQ, seed=7)
+    step = jax.jit(train_step)
+    losses = []
+    for _ in range(3):
+        params, opt_state, loss = step(params, opt_state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_param_count_sane():
+    cfg = cfg_base.get("smollm-360m")
+    model = transformer.Model(cfg)
+    shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    n = transformer.param_count(shapes)
+    assert 3.0e8 < n < 4.5e8, n   # ~360M
+
+
+def test_moe_active_params_less_than_total():
+    cfg = cfg_base.get("granite-moe-3b-a800m")
+    model = transformer.Model(cfg)
+    shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    total = transformer.param_count(shapes)
+    active = transformer.active_param_count(cfg, shapes)
+    assert active < total
+    assert 2.5e9 < total < 4.0e9, total     # ~3B total
+    assert 0.5e9 < active < 1.5e9, active   # ~800M active

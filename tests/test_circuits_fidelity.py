@@ -1,0 +1,141 @@
+"""QuClassi circuit construction + SWAP-test fidelity tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import circuits, fidelity as fid, sim
+from repro.core import gates as G
+
+
+@pytest.mark.parametrize("qc", [3, 5, 7, 9])
+def test_registers_layout(qc):
+    anc, data_q, train_q = circuits.registers(qc)
+    m = (qc - 1) // 2
+    assert anc == 0
+    assert data_q == list(range(1, 1 + m))
+    assert train_q == list(range(1 + m, 1 + 2 * m))
+    assert not set(data_q) & set(train_q)
+
+
+@pytest.mark.parametrize("qc", [2, 4, 1])
+def test_registers_reject_bad_counts(qc):
+    with pytest.raises(ValueError):
+        circuits.registers(qc)
+
+
+@pytest.mark.parametrize("qc,nl,expect", [
+    (5, 1, 4), (5, 2, 6), (5, 3, 8),      # m=2: 2m=4, +2(m-1)=2, +2
+    (7, 1, 6), (7, 2, 10), (7, 3, 14),    # m=3: 6, +4, +4
+])
+def test_n_theta_formula(qc, nl, expect):
+    assert circuits.n_theta_for(qc, nl) == expect
+    spec = circuits.build_quclassi_circuit(qc, nl)
+    assert spec.n_theta == expect
+    # every theta index used exactly once
+    used = [op.param[1] for op in spec.ops
+            if op.param and op.param[0] == "theta"]
+    assert sorted(used) == list(range(expect))
+
+
+@pytest.mark.parametrize("qc", [5, 7])
+def test_data_angles(qc):
+    m = (qc - 1) // 2
+    assert circuits.n_data_angles_for(qc) == 2 * m
+
+
+def test_layer_sequence():
+    assert circuits.layers_for_count(1) == ("single",)
+    assert circuits.layers_for_count(2) == ("single", "dual")
+    assert circuits.layers_for_count(3) == ("single", "dual", "entangle")
+    with pytest.raises(ValueError):
+        circuits.layers_for_count(4)
+
+
+def test_qubit_demand():
+    for qc in (5, 7):
+        spec = circuits.build_quclassi_circuit(qc, 2)
+        assert circuits.qubit_demand(spec) == qc
+
+
+# ------------------------------------------------------------- fidelity
+def _overlap_sq(spec_qc, theta, data):
+    """Direct |<phi(data)|psi(theta)>|^2 using separate register circuits."""
+    anc, data_q, train_q = circuits.registers(spec_qc)
+    m = len(data_q)
+
+    enc_ops, _ = circuits.encoding_ops(list(range(m)))
+    enc_spec = sim.CircuitSpec(m, tuple(enc_ops), 0, 2 * m)
+    phi = sim.run_circuit(enc_spec, jnp.zeros(0), data)
+
+    var_ops, nt = circuits.variational_ops(list(range(m)),
+                                           circuits.layers_for_count(2))
+    var_spec = sim.CircuitSpec(m, tuple(var_ops), nt, 0)
+    psi = sim.run_circuit(var_spec, theta, jnp.zeros(0))
+
+    a = np.asarray(phi[0]) + 1j * np.asarray(phi[1])
+    b = np.asarray(psi[0]) + 1j * np.asarray(psi[1])
+    return abs(np.vdot(a, b)) ** 2
+
+
+@pytest.mark.parametrize("qc", [5, 7])
+def test_swap_test_equals_direct_overlap(qc):
+    spec = circuits.build_quclassi_circuit(qc, 2)
+    key = jax.random.PRNGKey(qc)
+    theta = jax.random.uniform(key, (spec.n_theta,)) * np.pi
+    data = jax.random.uniform(jax.random.fold_in(key, 1), (spec.n_data,)) * np.pi
+    f_swap = float(fid.fidelity(spec, theta, data))
+    f_direct = _overlap_sq(qc, theta, data)
+    assert abs(f_swap - f_direct) < 1e-5
+
+
+def test_identical_states_fidelity_one():
+    """theta chosen so the trainable register prepares exactly the data state."""
+    qc = 5
+    spec = circuits.build_quclassi_circuit(qc, 1)
+    # encoding = RX(a) RY(b) per qubit; single layer = RY(t) RZ(t') per qubit.
+    # Use data angles (0, b): then |phi> = RY(b)|0>, reachable by theta=(b, 0).
+    b1, b2 = 0.7, 1.9
+    data = jnp.array([0.0, b1, 0.0, b2])
+    theta = jnp.array([b1, 0.0, b2, 0.0])
+    f = float(fid.fidelity(spec, theta, data))
+    assert abs(f - 1.0) < 1e-5
+
+
+def test_orthogonal_states_fidelity_zero():
+    qc = 3  # m=1
+    spec = circuits.build_quclassi_circuit(qc, 1)
+    data = jnp.array([0.0, 0.0])        # |0>
+    theta = jnp.array([jnp.pi, 0.0])    # RY(pi)|0> = |1>
+    f = float(fid.fidelity(spec, theta, data))
+    assert abs(f) < 1e-5
+
+
+@given(seed=st.integers(0, 10_000))
+def test_fidelity_in_unit_interval(seed):
+    spec = circuits.build_quclassi_circuit(5, 3)
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.uniform(key, (spec.n_theta,), minval=-np.pi, maxval=np.pi)
+    data = jax.random.uniform(jax.random.fold_in(key, 7), (spec.n_data,),
+                              minval=0, maxval=np.pi)
+    f = float(fid.fidelity(spec, theta, data))
+    assert -1e-6 <= f <= 1.0 + 1e-6
+
+
+def test_fidelity_batch_matches_scalar():
+    spec = circuits.build_quclassi_circuit(5, 2)
+    key = jax.random.PRNGKey(0)
+    theta = jax.random.uniform(key, (6, spec.n_theta)) * np.pi
+    data = jax.random.uniform(jax.random.fold_in(key, 1), (6, spec.n_data))
+    batch = fid.fidelity_batch(spec, theta, data)
+    for i in range(6):
+        assert abs(float(batch[i]) - float(fid.fidelity(spec, theta[i], data[i]))) < 1e-6
+
+
+def test_bce_loss_and_grad_consistent():
+    f = jnp.array([0.1, 0.5, 0.9])
+    y = jnp.array([0.0, 1.0, 1.0])
+    g_auto = jax.vmap(jax.grad(lambda fi, yi: fid.bce_loss(fi, yi)))(f, y)
+    g_manual = fid.bce_grad_wrt_fidelity(f, y)
+    np.testing.assert_allclose(np.asarray(g_auto), np.asarray(g_manual), atol=1e-5)

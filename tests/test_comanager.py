@@ -1,0 +1,221 @@
+"""Algorithm 2 co-Manager unit tests: registration, heartbeats, eviction,
+workload assignment (AR filter + CRU sort), multi- vs single-tenant."""
+import pytest
+
+from repro.comanager.manager import CoManager
+from repro.comanager.worker import CircuitTask, QuantumWorker, WorkerConfig
+
+
+def task(tid, demand=5, client="c1", st=1.0):
+    return CircuitTask(task_id=tid, client_id=client, demand=demand,
+                       service_time=st)
+
+
+# --------------------------------------------------- (2) worker registration
+def test_registration_initial_state():
+    m = CoManager()
+    v = m.register_worker("w1", 20, cru=0.3, t=0.0)
+    assert v.max_qubits == 20          # MR
+    assert v.occupied_qubits == 0      # OR = 0   (line 4)
+    assert v.available_qubits == 20    # AR = MR  (line 5)
+    assert v.cru == 0.3                # CRU      (line 6)
+    assert "w1" in m.workers
+
+
+# ------------------------------------------------ (3) heartbeats + liveness
+def test_heartbeat_updates_or_ar_cru():
+    m = CoManager()
+    m.register_worker("w1", 20, 0.0, t=0.0)
+    m.heartbeat({"worker_id": "w1", "active": {101: 5, 102: 7},
+                 "completed": set(), "cru": 0.6}, t=5.0)
+    v = m.workers["w1"]
+    assert v.reported_or == 12                    # lines 8-9: sum of D_c
+    assert v.available_qubits == 8                # line 10: AR = MR - OR
+    assert v.cru == 0.6                           # line 11
+
+
+def test_heartbeat_settles_in_flight():
+    m = CoManager()
+    m.register_worker("w1", 20, 0.0, t=0.0)
+    wid = m.assign(task(1, demand=5), t=0.1)
+    assert wid == "w1"
+    assert m.workers["w1"].available_qubits == 15  # optimistic ledger
+    # heartbeat reports the task as active -> moves from in_flight to OR
+    m.heartbeat({"worker_id": "w1", "active": {1: 5}, "completed": set(),
+                 "cru": 0.2}, t=5.0)
+    v = m.workers["w1"]
+    assert v.in_flight == {}
+    assert v.occupied_qubits == 5
+
+
+def test_eviction_after_three_missed_heartbeats():
+    m = CoManager()
+    m.register_worker("w1", 10, 0.0, t=0.0)
+    m.register_worker("w2", 10, 0.0, t=0.0)
+    m.heartbeat({"worker_id": "w2", "active": {}, "completed": set(),
+                 "cru": 0.1}, t=14.0)
+    dead = m.liveness_check(t=15.0, period=5.0)    # w1 silent for 3 periods
+    assert dead == ["w1"]
+    assert "w1" not in m.workers and "w2" in m.workers
+    assert m.evictions and m.evictions[0][1] == "w1"
+
+
+def test_eviction_requeues_lost_circuits():
+    m = CoManager()
+    m.register_worker("w1", 10, 0.0, t=0.0)
+    t1 = task(7, demand=5)
+    m.submit(t1)
+    m.drain_pending(0.0, lambda task, wid: None)
+    assert not m.pending
+    m.liveness_check(t=15.0, period=5.0)
+    assert [t.task_id for t in m.pending] == [7]
+
+
+def test_two_missed_heartbeats_not_evicted():
+    m = CoManager()
+    m.register_worker("w1", 10, 0.0, t=0.0)
+    assert m.liveness_check(t=10.0, period=5.0) == []
+
+
+# ------------------------------------------------- (4) workload assignment
+def test_assign_filters_by_available_qubits():
+    m = CoManager()
+    m.register_worker("w_small", 5, 0.0, t=0)
+    m.register_worker("w_big", 10, 0.9, t=0)   # higher CRU but only fit
+    wid = m.assign(task(1, demand=7), t=1.0)
+    assert wid == "w_big"                      # 5q worker useless to a 7q circuit
+
+
+def test_assign_exact_fit_allowed():
+    """AR >= D (see manager.py note reconciling line 16 with Fig 6 text)."""
+    m = CoManager()
+    m.register_worker("w1", 5, 0.0, t=0)
+    assert m.assign(task(1, demand=5), t=0) == "w1"
+
+
+def test_assign_prefers_lowest_cru():
+    m = CoManager()
+    m.register_worker("w1", 10, 0.7, t=0)
+    m.register_worker("w2", 10, 0.2, t=0)
+    m.register_worker("w3", 10, 0.5, t=0)
+    assert m.assign(task(1), t=0) == "w2"      # lines 18-20
+
+
+def test_assign_ties_broken_deterministically():
+    m = CoManager()
+    m.register_worker("w2", 10, 0.5, t=0)
+    m.register_worker("w1", 10, 0.5, t=0)
+    assert m.assign(task(1), t=0) == "w1"
+
+
+def test_assign_returns_none_when_no_candidate():
+    m = CoManager()
+    m.register_worker("w1", 5, 0.0, t=0)
+    assert m.assign(task(1, demand=9), t=0) is None
+
+
+def test_optimistic_ledger_prevents_overcommit():
+    m = CoManager()
+    m.register_worker("w1", 10, 0.0, t=0)
+    assert m.assign(task(1, demand=5), t=0) == "w1"
+    assert m.assign(task(2, demand=5), t=0) == "w1"
+    assert m.assign(task(3, demand=5), t=0) is None  # would exceed MR
+
+
+def test_complete_frees_capacity_eagerly():
+    m = CoManager(eager_completion=True)
+    m.register_worker("w1", 5, 0.0, t=0)
+    t1 = task(1, demand=5)
+    assert m.assign(t1, t=0) == "w1"
+    assert m.assign(task(2, demand=5), t=0) is None
+    m.complete("w1", t1, t=1.0)
+    assert m.assign(task(2, demand=5), t=1.1) == "w1"
+
+
+def test_multitenant_packs_multiple_circuits():
+    """A 20-qubit machine accommodates four 5q circuits (paper Fig 6 setup)."""
+    m = CoManager(multi_tenant=True)
+    m.register_worker("w20", 20, 0.0, t=0)
+    placed = [m.assign(task(i, demand=5, client=f"c{i}"), t=0) for i in range(4)]
+    assert placed == ["w20"] * 4
+    assert m.assign(task(9, demand=5), t=0) is None
+
+
+def test_multitenant_mixed_widths():
+    """Two 7q + one 5q co-resident on 20 qubits (paper §IV-C2)."""
+    m = CoManager(multi_tenant=True)
+    m.register_worker("w20", 20, 0.0, t=0)
+    assert m.assign(task(1, demand=7, client="a"), t=0) == "w20"
+    assert m.assign(task(2, demand=7, client="b"), t=0) == "w20"
+    assert m.assign(task(3, demand=5, client="c"), t=0) == "w20"
+    assert m.assign(task(4, demand=5, client="d"), t=0) is None  # 19 used
+
+
+def test_single_tenant_one_circuit_per_machine():
+    m = CoManager(multi_tenant=False)
+    m.register_worker("w20", 20, 0.0, t=0)
+    assert m.assign(task(1, demand=5, client="c1"), t=0) == "w20"
+    # same client, machine busy -> wait
+    assert m.assign(task(2, demand=5, client="c1"), t=0) is None
+
+
+def test_single_tenant_machine_owned_by_client():
+    m = CoManager(multi_tenant=False)
+    m.register_worker("w1", 20, 0.0, t=0)
+    t1 = task(1, demand=5, client="c1")
+    assert m.assign(t1, t=0) == "w1"
+    # c1 still has queued work when its first circuit completes -> the
+    # machine stays owned by c1 (single-tenant: others wait in the queue)
+    m.submit(task(3, demand=5, client="c1"))
+    m.complete("w1", t1, t=1.0)
+    assert m.assign(task(2, demand=5, client="c2"), t=1.5) is None
+    # c1's own next circuit is fine
+    assert m.assign(task(3, demand=5, client="c1"), t=2.0) == "w1"
+
+
+def test_single_tenant_release_after_drain():
+    m = CoManager(multi_tenant=False)
+    m.register_worker("w1", 20, 0.0, t=0)
+    t1 = task(1, demand=5, client="c1")
+    m.assign(t1, t=0)
+    m.complete("w1", t1, t=1.0)
+    assert m.assign(task(2, demand=5, client="c2"), t=2.0) == "w1"
+
+
+def test_drain_pending_fifo():
+    m = CoManager()
+    m.register_worker("w1", 10, 0.0, t=0)
+    launched = []
+    for i in range(4):
+        m.submit(task(i, demand=5))
+    placed = m.drain_pending(0.0, lambda t, w: launched.append(t.task_id))
+    assert placed == 2 and launched == [0, 1]
+    assert [t.task_id for t in m.pending] == [2, 3]
+
+
+# ----------------------------------------------------------- QuantumWorker
+def test_worker_capacity_accounting():
+    w = QuantumWorker(WorkerConfig("w1", 10, contention=0.0))
+    f1 = w.start(task(1, demand=5, st=2.0), now=0.0)
+    assert f1 == 2.0
+    assert w.occupied_qubits == 5 and w.available_qubits == 5
+    with pytest.raises(RuntimeError):
+        w.start(task(2, demand=7), now=0.1)
+    w.finish(1, now=2.0)
+    assert w.occupied_qubits == 0
+
+
+def test_worker_contention_scaling():
+    w = QuantumWorker(WorkerConfig("w1", 20, contention=0.5))
+    w.start(task(1, demand=5, st=2.0), now=0.0)
+    f2 = w.start(task(2, demand=5, st=2.0), now=0.0)
+    assert f2 == pytest.approx(2.0 * 1.5)  # 1 co-resident circuit
+
+
+def test_worker_heartbeat_payload():
+    w = QuantumWorker(WorkerConfig("w1", 10))
+    w.start(task(1, demand=5, st=10.0), now=0.0)
+    hb = w.heartbeat_payload(1.0)
+    assert hb["active"] == {1: 5}
+    assert hb["max_qubits"] == 10
+    assert 0.0 <= hb["cru"] <= 1.0

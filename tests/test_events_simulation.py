@@ -1,0 +1,179 @@
+"""Event loop + full system simulation behaviour tests (paper's runtime
+claims, in miniature): worker scaling, multi-tenancy, eviction recovery."""
+import pytest
+
+from repro.comanager import tenancy
+from repro.comanager.events import EventLoop
+from repro.comanager.simulation import SystemSimulation, homogeneous_workers
+from repro.comanager.tenancy import JobSpec
+from repro.comanager.worker import WorkerConfig
+
+
+def fresh_jobs(*specs):
+    tenancy.reset_task_ids()
+    return [JobSpec(**s) for s in specs]
+
+
+# -------------------------------------------------------------- event loop
+def test_event_loop_ordering():
+    lp = EventLoop()
+    seen = []
+    lp.on("e", lambda t, p: seen.append((t, p)))
+    lp.schedule(2.0, "e", "b")
+    lp.schedule(1.0, "e", "a")
+    lp.schedule(2.0, "e", "c")   # same time: FIFO by sequence
+    lp.run()
+    assert seen == [(1.0, "a"), (2.0, "b"), (2.0, "c")]
+
+
+def test_event_loop_rejects_past():
+    lp = EventLoop()
+    lp.on("e", lambda t, p: lp.schedule(t - 1.0, "e") if t < 2 else None)
+    lp.schedule(1.0, "e")
+    with pytest.raises(ValueError):
+        lp.run()
+
+
+def test_event_loop_cancel():
+    lp = EventLoop()
+    seen = []
+    lp.on("e", lambda t, p: seen.append(p))
+    keep = lp.schedule(1.0, "e", "keep")
+    drop = lp.schedule(2.0, "e", "drop")
+    lp.cancel(drop)
+    lp.run()
+    assert seen == ["keep"]
+
+
+# ------------------------------------------------------------- simulation
+def run_sim(n_workers, jobs, **kw):
+    workers = homogeneous_workers(n_workers, kw.pop("max_qubits", 29))
+    return SystemSimulation(workers, jobs, **kw).run()
+
+
+def test_all_circuits_complete_exactly_once():
+    jobs = fresh_jobs(dict(client_id="c1", qc=5, n_layers=1, n_circuits=40))
+    rep = run_sim(2, jobs)
+    assert rep.total_circuits == 40
+    assert rep.jobs["c1"].n_circuits == 40
+    assert len(rep.assignments) >= 40
+
+
+def test_more_workers_reduce_makespan():
+    """The paper's central runtime claim (Figs 3-5), in miniature."""
+    times = []
+    for nw in (1, 2, 4):
+        jobs = fresh_jobs(dict(client_id="c1", qc=5, n_layers=1,
+                               n_circuits=64, service_override=1.0))
+        rep = run_sim(nw, jobs, max_qubits=5, classical_overhead=0.01)
+        times.append(rep.makespan)
+    assert times[0] > times[1] > times[2]
+    # 1 worker with 5 qubits is fully serial: ~64s
+    assert times[0] == pytest.approx(64.0, rel=0.1)
+
+
+def test_not_linear_speedup_with_classical_overhead():
+    """Fig 5a discussion: 2 workers does NOT halve runtime — the serial
+    classical side (circuit generation / state analysis) caps the gain."""
+    res = {}
+    for nw in (1, 2):
+        jobs = fresh_jobs(dict(client_id="c1", qc=5, n_layers=1,
+                               n_circuits=64, service_override=0.2))
+        rep = run_sim(nw, jobs, max_qubits=5, classical_overhead=0.15)
+        res[nw] = rep.makespan
+    assert res[2] < res[1]
+    assert res[2] > res[1] / 2  # diminishing returns
+
+
+def test_multi_tenant_beats_single_tenant():
+    """Fig 6: concurrent clients sharing big workers finish sooner than
+    under single-tenant (one-user-per-machine) semantics."""
+    def jobs4():
+        return fresh_jobs(
+            dict(client_id="5q1l", qc=5, n_layers=1, n_circuits=30,
+                 service_override=0.5),
+            dict(client_id="5q2l", qc=5, n_layers=2, n_circuits=30,
+                 service_override=0.8),
+            dict(client_id="7q1l", qc=7, n_layers=1, n_circuits=30,
+                 service_override=0.6),
+            dict(client_id="7q2l", qc=7, n_layers=2, n_circuits=30,
+                 service_override=0.9))
+
+    workers = [WorkerConfig("w1", 5), WorkerConfig("w2", 10),
+               WorkerConfig("w3", 15), WorkerConfig("w4", 20)]
+    multi = SystemSimulation(workers, jobs4(), multi_tenant=True).run()
+    single = SystemSimulation(workers, jobs4(), multi_tenant=False).run()
+    assert multi.makespan < single.makespan
+    assert multi.circuits_per_second > single.circuits_per_second
+
+
+def test_small_worker_useless_for_wide_circuits():
+    """'worker-1, which only has 5 qubits, is useless to a 7-qubit circuit'"""
+    jobs = fresh_jobs(dict(client_id="c7", qc=7, n_layers=1, n_circuits=10,
+                           service_override=1.0))
+    workers = [WorkerConfig("w_small", 5), WorkerConfig("w_big", 10)]
+    rep = SystemSimulation(workers, jobs).run()
+    assigned_to = {wid for (_, _, wid) in rep.assignments}
+    assert assigned_to == {"w_big"}
+
+
+def test_worker_failure_eviction_and_recovery():
+    jobs = fresh_jobs(dict(client_id="c1", qc=5, n_layers=1, n_circuits=30,
+                           service_override=2.0))
+    workers = homogeneous_workers(2, 5)
+    rep = SystemSimulation(workers, jobs, worker_failures={"w1": 10.0},
+                           run_until=1e5).run()
+    # w1 dies at t=10 -> evicted after 3 missed heartbeats; all circuits
+    # still complete (requeued onto w2)
+    assert rep.jobs["c1"].n_circuits == 30
+    assert any(wid == "w1" for (_, wid) in rep.evictions)
+    # later assignments all go to the survivor
+    late = [wid for (t, _, wid) in rep.assignments if t > 30.0]
+    assert late and set(late) == {"w2"}
+
+
+def test_heterogeneous_workers_capacity_packing():
+    """A 20-qubit worker runs four 5q circuits concurrently."""
+    jobs = fresh_jobs(dict(client_id="c1", qc=5, n_layers=1, n_circuits=4,
+                           service_override=5.0))
+    workers = [WorkerConfig("w20", 20, contention=0.0)]
+    rep = SystemSimulation(workers, jobs).run()
+    # all four run concurrently -> makespan ~ one service time, not 4x
+    assert rep.makespan < 10.0
+
+
+def test_late_joining_worker_gets_work():
+    """Dynamic registration: a worker joining mid-run is used."""
+    jobs = fresh_jobs(dict(client_id="c1", qc=5, n_layers=1, n_circuits=40,
+                           service_override=1.0))
+    workers = homogeneous_workers(2, 5)
+    sim = SystemSimulation(workers, jobs)
+    # registration events are scheduled in run(); move w2's to t=15
+    sim.loop.schedule(0.0, "register", "w1")
+    sim.loop.schedule(15.0, "register", "w2")
+    for job in sim.jobs.values():
+        sim.loop.schedule(job.submit_time, "submit", job)
+    sim.loop.schedule(sim.heartbeat_period, "liveness", None)
+    sim.loop.run()
+    used = {wid for (t, _, wid) in sim.manager.assignments if t >= 15.0}
+    assert "w2" in used
+
+
+def test_deterministic_replay():
+    def go():
+        jobs = fresh_jobs(dict(client_id="a", qc=5, n_layers=1, n_circuits=25,
+                               service_override=0.7),
+                          dict(client_id="b", qc=7, n_layers=2, n_circuits=25,
+                               service_override=1.1, submit_time=3.0))
+        workers = [WorkerConfig("w1", 10), WorkerConfig("w2", 15)]
+        rep = SystemSimulation(workers, jobs).run()
+        return rep.makespan, tuple(rep.assignments)
+
+    assert go() == go()
+
+
+def test_paper_job_counts():
+    job = tenancy.paper_job("c", 5, 3)
+    assert job.n_circuits == 4320
+    job = tenancy.paper_job("c", 7, 1)
+    assert job.n_circuits == 2016

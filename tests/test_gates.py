@@ -1,0 +1,122 @@
+"""Unit tests for the (re, im) gate matrices: unitarity, special values,
+generator structure — including hypothesis sweeps over angles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import gates as G
+
+ANGLES = st.floats(min_value=-4 * np.pi, max_value=4 * np.pi,
+                   allow_nan=False, allow_infinity=False)
+
+
+def to_complex(u):
+    re, im = u
+    return np.asarray(re) + 1j * np.asarray(im)
+
+
+def assert_unitary(u, atol=1e-6):
+    m = to_complex(u)
+    eye = np.eye(m.shape[0])
+    np.testing.assert_allclose(m.conj().T @ m, eye, atol=atol)
+
+
+@pytest.mark.parametrize("name", list(G.GATES))
+def test_all_gates_unitary_at_fixed_angle(name):
+    ctor, k, takes_angle = G.GATES[name]
+    u = ctor(0.731) if takes_angle else ctor()
+    assert to_complex(u).shape == (2 ** k, 2 ** k)
+    assert_unitary(u)
+
+
+@pytest.mark.parametrize("name", [n for n, (_, _, a) in G.GATES.items() if a])
+@given(theta=ANGLES)
+def test_parameterized_gates_unitary(name, theta):
+    ctor, _, _ = G.GATES[name]
+    assert_unitary(ctor(jnp.float32(theta)))
+
+
+@pytest.mark.parametrize("name", [n for n, (_, _, a) in G.GATES.items() if a])
+def test_rotations_identity_at_zero(name):
+    ctor, k, _ = G.GATES[name]
+    m = to_complex(ctor(0.0))
+    np.testing.assert_allclose(m, np.eye(2 ** k), atol=1e-7)
+
+
+@pytest.mark.parametrize("name", ["rx", "ry", "rz", "ryy", "rzz"])
+def test_rotations_4pi_periodic(name):
+    ctor = G.GATES[name][0]
+    a, b = to_complex(ctor(1.234)), to_complex(ctor(1.234 + 4 * np.pi))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_rx_matches_exponential():
+    theta = 0.917
+    X = np.array([[0, 1], [1, 0]], complex)
+    expect = np.cos(theta / 2) * np.eye(2) - 1j * np.sin(theta / 2) * X
+    np.testing.assert_allclose(to_complex(G.rx(theta)), expect, atol=1e-6)
+
+
+def test_ry_matches_exponential():
+    theta = -2.3
+    Y = np.array([[0, -1j], [1j, 0]])
+    expect = np.cos(theta / 2) * np.eye(2) - 1j * np.sin(theta / 2) * Y
+    np.testing.assert_allclose(to_complex(G.ry(theta)), expect, atol=1e-6)
+
+
+def test_rz_matches_exponential():
+    theta = 0.4
+    expect = np.diag([np.exp(-1j * theta / 2), np.exp(1j * theta / 2)])
+    np.testing.assert_allclose(to_complex(G.rz(theta)), expect, atol=1e-6)
+
+
+@pytest.mark.parametrize("name,pauli", [("ryy", "Y"), ("rzz", "Z")])
+def test_two_qubit_rotations_match_exponential(name, pauli):
+    from scipy_free_expm import expm2  # local helper below
+
+    theta = 1.371
+    P = {"Y": np.array([[0, -1j], [1j, 0]]), "Z": np.diag([1, -1])}[pauli]
+    gen = np.kron(P, P)
+    expect = expm2(-1j * theta / 2 * gen)
+    got = to_complex(G.GATES[name][0](theta))
+    np.testing.assert_allclose(got, expect, atol=1e-6)
+
+
+# tiny expm for 4x4 via eigendecomposition (no scipy in container)
+import sys
+import types
+
+_mod = types.ModuleType("scipy_free_expm")
+
+
+def _expm2(m):
+    w, v = np.linalg.eig(m)
+    return (v * np.exp(w)) @ np.linalg.inv(v)
+
+
+_mod.expm2 = _expm2
+sys.modules["scipy_free_expm"] = _mod
+
+
+def test_cry_controlled_structure():
+    theta = 0.83
+    m = to_complex(G.cry(theta))
+    np.testing.assert_allclose(m[:2, :2], np.eye(2), atol=1e-7)
+    np.testing.assert_allclose(m[:2, 2:], 0, atol=1e-7)
+    np.testing.assert_allclose(m[2:, :2], 0, atol=1e-7)
+    np.testing.assert_allclose(m[2:, 2:], to_complex(G.ry(theta)), atol=1e-7)
+
+
+def test_cswap_permutation():
+    m = to_complex(G.cswap())
+    # control=0 -> identity on first 4 basis states
+    np.testing.assert_allclose(m[:4, :4], np.eye(4), atol=1e-7)
+    # control=1 -> swap the two target bits: |101> <-> |110>
+    expect = np.eye(4)[[0, 2, 1, 3]]
+    np.testing.assert_allclose(m[4:, 4:], expect, atol=1e-7)
+
+
+def test_hadamard_self_inverse():
+    m = to_complex(G.h())
+    np.testing.assert_allclose(m @ m, np.eye(2), atol=1e-6)

@@ -1,0 +1,108 @@
+"""Validate the trip-count-aware HLO analyzer against hand-computable
+modules (the thing raw cost_analysis gets wrong for scanned models)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_analyzer as H
+
+
+def compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    x = jnp.ones((128, 256), jnp.float32)
+    w = jnp.ones((256, 64), jnp.float32)
+    cost = H.analyze(compile_text(lambda a, b: a @ b, x, w))
+    assert cost.flops == pytest.approx(2 * 128 * 256 * 64, rel=0.01)
+
+
+def test_scan_multiplies_by_trip_count():
+    x = jnp.ones((128, 128), jnp.float32)
+    ws = jnp.ones((10, 128, 128), jnp.float32)
+
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, 0
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    cost = H.analyze(compile_text(scanned, x, ws))
+    one = 2 * 128 * 128 * 128
+    assert cost.flops == pytest.approx(10 * one, rel=0.05), \
+        f"expected 10x matmul flops, got {cost.flops / one:.1f}x"
+
+
+def test_nested_scan_trip_counts():
+    x = jnp.ones((64, 64), jnp.float32)
+    ws = jnp.ones((4, 64, 64), jnp.float32)
+
+    def inner(c, w):
+        return c @ w, 0
+
+    def outer(c, _):
+        c, _ = jax.lax.scan(inner, c, ws)
+        return c, 0
+
+    def fn(x, ws):
+        y, _ = jax.lax.scan(outer, x, jnp.arange(3))
+        return y
+
+    cost = H.analyze(compile_text(fn, x, ws))
+    one = 2 * 64 * 64 * 64
+    assert cost.flops == pytest.approx(12 * one, rel=0.05)
+
+
+def test_elementwise_bytes_reasonable():
+    x = jnp.ones((1024, 1024), jnp.float32)  # 4 MB
+    cost = H.analyze(compile_text(lambda a: a + 1.0, x))
+    # read 4MB + write 4MB, give or take fusion bookkeeping
+    assert 0.5 * 8e6 <= cost.bytes <= 3 * 8e6, cost.bytes
+
+
+def test_dot_general_contracting_dims():
+    a = jnp.ones((8, 32, 16), jnp.float32)
+    b = jnp.ones((8, 16, 64), jnp.float32)
+    cost = H.analyze(compile_text(
+        lambda a, b: jnp.einsum("bik,bkj->bij", a, b), a, b))
+    assert cost.flops == pytest.approx(2 * 8 * 32 * 16 * 64, rel=0.01)
+
+
+def test_collective_inside_scan_counted_per_trip():
+    """psum inside a scan over 5 steps on a 1-device mesh still lowers to an
+    all-reduce op in SPMD mode; verify x5 attribution (shape-based)."""
+    import os
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    devs = np.array(jax.devices()[:1]).reshape(1)
+    mesh = Mesh(devs, ("d",))
+
+    x = jnp.ones((8, 128), jnp.float32)
+
+    def fn(x):
+        def body(c, _):
+            s = jax.lax.with_sharding_constraint(c, NamedSharding(mesh, P("d")))
+            return s * 1.0001, 0
+        y, _ = jax.lax.scan(body, x, jnp.arange(5))
+        return y
+
+    # on a single device there are no real collectives; this test just
+    # asserts the analyzer does not crash on sharded modules.
+    cost = H.analyze(compile_text(fn, x))
+    assert cost.bytes > 0
+
+
+def test_parse_module_structure():
+    x = jnp.ones((32, 32), jnp.float32)
+    comps = H.parse_module(compile_text(lambda a: (a @ a).sum(), x))
+    assert any("main" in n for n in comps)
+    entry = next(c for n, c in comps.items() if "main" in n)
+    assert entry.root is not None
+
+
+def test_shape_bytes():
+    assert H.shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert H.shape_bytes("bf16[8,4096,1152]{2,1,0}") == 8 * 4096 * 1152 * 2
+    assert H.shape_bytes("(f32[4], s32[2])") == 24
+    assert H.shape_bytes("pred[]") == 1

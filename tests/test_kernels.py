@@ -1,0 +1,101 @@
+"""Pallas VQC kernel vs pure-jnp oracle: shape/dtype sweeps + allclose.
+
+The kernel targets TPU (BlockSpec/VMEM); on CPU it runs with interpret=True,
+which executes the same kernel body.  ref.py is the independent oracle built
+on repro.core.sim.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import circuits, fidelity as fid
+from repro.kernels import ops, ref
+
+
+def _rand(qc, nl, batch, seed=0):
+    spec = circuits.build_quclassi_circuit(qc, nl)
+    k = jax.random.PRNGKey(seed)
+    theta = jax.random.uniform(k, (batch, spec.n_theta), jnp.float32,
+                               minval=-np.pi, maxval=np.pi)
+    data = jax.random.uniform(jax.random.fold_in(k, 1), (batch, spec.n_data),
+                              jnp.float32, minval=0.0, maxval=np.pi)
+    return spec, theta, data
+
+
+@pytest.mark.parametrize("qc", [3, 5, 7, 9])
+@pytest.mark.parametrize("nl", [1, 2, 3])
+def test_fidelity_kernel_vs_ref_qubit_sweep(qc, nl):
+    spec, theta, data = _rand(qc, nl, batch=8, seed=qc * 10 + nl)
+    got = ops.vqc_fidelity(spec, theta, data)
+    want = ref.vqc_fidelity_ref(spec, theta, data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("batch", [1, 2, 7, 16, 33, 128])
+def test_fidelity_kernel_batch_sweep(batch):
+    spec, theta, data = _rand(5, 2, batch=batch, seed=batch)
+    got = ops.vqc_fidelity(spec, theta, data)
+    want = ref.vqc_fidelity_ref(spec, theta, data)
+    assert got.shape == (batch,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fidelity_kernel_float64_inputs_downcast():
+    spec, theta, data = _rand(5, 1, batch=4)
+    got = ops.vqc_fidelity(spec, theta.astype(jnp.float32),
+                           data.astype(jnp.float32))
+    assert got.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("qc,nl", [(5, 1), (5, 3), (7, 2)])
+def test_state_kernel_vs_ref(qc, nl):
+    spec, theta, data = _rand(qc, nl, batch=4, seed=1)
+    re_k, im_k = ops.vqc_state(spec, theta, data)
+    re_r, im_r = ref.vqc_state_ref(spec, theta, data)
+    np.testing.assert_allclose(np.asarray(re_k), np.asarray(re_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(im_k), np.asarray(im_r), atol=1e-5)
+
+
+@pytest.mark.parametrize("qc,nl", [(5, 2), (7, 1)])
+def test_p0_kernel_vs_ref(qc, nl):
+    spec, theta, data = _rand(qc, nl, batch=6, seed=2)
+    got = ops.vqc_p0(spec, theta, data)
+    want = ref.vqc_p0_ref(spec, theta, data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_ref_matches_core_sim():
+    """The oracle itself is validated against the core simulator."""
+    spec, theta, data = _rand(5, 3, batch=5, seed=3)
+    want = fid.fidelity_batch(spec, theta, data)
+    got = ref.vqc_fidelity_ref(spec, theta, data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_kernel_norm_preserved():
+    spec, theta, data = _rand(7, 3, batch=3)
+    re, im = ops.vqc_state(spec, theta, data)
+    norms = np.sqrt(np.sum(np.asarray(re) ** 2 + np.asarray(im) ** 2, -1))
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+def test_kernel_executor_signature():
+    spec, theta, data = _rand(5, 1, batch=4)
+    run = ops.kernel_executor(spec)
+    out = run(theta, data)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.vqc_fidelity_ref(spec, theta, data)),
+                               atol=1e-5)
+
+
+def test_kernel_under_jit_and_grad_path():
+    """The jitted wrapper composes with surrounding jit (dry-run requirement)."""
+    spec, theta, data = _rand(5, 1, batch=4)
+
+    @jax.jit
+    def f(t, d):
+        return ops.vqc_fidelity(spec, t, d).sum()
+
+    v = f(theta, data)
+    assert np.isfinite(float(v))

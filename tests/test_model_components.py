@@ -1,0 +1,341 @@
+"""Transformer component tests: GQA vs naive reference, decode==prefill,
+MLA absorbed-decode equivalence, MoE routing invariants, SSM scan parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.models import attention, common, ffn as ffn_mod, moe as moe_mod, ssm
+
+
+def mini_cfg(**kw):
+    base = dict(name="mini", family="dense", n_layers=2, d_model=64, n_heads=4,
+                kv_heads=2, d_ff=128, vocab=97, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def naive_mha(params, x, cfg):
+    """Reference attention: expand KV heads to full MHA, O(S^2) loops-free."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.kv_heads
+    pos = jnp.arange(s)[None, :]
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = common.apply_rope(q, pos, cfg.rope_theta)
+    k = common.apply_rope(k, pos, cfg.rope_theta)
+    k = jnp.repeat(k, h // kv, axis=2)
+    v = jnp.repeat(v, h // kv, axis=2)
+    out = np.zeros((b, s, h, hd), np.float32)
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    for bi in range(b):
+        for hi in range(h):
+            sc = (qn[bi, :, hi] @ kn[bi, :, hi].T) * hd ** -0.5
+            if cfg.sliding_window:
+                mask = np.tril(np.ones((s, s))) * \
+                    (np.arange(s)[None, :] > np.arange(s)[:, None] - cfg.sliding_window)
+            else:
+                mask = np.tril(np.ones((s, s)))
+            sc = np.where(mask > 0, sc, -1e30)
+            p = np.exp(sc - sc.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[bi, :, hi] = p @ vn[bi, :, hi]
+    return out.reshape(b, s, h * hd) @ np.asarray(params["wo"])
+
+
+@pytest.mark.parametrize("qk_norm", [False, True])
+@pytest.mark.parametrize("window", [0, 3])
+def test_gqa_matches_naive_reference(qk_norm, window):
+    cfg = mini_cfg(qk_norm=qk_norm, sliding_window=window)
+    key = jax.random.PRNGKey(0)
+    params = attention.init_gqa_params(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model))
+    got = attention.gqa_attention(params, x, cfg)
+    want = naive_mha(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-4)
+
+
+@pytest.mark.parametrize("kv_heads", [1, 2, 4])
+def test_gqa_decode_matches_prefill(kv_heads):
+    """Feeding tokens one-by-one through the cache == full forward."""
+    cfg = mini_cfg(kv_heads=kv_heads)
+    key = jax.random.PRNGKey(2)
+    params = attention.init_gqa_params(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 6, cfg.d_model))
+    full = attention.gqa_attention(params, x, cfg)
+
+    cache = attention.init_gqa_cache(cfg, 2, 6, jnp.float32)
+    outs = []
+    for t in range(6):
+        o, cache = attention.gqa_decode(params, x[:, t:t + 1], cache,
+                                        jnp.int32(t), cfg)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), atol=2e-4)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Windowed decode with a ring cache matches windowed full attention on
+    the final token (the only one the serve step emits)."""
+    cfg = mini_cfg(sliding_window=4)
+    key = jax.random.PRNGKey(3)
+    params = attention.init_gqa_params(key, cfg, jnp.float32)
+    s = 10
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, s, cfg.d_model))
+    full = attention.gqa_attention(params, x, cfg)
+
+    cache = attention.init_gqa_cache(cfg, 1, s, jnp.float32)
+    assert cache["k"].shape[1] == 4          # ring of window size
+    for t in range(s):
+        o, cache = attention.gqa_decode(params, x[:, t:t + 1], cache,
+                                        jnp.int32(t), cfg)
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-4)
+
+
+def test_mla_decode_matches_attention():
+    mla = MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                    qk_rope_head_dim=8, v_head_dim=16)
+    cfg = mini_cfg(mla=mla)
+    key = jax.random.PRNGKey(4)
+    params = attention.init_mla_params(key, cfg, jnp.float32)
+    s = 5
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, s, cfg.d_model)) * 0.5
+    full = attention.mla_attention(params, x, cfg)
+    cache = attention.init_mla_cache(cfg, 2, s, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = attention.mla_decode(params, x[:, t:t + 1], cache,
+                                        jnp.int32(t), cfg)
+        outs.append(o)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), atol=3e-4)
+
+
+def test_mla_cache_is_per_token_compact():
+    """MLA caches kv_lora+rope floats per token, independent of head count."""
+    mla = MLAConfig(kv_lora_rank=16, qk_rope_head_dim=8)
+    cfg = mini_cfg(mla=mla, n_heads=4)
+    c = attention.init_mla_cache(cfg, 1, 10, jnp.float32)
+    per_tok = sum(a.size for a in jax.tree.leaves(c)) / 10
+    assert per_tok == 16 + 8
+
+
+# ------------------------------------------------------------------- FFN
+@pytest.mark.parametrize("act", ["silu_gated", "gelu", "relu2"])
+def test_ffn_activations(act):
+    key = jax.random.PRNGKey(0)
+    p = ffn_mod.init_ffn_params(key, 16, 32, act, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16))
+    y = ffn_mod.ffn(p, x, act)
+    assert y.shape == (4, 16)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_relu2_is_squared_relu():
+    fn = common.activation_fn("relu2")
+    x = jnp.array([-2.0, 0.5, 3.0])
+    np.testing.assert_allclose(np.asarray(fn(x)), [0.0, 0.25, 9.0], atol=1e-6)
+
+
+# ------------------------------------------------------------------- MoE
+def moe_cfg(**kw):
+    moe = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32, **kw)
+    return mini_cfg(moe=moe, family="moe")
+
+
+def test_moe_output_shape_and_aux():
+    cfg = moe_cfg()
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe_params(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model))
+    y, aux = moe_mod.moe_ffn(p, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) > 0.0
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_dropless_matches_manual_topk():
+    """With capacity = T*K (no drops), MoE == explicit per-token expert mix."""
+    cfg = moe_cfg(dropless=True)
+    key = jax.random.PRNGKey(5)
+    p = moe_mod.init_moe_params(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 6, cfg.d_model))
+    y, _ = moe_mod.moe_ffn(p, x, cfg)
+
+    m = cfg.moe
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gv, ei = jax.lax.top_k(probs, m.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = np.zeros_like(np.asarray(xt))
+    for t in range(xt.shape[0]):
+        for kk in range(m.top_k):
+            e = int(ei[t, kk])
+            ex = {k: v[e:e + 1] for k, v in p["experts"].items()}
+            o = moe_mod._expert_ffn(ex, xt[t][None, None, :], cfg.activation)
+            want[t] += float(gv[t, kk]) * np.asarray(o[0, 0])
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)), want,
+                               atol=2e-4)
+
+
+def test_moe_shared_expert_always_on():
+    cfg_s = moe_cfg(n_shared_experts=1)
+    key = jax.random.PRNGKey(6)
+    p = moe_mod.init_moe_params(key, cfg_s, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, cfg_s.d_model))
+    y_with, _ = moe_mod.moe_ffn(p, x, cfg_s)
+    # zero the shared expert -> output changes (it contributes for all tokens)
+    p2 = dict(p, shared=jax.tree.map(jnp.zeros_like, p["shared"]))
+    y_without, _ = moe_mod.moe_ffn(p2, x, cfg_s)
+    assert float(jnp.abs(y_with - y_without).max()) > 1e-6
+
+
+def test_moe_capacity_drops_overflow():
+    """With tiny capacity_factor, some tokens get dropped (output smaller)."""
+    cfg = moe_cfg(capacity_factor=0.25)
+    key = jax.random.PRNGKey(7)
+    p = moe_mod.init_moe_params(key, cfg, jnp.float32)
+    # enough tokens to exceed the t*K<=64 dropless escape hatch
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, cfg.d_model))
+    y_cap, _ = moe_mod.moe_ffn(p, x, cfg)
+    cfg_free = moe_cfg(dropless=True)
+    y_free, _ = moe_mod.moe_ffn(p, x, cfg_free)
+    assert float(jnp.abs(y_cap - y_free).max()) > 1e-6
+
+
+# ------------------------------------------------------------------- SSM
+def ssm_cfg(pattern, **kw):
+    return mini_cfg(pattern=pattern, d_ff=0, family="ssm",
+                    ssm=SSMConfig(d_state=8, chunk=4, n_heads=2), **kw)
+
+
+@pytest.mark.parametrize("kind,init,apply,init_state", [
+    ("mamba", ssm.init_mamba_params, ssm.mamba_mixer, ssm.init_mamba_state),
+    ("mlstm", ssm.init_mlstm_params, ssm.mlstm_mixer, ssm.init_mlstm_state),
+    ("slstm", ssm.init_slstm_params, ssm.slstm_mixer, ssm.init_slstm_state),
+])
+def test_ssm_decode_matches_full_scan(kind, init, apply, init_state):
+    """Step-by-step recurrent decode == full-sequence scan (causality)."""
+    cfg = ssm_cfg((kind,))
+    key = jax.random.PRNGKey(0)
+    p = init(key, cfg, jnp.float32)
+    s = 6
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, s, cfg.d_model)) * 0.3
+    full, _ = apply(p, x, cfg, state=None)
+
+    st = init_state(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, st = apply(p, x[:, t:t + 1], cfg, state=st)
+        outs.append(o)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("kind,init,apply", [
+    ("mamba", ssm.init_mamba_params, ssm.mamba_mixer),
+    ("mlstm", ssm.init_mlstm_params, ssm.mlstm_mixer),
+    ("slstm", ssm.init_slstm_params, ssm.slstm_mixer),
+])
+def test_ssm_causality(kind, init, apply):
+    """Output at position t must not depend on inputs after t."""
+    cfg = ssm_cfg((kind,))
+    key = jax.random.PRNGKey(1)
+    p = init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, cfg.d_model))
+    y1, _ = apply(p, x, cfg, state=None)
+    x2 = x.at[:, 5:].set(99.0)
+    y2, _ = apply(p, x2, cfg, state=None)
+    np.testing.assert_allclose(np.asarray(y1[:, :5]), np.asarray(y2[:, :5]),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------- common
+def test_rms_norm():
+    x = jnp.array([[3.0, 4.0]])
+    w = jnp.ones(2)
+    y = common.rms_norm(x, w, 0.0)
+    rms = np.sqrt((9 + 16) / 2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) / rms, atol=1e-5)
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 8))
+    pos = jnp.arange(4)[None, :]
+    y = common.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), atol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 1, 1, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 8))
+
+    def dot_at(i, j):
+        qi = common.apply_rope(q, jnp.array([[i]]), 10_000.0)
+        kj = common.apply_rope(k, jnp.array([[j]]), 10_000.0)
+        return float((qi * kj).sum())
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), abs=1e-4)
+
+
+def test_causal_mask():
+    m = np.asarray(common.causal_mask(4, 4, 0))
+    assert (m[np.triu_indices(4, 1)] < -1e29).all()
+    assert (np.tril(m) == 0).all()
+
+
+def test_cross_entropy_uniform():
+    v = 7
+    logits = jnp.zeros((3, v))
+    labels = jnp.array([0, 3, 6])
+    ce = common.cross_entropy(logits, labels)
+    assert float(ce) == pytest.approx(np.log(v), rel=1e-5)
+
+
+def test_moe_per_k_dispatch_equals_flat():
+    """The per_k dispatch mode (§Perf deepseek iteration) is bit-identical
+    to flat dispatch when dropless (no capacity races to re-order)."""
+    import dataclasses
+    cfg_flat = moe_cfg(dropless=True)
+    cfg_perk = mini_cfg(family="moe", moe=dataclasses.replace(
+        cfg_flat.moe, dispatch="per_k"))
+    key = jax.random.PRNGKey(8)
+    p = moe_mod.init_moe_params(key, cfg_flat, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg_flat.d_model))
+    y1, a1 = moe_mod.moe_ffn(p, x, cfg_flat)
+    y2, a2 = moe_mod.moe_ffn(p, x, cfg_perk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+    assert float(a1) == pytest.approx(float(a2))
+
+
+def test_moe_expert_padding_identical_outputs():
+    """pad_to adds dead experts only — outputs unchanged."""
+    import dataclasses
+    cfg = moe_cfg(dropless=True)
+    cfg_pad = mini_cfg(family="moe", moe=dataclasses.replace(cfg.moe, pad_to=8))
+    key = jax.random.PRNGKey(9)
+    p = moe_mod.init_moe_params(key, cfg, jnp.float32)
+    p_pad = moe_mod.init_moe_params(key, cfg_pad, jnp.float32)
+    # copy the real experts into the padded bank
+    for k in p["experts"]:
+        p_pad["experts"][k] = p_pad["experts"][k].at[:4].set(p["experts"][k])
+    p_pad["router"] = p["router"]
+    p_pad["shared"] = p.get("shared", p_pad.get("shared"))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, cfg.d_model))
+    y1, _ = moe_mod.moe_ffn(p, x, cfg)
+    y2, _ = moe_mod.moe_ffn(p_pad, x, cfg_pad)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)

@@ -1,0 +1,71 @@
+"""Beyond-paper noise-aware scheduling (the paper's §V limitation #2)."""
+import pytest
+
+from repro.comanager import tenancy
+from repro.comanager.manager import CoManager
+from repro.comanager.simulation import SystemSimulation
+from repro.comanager.worker import CircuitTask, QuantumWorker, WorkerConfig
+
+
+def task(tid, depth=14, demand=5):
+    return CircuitTask(task_id=tid, client_id="c", demand=demand,
+                       service_time=1.0, depth=depth)
+
+
+def test_noise_aware_prefers_clean_worker():
+    m = CoManager(policy="noise_aware")
+    m.register_worker("w_noisy", 10, cru=0.0, t=0, error_rate=0.01)
+    m.register_worker("w_clean", 10, cru=0.9, t=0, error_rate=0.001)
+    # CRU policy would pick w_noisy (lower CRU); noise-aware picks clean
+    assert m.assign(task(1), t=0) == "w_clean"
+
+
+def test_cru_policy_ignores_noise():
+    m = CoManager(policy="cru")
+    m.register_worker("w_noisy", 10, cru=0.0, t=0, error_rate=0.01)
+    m.register_worker("w_clean", 10, cru=0.9, t=0, error_rate=0.001)
+    assert m.assign(task(1), t=0) == "w_noisy"
+
+
+def test_fidelity_floor_excludes_noisy_machine():
+    m = CoManager(policy="noise_aware", fidelity_floor=0.9)
+    m.register_worker("w_noisy", 10, cru=0.0, t=0, error_rate=0.02)
+    # (1-0.02)^14 = 0.75 < 0.9 -> no candidate, circuit queues
+    assert m.assign(task(1, depth=14), t=0) is None
+    # a shallow circuit is fine on the same machine: 0.98^4 = 0.92
+    assert m.assign(task(2, depth=4), t=0) == "w_noisy"
+
+
+def test_floor_trades_runtime_for_retention():
+    def go(policy, floor):
+        tenancy.reset_task_ids()
+        jobs = [tenancy.JobSpec("c", 5, 2, 60, service_override=0.5)]
+        workers = [WorkerConfig("a_clean", 10, error_rate=0.0005),
+                   WorkerConfig("b_noisy", 20, speed=1.5, error_rate=0.015)]
+        return SystemSimulation(workers, jobs, policy=policy,
+                                fidelity_floor=floor).run()
+
+    base = go("cru", 0.0)
+    strict = go("noise_aware", 0.97)
+    assert strict.fidelity_retention > base.fidelity_retention
+    assert strict.makespan > base.makespan      # the price paid
+    assert strict.jobs["c"].n_circuits == 60    # nothing dropped
+
+
+def test_depolarization_model():
+    w = QuantumWorker(WorkerConfig("w", 5, error_rate=0.01))
+    lam = w.depolarization(depth=10)
+    assert lam == pytest.approx(1 - 0.99 ** 10)
+    # P0=1 ideal -> pulled toward 1/2
+    assert w.observed_p0(1.0, 10) == pytest.approx(1 - lam / 2)
+    # noiseless worker is identity
+    w0 = QuantumWorker(WorkerConfig("w0", 5))
+    assert w0.observed_p0(0.73, 99) == 0.73
+
+
+def test_heartbeat_carries_error_rate():
+    m = CoManager(policy="noise_aware")
+    m.register_worker("w", 10, cru=0.0, t=0)
+    w = QuantumWorker(WorkerConfig("w", 10, error_rate=0.007))
+    m.heartbeat(w.heartbeat_payload(5.0), t=5.0)
+    assert m.workers["w"].error_rate == 0.007

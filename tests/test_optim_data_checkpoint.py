@@ -1,0 +1,139 @@
+"""Optimizer / data pipeline / checkpoint substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.data import mnist, pipeline
+from repro.optim import optimizers
+
+
+# -------------------------------------------------------------- optimizers
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw"])
+def test_optimizer_reduces_quadratic(name):
+    opt = optimizers.make(name, 0.1)
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}           # d/dx ||x||^2
+        updates, state = opt.update(grads, state, params)
+        params = optimizers.apply_updates(params, updates)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_sgd_exact_step():
+    opt = optimizers.make("sgd", 0.5)
+    p = {"x": jnp.array([1.0])}
+    s = opt.init(p)
+    u, s = opt.update({"x": jnp.array([2.0])}, s, p)
+    np.testing.assert_allclose(np.asarray(u["x"]), [-1.0])
+
+
+def test_adam_first_step_is_lr_sized():
+    opt = optimizers.make("adam", 0.1)
+    p = {"x": jnp.array([0.0])}
+    s = opt.init(p)
+    u, _ = opt.update({"x": jnp.array([7.0])}, s, p)
+    np.testing.assert_allclose(np.asarray(u["x"]), [-0.1], atol=1e-6)
+
+
+def test_adamw_decay():
+    opt = optimizers.make("adamw", 0.1, weight_decay=0.1)
+    p = {"x": jnp.array([10.0])}
+    s = opt.init(p)
+    u, _ = opt.update({"x": jnp.array([0.0])}, s, p)
+    # pure decay term: -lr * wd * p = -0.1*0.1*10
+    np.testing.assert_allclose(np.asarray(u["x"]), [-0.1], atol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}   # norm 5
+    clipped, gn = optimizers.clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(5.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+    # under the cap: untouched
+    same, _ = optimizers.clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), [3.0])
+
+
+def test_schedule_callable_lr():
+    opt = optimizers.make("sgd", lambda step: 1.0 / step)
+    p = {"x": jnp.array([0.0])}
+    s = opt.init(p)
+    u1, s = opt.update({"x": jnp.array([1.0])}, s, p)
+    u2, s = opt.update({"x": jnp.array([1.0])}, s, p)
+    assert float(u1["x"][0]) == pytest.approx(-1.0)
+    assert float(u2["x"][0]) == pytest.approx(-0.5)
+
+
+# --------------------------------------------------------------------- data
+def test_mnist_determinism_and_shapes():
+    x1, y1 = mnist.make_pair_dataset(3, 9, n_per_class=10, seed=4)
+    x2, y2 = mnist.make_pair_dataset(3, 9, n_per_class=10, seed=4)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (20, 8, 8)
+    assert set(np.unique(y1)) == {0, 1}
+    assert x1.min() >= 0.0 and x1.max() <= 1.0
+
+
+def test_mnist_classes_distinguishable():
+    """Mean images of the two classes differ substantially."""
+    x, y = mnist.make_pair_dataset(1, 8, n_per_class=30, seed=0)
+    m1, m0 = x[y == 1].mean(0), x[y == 0].mean(0)
+    assert np.abs(m1 - m0).mean() > 0.05
+
+
+def test_pipeline_clean():
+    x = np.array([[0.5, 100.0], [0.1, 0.2]], np.float32)
+    out = pipeline.clean(x)
+    assert out.max() <= 1.0 and out.min() >= 0.0
+
+
+def test_pipeline_batches_cover_all_and_shuffle():
+    x = np.arange(20).reshape(10, 2).astype(np.float32)
+    y = np.arange(10)
+    got = list(pipeline.batches(x, y, 5, seed=1))
+    assert len(got) == 2
+    all_labels = sorted(np.concatenate([b[1] for b in got]).tolist())
+    assert all_labels == list(range(10))
+    got2 = list(pipeline.batches(x, y, 5, seed=1))
+    np.testing.assert_array_equal(got[0][1], got2[0][1])  # deterministic
+
+
+def test_pipeline_drop_remainder():
+    x = np.zeros((7, 1), np.float32)
+    y = np.zeros(7)
+    assert len(list(pipeline.batches(x, y, 3))) == 2
+    assert len(list(pipeline.batches(x, y, 3, drop_remainder=False))) == 3
+
+
+def test_synthetic_tokens():
+    t = pipeline.synthetic_tokens(0, 2, 8, 100)
+    assert t.shape == (2, 8) and t.dtype == jnp.int32
+    assert int(t.max()) < 100 and int(t.min()) >= 0
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)},
+            "lst": [jnp.zeros(2), jnp.ones(3)]}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    checkpoint.save(path, tree, metadata={"step": 7})
+    restored, meta = checkpoint.load(path, like=tree)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_flat_load(tmp_path):
+    path = os.path.join(tmp_path, "c.npz")
+    checkpoint.save(path, {"x": jnp.array([1.0, 2.0])})
+    flat, meta = checkpoint.load(path)
+    np.testing.assert_allclose(flat["x"], [1.0, 2.0])

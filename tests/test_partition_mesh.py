@@ -1,0 +1,128 @@
+"""Partitioner / mesh unit tests (host mesh — no 512-device forcing here)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import partition
+from repro.launch.mesh import batch_axes, data_axis_size, make_host_mesh
+
+
+class FakeMesh:
+    """Shape-only stand-in so Partitioner logic is testable without
+    actually materializing 256 devices."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        import numpy as _np
+        self.devices = _np.empty(tuple(shape.values()), dtype=object)
+
+
+def pod_partitioner():
+    return partition.Partitioner.__new__(partition.Partitioner), None
+
+
+def make_partitioner(shape):
+    p = partition.Partitioner.__new__(partition.Partitioner)
+    mesh = FakeMesh(shape)
+    p.mesh = mesh
+    p.model_n = shape.get("model", 1)
+    p.data_n = shape.get("data", 1)
+    p.batch_ax = tuple(a for a in ("pod", "data") if a in shape)
+    p.batch_n = int(np.prod([shape[a] for a in p.batch_ax]))
+    return p
+
+
+SINGLE = {"data": 16, "model": 16}
+MULTI = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_param_spec_2d_matrix():
+    p = make_partitioner(SINGLE)
+    assert p.param_spec("lm_head", (1024, 4096)) == P("data", "model")
+    # non-divisible dims stay unsharded
+    assert p.param_spec("lm_head", (1000, 4096)) == P(None, "model")
+    assert p.param_spec("lm_head", (1024, 100)) == P("data", None)
+
+
+def test_param_spec_embed_vocab_parallel():
+    p = make_partitioner(SINGLE)
+    assert p.param_spec("embed", (49152, 960)) == P("model", "data")
+
+
+def test_param_spec_block_leading_period_axis():
+    p = make_partitioner(SINGLE)
+    spec = p.param_spec("blocks/0/mixer/wq", (12, 960, 960))
+    assert spec == P(None, "data", "model")
+
+
+def test_param_spec_experts():
+    p = make_partitioner(SINGLE)
+    # E=48 divides 16 -> expert parallel; E=40 does not -> replicated E
+    assert p.param_spec("blocks/0/ffn/experts/w_in", (12, 48, 1536, 512)) \
+        == P(None, "model", "data", None)
+    assert p.param_spec("blocks/0/ffn/experts/w_in", (12, 40, 1536, 512)) \
+        == P(None, None, "data", None)
+
+
+def test_param_spec_vectors_replicated():
+    p = make_partitioner(SINGLE)
+    assert p.param_spec("final_norm", (960,)) == P(None)
+    assert p.param_spec("opt/step", ()) == P()
+
+
+def test_batch_spec_single_and_multi_pod():
+    ps = make_partitioner(SINGLE)
+    assert ps.batch_spec((256, 4096)) == P("data", None)
+    pm = make_partitioner(MULTI)
+    assert pm.batch_spec((256, 4096)) == P(("pod", "data"), None)
+    # batch=1 (long_500k): unshardable -> replicated batch dim
+    assert pm.batch_spec((1, 4096)) == P(None, None)
+
+
+def test_cache_spec_batch_shardable():
+    p = make_partitioner(SINGLE)
+    # (period, B, T, kv, hd): batch over data, T over model
+    spec = p.cache_spec("blocks/0/k", (12, 128, 32768, 8, 64))
+    assert spec[1] == "data" and spec[2] == "model"
+
+
+def test_cache_spec_context_parallel_fallback():
+    p = make_partitioner(SINGLE)
+    # batch=1: length axis takes every available device
+    spec = p.cache_spec("blocks/0/k", (12, 1, 524288, 8, 64))
+    assert spec[1] is None
+    assert spec[2] == ("data", "model")
+
+
+@given(rows=st.sampled_from([1, 2, 8, 64, 100, 256, 4096]),
+       cols=st.sampled_from([1, 60, 128, 960, 2560, 49152]))
+def test_param_spec_always_valid(rows, cols):
+    """Whatever the shape, the spec's sharded dims must divide."""
+    p = make_partitioner(SINGLE)
+    spec = p.param_spec("w", (rows, cols))
+    for dim, ax in zip((rows, cols), spec):
+        if ax == "data":
+            assert dim % 16 == 0
+        if ax == "model":
+            assert dim % 16 == 0
+
+
+def test_host_mesh_and_axes():
+    mesh = make_host_mesh()
+    assert batch_axes(mesh) == ("data",)
+    assert data_axis_size(mesh) == 1
+
+
+def test_opt_shardings_mirror_params():
+    p = make_partitioner(SINGLE)
+    params = {"w": jax.ShapeDtypeStruct((1024, 4096), jnp.float32)}
+    opt = {"m": {"w": jax.ShapeDtypeStruct((1024, 4096), jnp.float32)},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    # use the host mesh for real NamedShardings
+    real = partition.Partitioner(make_host_mesh())
+    shard = real.opt_shardings(opt, params)
+    assert shard["m"]["w"].spec == real.param_spec("w", (1024, 4096))
+    assert shard["step"].spec == P()

@@ -1,0 +1,115 @@
+"""QuClassi model + distributed-executor equivalence + training integration.
+
+The paper's key accuracy claim is that DISTRIBUTION DOES NOT CHANGE THE MATH:
+the distributed system reaches the same accuracy as the non-distributed one
+(<2% difference, §IV-B).  In our system this is exact: any executor returns
+fidelities in bank order, so gradients are bit-identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comanager import dataplane
+from repro.core import quclassi, shift_rule
+from repro.core.quclassi import QuClassiConfig
+from repro.core.trainer import train
+from repro.data import mnist
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    x, y = mnist.make_pair_dataset(1, 5, n_per_class=16, seed=0)
+    return jnp.asarray(x[:8]), jnp.asarray(y[:8])
+
+
+def test_init_params_shapes():
+    cfg = QuClassiConfig(qc=5, n_layers=2)
+    p = quclassi.init_params(cfg, jax.random.PRNGKey(0))
+    assert p["theta"].shape == (2, cfg.n_theta)
+    assert p["w"].shape == (16, cfg.n_angles)
+    assert float(p["theta"].min()) >= 0.0
+    assert float(p["theta"].max()) <= np.pi
+
+
+def test_class_fidelities_shape_and_range(small_data):
+    x, _ = small_data
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    p = quclassi.init_params(cfg, jax.random.PRNGKey(0))
+    f = quclassi.class_fidelities(cfg, p, x)
+    assert f.shape == (8, 2)
+    assert float(f.min()) >= -1e-6 and float(f.max()) <= 1 + 1e-6
+
+
+@pytest.mark.parametrize("nl", [1, 2])
+def test_shift_equals_autodiff_exact_layers(small_data, nl):
+    x, y = small_data
+    cfg = QuClassiConfig(qc=5, n_layers=nl)
+    p = quclassi.init_params(cfg, jax.random.PRNGKey(1))
+    l1, g1, f1 = quclassi.grad_shift(cfg, p, x, y)
+    l2, g2, f2 = quclassi.grad_autodiff(cfg, p, x, y)
+    assert abs(float(l1 - l2)) < 1e-5
+    np.testing.assert_allclose(np.asarray(g1["theta"]), np.asarray(g2["theta"]),
+                               atol=3e-5)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=1e-5)
+
+
+def test_distribution_does_not_change_gradients(small_data):
+    """Round-robin over 4 'workers' == single-shot local execution."""
+    x, y = small_data
+    cfg = QuClassiConfig(qc=5, n_layers=2)
+    p = quclassi.init_params(cfg, jax.random.PRNGKey(2))
+    spec = cfg.spec
+    n_bank = (2 * cfg.n_theta + 1) * x.shape[0] * cfg.n_patches
+    assignment = dataplane.round_robin_assignment(n_bank, 4)
+    dist = dataplane.worker_batched_executor(spec, assignment, 4)
+
+    l1, g1, f1 = quclassi.grad_shift(cfg, p, x, y, executor=dist)
+    l2, g2, f2 = quclassi.grad_shift(cfg, p, x, y)
+    np.testing.assert_allclose(np.asarray(g1["theta"]), np.asarray(g2["theta"]),
+                               atol=1e-5)
+    np.testing.assert_allclose(float(l1), float(l2), atol=1e-5)
+
+
+def test_arbitrary_assignment_same_result(small_data):
+    """Any scheduler decision yields the same fidelities (order restored)."""
+    x, y = small_data
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    p = quclassi.init_params(cfg, jax.random.PRNGKey(3))
+    banks, _ = quclassi.build_class_banks(cfg, p, x)
+    bank = banks[0]
+    rng = np.random.default_rng(0)
+    assignment = rng.integers(0, 3, bank.n_circuits)
+    ex = dataplane.worker_batched_executor(cfg.spec, assignment, 3)
+    f_dist = ex(bank.theta, bank.data)
+    f_local = shift_rule.default_executor(cfg.spec)(bank.theta, bank.data)
+    np.testing.assert_allclose(np.asarray(f_dist), np.asarray(f_local), atol=1e-5)
+
+
+def test_total_bank_circuits():
+    cfg = QuClassiConfig(qc=5, n_layers=1)   # n_theta=4, 8x8 img -> 9 patches
+    assert quclassi.total_bank_circuits(cfg, batch=2) == 2 * 2 * 9 * 9
+
+
+@pytest.mark.slow
+def test_training_learns():
+    """End-to-end Algorithm 1: accuracy improves well above chance."""
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    x, y = mnist.make_pair_dataset(1, 5, n_per_class=40, seed=0)
+    (xtr, ytr), (xte, yte) = mnist.train_test_split(x, y)
+    rep = train(cfg, (xtr, ytr), (xte, yte), epochs=10, batch_size=16,
+                lr=0.05, optimizer="adam", grad_mode="autodiff")
+    assert rep.final_test_accuracy >= 0.8
+    assert rep.epochs[-1].loss < rep.epochs[0].loss
+
+
+@pytest.mark.slow
+def test_training_shift_mode_one_epoch():
+    """The distributed-gradient path trains (loss decreases)."""
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    x, y = mnist.make_pair_dataset(3, 6, n_per_class=12, seed=1)
+    (xtr, ytr), (xte, yte) = mnist.train_test_split(x, y)
+    rep = train(cfg, (xtr, ytr), (xte, yte), epochs=2, batch_size=6,
+                lr=0.05, optimizer="adam", grad_mode="shift")
+    assert rep.epochs[0].circuits_executed > 0
+    assert np.isfinite(rep.epochs[-1].loss)

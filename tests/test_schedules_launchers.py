@@ -1,0 +1,53 @@
+"""LR schedules + launcher smoke tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers, schedules
+
+
+def test_constant():
+    fn = schedules.constant(0.3)
+    assert float(fn(jnp.int32(100))) == pytest.approx(0.3)
+
+
+def test_warmup_cosine_shape():
+    fn = schedules.warmup_cosine(1.0, warmup_steps=10, total_steps=110,
+                                 final_frac=0.1)
+    # linear warmup
+    assert float(fn(jnp.int32(5))) == pytest.approx(0.5)
+    # peak at end of warmup
+    assert float(fn(jnp.int32(10))) == pytest.approx(1.0, abs=1e-6)
+    # monotone decay after warmup down to final_frac
+    vals = [float(fn(jnp.int32(s))) for s in range(10, 111, 10)]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert vals[-1] == pytest.approx(0.1, abs=1e-6)
+
+
+def test_inverse_sqrt():
+    fn = schedules.inverse_sqrt(1.0, warmup_steps=100)
+    assert float(fn(jnp.int32(50))) == pytest.approx(0.5)
+    assert float(fn(jnp.int32(100))) == pytest.approx(1.0)
+    assert float(fn(jnp.int32(400))) == pytest.approx(0.5)
+
+
+def test_schedule_drives_optimizer():
+    opt = optimizers.make("sgd", schedules.inverse_sqrt(1.0, warmup_steps=4))
+    p = {"x": jnp.zeros(1)}
+    s = opt.init(p)
+    u1, s = opt.update({"x": jnp.ones(1)}, s, p)
+    assert float(u1["x"][0]) == pytest.approx(-0.25)   # step 1 of 4 warmup
+
+
+# ------------------------------------------------------------- launchers
+def test_train_launcher_reduced():
+    from repro.launch.train import run_reduced
+    loss = run_reduced("smollm-360m", steps_n=3, batch=2, seq=16)
+    assert np.isfinite(loss)
+
+
+def test_serve_launcher_reduced(capsys):
+    from repro.launch.serve import run_reduced
+    run_reduced("smollm-360m", batch=2, prompt_len=4, gen=4)
+    out = capsys.readouterr().out
+    assert "decode steps" in out

@@ -1,0 +1,111 @@
+"""Task Segmentation (paper §III-A) + data-encoding tests, incl. properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import encoding, segmentation
+from repro.core.segmentation import SegmentationConfig
+
+
+def test_paper_settings_patch_count():
+    # paper: 8x8 image, w=4, s=2 -> 3x3 patches
+    cfg = SegmentationConfig(filter_width=4, stride=2, n_filters=4)
+    assert segmentation.n_patches(8, 8, cfg) == (3, 3)
+    assert segmentation.subtasks_per_image(8, 8, cfg) == 36
+
+
+def test_segment_contents():
+    cfg = SegmentationConfig(filter_width=2, stride=2, n_filters=1)
+    img = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4)
+    out = segmentation.segment(img, cfg)
+    assert out.shape == (1, 4, 4)
+    np.testing.assert_allclose(np.asarray(out[0, 0]), [0, 1, 4, 5])
+    np.testing.assert_allclose(np.asarray(out[0, 3]), [10, 11, 14, 15])
+
+
+def test_segment_padding():
+    cfg = SegmentationConfig(filter_width=3, stride=2, n_filters=1)
+    img = jnp.ones((1, 4, 4), jnp.float32)
+    ph, pw = segmentation.n_patches(4, 4, cfg)
+    out = segmentation.segment(img, cfg)
+    assert out.shape == (1, ph * pw, 9)
+    # last patch covers rows/cols 2..4 -> one padded row+col of zeros
+    last = np.asarray(out[0, -1]).reshape(3, 3)
+    np.testing.assert_allclose(last[:2, :2], 1.0)
+    np.testing.assert_allclose(last[2, :], 0.0)
+    np.testing.assert_allclose(last[:, 2], 0.0)
+
+
+@given(h=st.integers(4, 16), w=st.integers(4, 16),
+       fw=st.integers(2, 5), s=st.integers(1, 4))
+def test_coverage_property(h, w, fw, s):
+    """Every source pixel is covered by at least one patch (requires
+    stride <= filter width, as in the paper's s=2 < w=4 setting)."""
+    from hypothesis import assume
+    assume(s <= fw)
+    cfg = SegmentationConfig(filter_width=fw, stride=s, n_filters=1)
+    cov = segmentation.reassemble_coverage(h, w, cfg)
+    assert cov.shape == (h, w)
+    assert (cov >= 1).all()
+
+
+@given(h=st.integers(4, 12), w=st.integers(4, 12),
+       fw=st.integers(2, 4), s=st.integers(1, 3), b=st.integers(1, 3))
+def test_segment_shape_property(h, w, fw, s, b):
+    cfg = SegmentationConfig(filter_width=fw, stride=s, n_filters=1)
+    ph, pw = segmentation.n_patches(h, w, cfg)
+    imgs = jnp.ones((b, h, w), jnp.float32)
+    out = segmentation.segment(imgs, cfg)
+    assert out.shape == (b, ph * pw, fw * fw)
+
+
+def test_segment_is_jittable():
+    import jax
+    cfg = SegmentationConfig()
+    f = jax.jit(lambda x: segmentation.segment(x, cfg))
+    out = f(jnp.ones((2, 8, 8)))
+    assert out.shape[0] == 2
+
+
+# ---------------------------------------------------------------- encoding
+def test_rotation_angles_exact_size():
+    patch = jnp.array([0.0, 0.5, 1.0, 0.25])
+    a = encoding.rotation_angles(patch, 4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(patch) * np.pi, atol=1e-6)
+
+
+def test_rotation_angles_pool_and_tile():
+    patch = jnp.arange(8, dtype=jnp.float32) / 8.0
+    pooled = encoding.rotation_angles(patch, 4)
+    assert pooled.shape == (4,)
+    np.testing.assert_allclose(np.asarray(pooled)[0],
+                               np.pi * (0 + 1 / 8) / 2, atol=1e-6)
+    tiled = encoding.rotation_angles(jnp.array([0.5, 1.0]), 5)
+    assert tiled.shape == (5,)
+    np.testing.assert_allclose(np.asarray(tiled),
+                               np.pi * np.array([0.5, 1, 0.5, 1, 0.5]), atol=1e-6)
+
+
+def test_rotation_angle_roundtrip():
+    patch = jnp.array([0.1, 0.9, 0.4, 0.7])
+    a = encoding.rotation_angles(patch, 4)
+    np.testing.assert_allclose(np.asarray(encoding.angles_to_unit_interval(a)),
+                               np.asarray(patch), atol=1e-6)
+
+
+@given(vals=st.lists(st.floats(-5, 5, allow_nan=False), min_size=4, max_size=4))
+def test_amplitude_encoding_normalized(vals):
+    re, im = encoding.amplitude_encoding(jnp.asarray(vals, jnp.float32))
+    norm = float(jnp.sum(re * re + im * im))
+    assert abs(norm - 1.0) < 1e-5
+
+
+def test_amplitude_encoding_zero_fallback():
+    re, im = encoding.amplitude_encoding(jnp.zeros(8))
+    np.testing.assert_allclose(np.asarray(re), np.eye(8)[0], atol=1e-7)
+
+
+def test_amplitude_encoding_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        encoding.amplitude_encoding(jnp.ones(6))

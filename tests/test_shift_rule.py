@@ -1,0 +1,120 @@
+"""Parameter-shift rule tests: bank layout, exactness on single/dual layers,
+four-term correction for controlled rotations, gradient assembly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import circuits, fidelity as fid, shift_rule
+
+
+def _setup(qc, nl, b=3, seed=0):
+    spec = circuits.build_quclassi_circuit(qc, nl)
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.uniform(key, (spec.n_theta,)) * np.pi
+    data = jax.random.uniform(jax.random.fold_in(key, 1), (b, spec.n_data)) * np.pi
+    labels = jnp.asarray(np.random.default_rng(seed).integers(0, 2, b), jnp.float32)
+    return spec, theta, data, labels
+
+
+def test_bank_layout():
+    spec, theta, data, _ = _setup(5, 2, b=3)
+    bank = shift_rule.build_bank(theta, data)
+    p, b = spec.n_theta, 3
+    assert bank.n_circuits == b * (2 * p + 1)
+    # first B rows are unshifted
+    np.testing.assert_allclose(np.asarray(bank.theta[:b]),
+                               np.tile(np.asarray(theta), (b, 1)))
+    # row for (plus-shift, param j, sample i)
+    j, i = 2, 1
+    row = bank.theta[b + j * b + i]
+    expect = np.asarray(theta).copy()
+    expect[j] += np.pi / 2
+    np.testing.assert_allclose(np.asarray(row), expect, atol=1e-6)
+    # data tiled in the same order
+    np.testing.assert_allclose(np.asarray(bank.data[b + j * b + i]),
+                               np.asarray(data[i]), atol=1e-6)
+
+
+def test_split_results_roundtrip():
+    spec, theta, data, _ = _setup(5, 1, b=4)
+    bank = shift_rule.build_bank(theta, data)
+    f = jnp.arange(bank.n_circuits, dtype=jnp.float32)
+    f0, fp, fm = bank.split_results(f)
+    assert f0.shape == (4,)
+    assert fp.shape == (spec.n_theta, 4)
+    assert fm.shape == (spec.n_theta, 4)
+    np.testing.assert_allclose(np.asarray(f0), [0, 1, 2, 3])
+    np.testing.assert_allclose(np.asarray(fp[0]), [4, 5, 6, 7])
+
+
+def test_four_term_bank_size():
+    spec, theta, data, _ = _setup(5, 3, b=2)
+    bank = shift_rule.build_bank(theta, data, four_term=True)
+    assert bank.n_circuits == 2 * (4 * spec.n_theta + 1)
+
+
+def test_controlled_param_indices():
+    spec = circuits.build_quclassi_circuit(5, 3)
+    idx = shift_rule.controlled_param_indices(spec)
+    # m=2: single(4 params 0-3) + dual(2 params 4-5) + entangle(2 params 6-7)
+    assert idx == (6, 7)
+    assert shift_rule.controlled_param_indices(
+        circuits.build_quclassi_circuit(5, 2)) == ()
+
+
+@pytest.mark.parametrize("qc,nl", [(5, 1), (5, 2), (7, 1), (7, 2)])
+def test_two_term_exact_without_controlled_gates(qc, nl):
+    """Exact up to float32: the BCE chain dL/dF = (F-y)/(F(1-F)) amplifies
+    fidelity round-off by ~1/F(1-F), hence rtol rather than tight atol."""
+    spec, theta, data, labels = _setup(qc, nl)
+    _, g_shift, f_shift = shift_rule.parameter_shift_grad(spec, theta, data, labels)
+    _, g_auto, f_auto = shift_rule.autodiff_grad(spec, theta, data, labels)
+    np.testing.assert_allclose(np.asarray(g_shift), np.asarray(g_auto),
+                               rtol=5e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f_shift), np.asarray(f_auto), atol=1e-5)
+
+    def pure_fid_grads(t):
+        """Compare dF/dtheta itself (no BCE amplification) tightly."""
+        return fid.fidelity_batch(spec, jnp.broadcast_to(t, (data.shape[0],)
+                                                         + t.shape), data).sum()
+    g_f_auto = jax.grad(pure_fid_grads)(theta)
+    bank = shift_rule.build_bank(theta, data)
+    fids = shift_rule.default_executor(spec)(bank.theta, bank.data)
+    _, fp, fm = bank.split_results(fids)[:3]
+    g_f_shift = ((fp - fm) / 2.0).sum(-1)
+    np.testing.assert_allclose(np.asarray(g_f_shift), np.asarray(g_f_auto),
+                               atol=5e-5)
+
+
+@pytest.mark.parametrize("qc", [5, 7])
+def test_four_term_exact_with_controlled_gates(qc):
+    spec, theta, data, labels = _setup(qc, 3)
+    _, g4, _ = shift_rule.parameter_shift_grad(spec, theta, data, labels,
+                                               exact_controlled=True)
+    _, ga, _ = shift_rule.autodiff_grad(spec, theta, data, labels)
+    np.testing.assert_allclose(np.asarray(g4), np.asarray(ga), atol=3e-4)
+
+
+def test_two_term_biased_only_on_controlled_params():
+    spec, theta, data, labels = _setup(5, 3)
+    _, g2, _ = shift_rule.parameter_shift_grad(spec, theta, data, labels)
+    _, ga, _ = shift_rule.autodiff_grad(spec, theta, data, labels)
+    err = np.abs(np.asarray(g2) - np.asarray(ga))
+    ctrl = set(shift_rule.controlled_param_indices(spec))
+    for j in range(spec.n_theta):
+        if j not in ctrl:
+            assert err[j] < 2e-5, (j, err[j])
+
+
+def test_executor_hook_receives_full_bank():
+    spec, theta, data, labels = _setup(5, 1, b=2)
+    seen = {}
+
+    def executor(t, d):
+        seen["shape"] = (t.shape, d.shape)
+        return fid.fidelity_batch(spec, t, d)
+
+    shift_rule.parameter_shift_grad(spec, theta, data, labels, executor=executor)
+    c = 2 * (2 * spec.n_theta + 1)
+    assert seen["shape"] == ((c, spec.n_theta), (c, spec.n_data))

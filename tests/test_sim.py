@@ -1,0 +1,136 @@
+"""Statevector simulator tests: apply_gate vs a dense complex-matrix oracle,
+norm preservation (property), qubit-ordering conventions, marginals."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import gates as G, sim
+
+
+def dense_oracle(n, u, qubits):
+    """Build the full 2^n x 2^n complex matrix for gate u on `qubits`
+    (qubit 0 = most significant bit, matching sim.py's convention)."""
+    m = np.asarray(u[0]) + 1j * np.asarray(u[1])
+    k = len(qubits)
+    full = np.zeros((2 ** n, 2 ** n), complex)
+    rest = [q for q in range(n) if q not in qubits]
+    for col in range(2 ** n):
+        bits = [(col >> (n - 1 - q)) & 1 for q in range(n)]
+        sub_in = 0
+        for i, q in enumerate(qubits):
+            sub_in = (sub_in << 1) | bits[q]
+        for sub_out in range(2 ** k):
+            amp = m[sub_out, sub_in]
+            if amp == 0:
+                continue
+            out_bits = list(bits)
+            for i, q in enumerate(qubits):
+                out_bits[q] = (sub_out >> (k - 1 - i)) & 1
+            row = 0
+            for b in out_bits:
+                row = (row << 1) | b
+            full[row, col] += amp
+    return full
+
+
+def random_state(n, rng, batch=()):
+    v = rng.normal(size=batch + (2 ** n,)) + 1j * rng.normal(size=batch + (2 ** n,))
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    return (jnp.asarray(v.real, jnp.float32), jnp.asarray(v.imag, jnp.float32))
+
+
+CASES = [
+    ("h", (0,), 1), ("h", (1,), 3), ("x", (2,), 3),
+    ("rx", (0,), 2), ("ry", (1,), 2), ("rz", (2,), 4),
+    ("ryy", (0, 1), 3), ("rzz", (1, 2), 3), ("ryy", (0, 2), 3),
+    ("cry", (0, 1), 2), ("crz", (2, 0), 3),
+    ("swap", (0, 2), 3), ("cswap", (0, 1, 2), 3), ("cswap", (2, 0, 4), 5),
+]
+
+
+@pytest.mark.parametrize("name,qubits,n", CASES)
+def test_apply_gate_matches_dense_oracle(name, qubits, n):
+    rng = np.random.default_rng(hash((name, qubits, n)) % 2 ** 31)
+    ctor, k, takes_angle = G.GATES[name]
+    u = ctor(0.6137) if takes_angle else ctor()
+    st_in = random_state(n, rng)
+    out = sim.apply_gate(st_in, u, qubits, n)
+    got = np.asarray(out[0]) + 1j * np.asarray(out[1])
+
+    full = dense_oracle(n, u, qubits)
+    vin = np.asarray(st_in[0]) + 1j * np.asarray(st_in[1])
+    np.testing.assert_allclose(got, full @ vin, atol=1e-5)
+
+
+def test_apply_gate_batched_matches_loop():
+    rng = np.random.default_rng(3)
+    n, u = 3, G.ry(1.01)
+    st_in = random_state(n, rng, batch=(4,))
+    out = sim.apply_gate(st_in, u, (1,), n)
+    for b in range(4):
+        single = sim.apply_gate((st_in[0][b], st_in[1][b]), u, (1,), n)
+        np.testing.assert_allclose(out[0][b], single[0], atol=1e-6)
+        np.testing.assert_allclose(out[1][b], single[1], atol=1e-6)
+
+
+@given(theta=st.floats(-np.pi, np.pi), qubit=st.integers(0, 3),
+       gate=st.sampled_from(["rx", "ry", "rz", "h"]))
+def test_norm_preserved(theta, qubit, gate):
+    n = 4
+    ctor, _, takes_angle = G.GATES[gate]
+    u = ctor(jnp.float32(theta)) if takes_angle else ctor()
+    state = sim.zero_state(n)
+    state = sim.apply_gate(state, G.h(), (0,), n)  # spread amplitude
+    state = sim.apply_gate(state, u, (qubit,), n)
+    assert abs(float(sim.state_norm(state)) - 1.0) < 1e-5
+
+
+def test_zero_state():
+    re, im = sim.zero_state(3, batch=(2,))
+    assert re.shape == (2, 8) and im.shape == (2, 8)
+    np.testing.assert_allclose(re[:, 0], 1.0)
+    assert float(jnp.abs(re[:, 1:]).max()) == 0.0
+    assert float(jnp.abs(im).max()) == 0.0
+
+
+def test_qubit0_is_most_significant():
+    n = 2
+    state = sim.zero_state(n)
+    state = sim.apply_gate(state, G.x(), (0,), n)  # |10>
+    p = np.asarray(sim.probabilities(state))
+    assert p.argmax() == 2  # basis index 0b10
+
+
+def test_marginal_p0():
+    n = 2
+    state = sim.zero_state(n)
+    state = sim.apply_gate(state, G.h(), (0,), n)     # (|00>+|10>)/sqrt2
+    np.testing.assert_allclose(float(sim.marginal_p0(state, 0, n)), 0.5, atol=1e-6)
+    np.testing.assert_allclose(float(sim.marginal_p0(state, 1, n)), 1.0, atol=1e-6)
+
+
+def test_run_circuit_angle_sources():
+    spec = sim.CircuitSpec(
+        n_qubits=1,
+        ops=(sim.Op("ry", (0,), ("theta", 0)),
+             sim.Op("ry", (0,), ("data", 0)),
+             sim.Op("ry", (0,), ("const", 0.25))),
+        n_theta=1, n_data=1)
+    theta = jnp.array([0.3])
+    data = jnp.array([0.45])
+    out = sim.run_circuit(spec, theta, data)
+    expect = sim.run_circuit(
+        sim.CircuitSpec(1, (sim.Op("ry", (0,), ("const", 1.0)),), 0, 0),
+        jnp.zeros(0), jnp.zeros(0))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(expect[0]), atol=1e-6)
+
+
+def test_op_validates_arity():
+    with pytest.raises(AssertionError):
+        sim.Op("ry", (0, 1), ("theta", 0))       # 1q gate, 2 qubits
+    with pytest.raises(AssertionError):
+        sim.Op("h", (0,), ("theta", 0))          # h takes no angle
+    with pytest.raises(AssertionError):
+        sim.Op("ry", (0,))                       # ry needs an angle
