@@ -21,7 +21,6 @@ def make_jobs(scale: float = 1.0):
     """Fig-6 jobs are WORKER-bound: the e2-medium quantum simulators carry
     the per-circuit cost (1/GCP-rate), the client side only dispatches."""
     from repro.comanager.worker import PAPER_RATES_GCP
-    tenancy.reset_task_ids()
     jobs = []
     for cid, qc, nl in CLIENTS:
         n = max(8, int(PD.N_CIRCUITS[(qc, nl)] * scale))

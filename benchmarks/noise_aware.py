@@ -32,7 +32,6 @@ WORKERS = [
 
 
 def run(policy: str, n_circuits: int = 480, fidelity_floor: float = 0.0):
-    tenancy.reset_task_ids()
     jobs = [tenancy.JobSpec("client", 5, 2, n_circuits, service_override=0.33)]
     sim = SystemSimulation(WORKERS, jobs, policy=policy, fair_queue=True,
                            fidelity_floor=fidelity_floor,

@@ -45,6 +45,11 @@ def main() -> None:
     from benchmarks import noise_aware
     noise_aware.main()
 
+    section("Serving gateway: cross-tenant circuit-bank coalescing "
+            "(beyond paper)")
+    from benchmarks import gateway_throughput
+    gateway_throughput.main(run_kernel=args.full)
+
     if args.full:
         from benchmarks import accuracy
         section("§IV-B accuracy: distributed vs non-distributed")

@@ -12,7 +12,6 @@ from repro.comanager.simulation import SystemSimulation, homogeneous_workers
 
 
 def run_config(qc, layers, n_workers, cal):
-    tenancy.reset_task_ids()
     jobs = [tenancy.JobSpec("client", qc, layers, cal.n_circuits,
                             service_override=cal.t_quantum)]
     workers = homogeneous_workers(n_workers, max_qubits=qc, contention=0.0)

@@ -13,7 +13,6 @@ from repro.comanager.simulation import SystemSimulation, homogeneous_workers
 
 
 def run_config(qc: int, layers: int, n_workers: int, cal: PD.Calibration):
-    tenancy.reset_task_ids()
     jobs = [tenancy.JobSpec("client", qc, layers, cal.n_circuits,
                             service_override=cal.t_quantum)]
     workers = homogeneous_workers(n_workers, max_qubits=64, contention=0.0)

@@ -24,7 +24,6 @@ N_WORKERS = 4
 def comanaged_executor(cfg: QuClassiConfig, n_bank: int):
     """Build an executor whose worker assignment comes from an actual
     co-Manager run (Algorithm 2) over this bank."""
-    tenancy.reset_task_ids()
     jobs = [tenancy.JobSpec("client", cfg.qc, cfg.n_layers, n_bank,
                             service_override=0.05)]
     workers = homogeneous_workers(N_WORKERS, max_qubits=2 * cfg.qc)

@@ -1,0 +1,68 @@
+"""Online serving gateway demo: streaming circuits from concurrent tenants
+are coalesced across clients into lane-aligned Pallas mega-batches, placed by
+the co-Manager, and executed on the fused VQC kernel — then the same gateway
+drives a real QuClassi training step.
+
+Run:  PYTHONPATH=src python examples/gateway_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quclassi
+from repro.core.quclassi import QuClassiConfig
+from repro.data import mnist
+from repro.serve import GatewayRuntime
+
+
+def streaming_demo():
+    """Two tenants submit interleaved; their circuits share kernel batches."""
+    print("=== cross-tenant coalescing: alice + bob share mega-batches ===")
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    rt = GatewayRuntime(target=128, deadline=0.25)
+    rt.gateway.register_client("alice", weight=2.0)   # alice paid for 2x share
+    rt.gateway.register_client("bob", weight=1.0)
+
+    rng = np.random.default_rng(0)
+    futures = []
+    now = rt.dispatcher.clock
+    for i in range(96):                      # interleaved open-loop streams
+        for cid in ("alice", "bob"):
+            theta = jnp.asarray(rng.uniform(0, np.pi, cfg.n_theta), jnp.float32)
+            data = jnp.asarray(rng.uniform(0, np.pi, cfg.n_angles), jnp.float32)
+            futures.append(rt.gateway.submit(cid, cfg.spec, (theta, data), now()))
+    rt.dispatcher.drain()
+
+    for wid, n, clients in rt.dispatcher.batch_log:
+        print(f"  batch of {n:3d} circuits -> {wid}  tenants={clients}")
+    s = rt.telemetry.summary()
+    print(f"  lane fill {s['lane_fill']:.0%}, "
+          f"{s['total_completed']} circuits in {s['batches']} kernel launches")
+    for t in s["tenants"]:
+        print(f"  {t['client']:6s} p50={t['p50_latency_s']*1e3:.1f}ms "
+              f"p99={t['p99_latency_s']*1e3:.1f}ms")
+    assert all(f.done for f in futures)
+
+
+def training_demo():
+    """QuClassi training drives the real kernel through the gateway."""
+    print("\n=== gateway-backed training (grad_shift via serve/) ===")
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    x, y = mnist.make_pair_dataset(3, 9, n_per_class=8, seed=0)
+    x, y = jnp.asarray(x[:4]), jnp.asarray(y[:4])
+    params = quclassi.init_params(cfg, jax.random.PRNGKey(0))
+
+    rt = GatewayRuntime(target=128, deadline=0.5)
+    ex = rt.executor(cfg.spec, "trainer")
+    loss_gw, g_gw, _ = quclassi.grad_shift(cfg, params, x, y, executor=ex)
+    loss_local, g_local, _ = quclassi.grad_shift(cfg, params, x, y)
+    err = float(jnp.abs(g_gw["theta"] - g_local["theta"]).max())
+    print(f"  loss via gateway {float(loss_gw):.6f} == local {float(loss_local):.6f}")
+    print(f"  max |grad diff| = {err:.2e} (scheduling never changes the math)")
+    print(f"  kernel launches: {len(rt.dispatcher.batch_log)}, "
+          f"lane fill {rt.telemetry.lane_fill:.0%}")
+
+
+if __name__ == "__main__":
+    streaming_demo()
+    training_demo()

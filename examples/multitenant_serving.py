@@ -13,7 +13,6 @@ from repro.comanager.worker import WorkerConfig
 
 
 def run(tenancy_mode: str, failures=None):
-    tenancy.reset_task_ids()
     jobs = [
         tenancy.JobSpec("alice-5q1l", 5, 1, 240, service_override=0.26),
         tenancy.JobSpec("bob-5q2l", 5, 2, 240, service_override=0.33),

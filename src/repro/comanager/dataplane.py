@@ -24,6 +24,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax.shard_map landed after 0.4.x (where it lives in experimental); the
+# "skip varying-across-mesh checks" kwarg was renamed check_rep -> check_vma
+# at a different point, so detect the kwarg itself, not just the symbol.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+import inspect as _inspect
+
+_SM_SKIP_CHECKS = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
+
 from repro.core.sim import CircuitSpec
 from repro.kernels import ops as kops
 
@@ -33,20 +47,29 @@ def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
     """Executor that mimics per-worker execution.
 
     ``assignment[i] = worker index for bank row i``.  Rows are grouped per
-    worker, executed as one fused-kernel batch each, and scattered back.
+    worker and executed as one fused-kernel batch each; results come back in
+    bank order via ONE inverse-permutation gather (rather than a per-worker
+    scatter loop of ``out.at[rows].set``, which built n_workers intermediate
+    arrays).
     """
     import numpy as np
     assignment = np.asarray(assignment)
+    # stable grouping permutation: rows sorted by worker, ties in bank order,
+    # so each worker's group preserves its clients' submission order.
+    order = np.argsort(assignment, kind="stable")
+    inverse = np.argsort(order, kind="stable")
+    bounds = np.searchsorted(assignment[order], np.arange(n_workers + 1))
+    inverse_j = jnp.asarray(inverse)
 
     def run(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:
-        out = jnp.zeros((theta_bank.shape[0],), jnp.float32)
+        groups = []
         for w in range(n_workers):
-            rows = np.nonzero(assignment == w)[0]
+            rows = order[bounds[w]:bounds[w + 1]]
             if rows.size == 0:
                 continue
-            f = kops.vqc_fidelity(spec, theta_bank[rows], data_bank[rows])
-            out = out.at[rows].set(f)
-        return out
+            groups.append(kops.vqc_fidelity(spec, theta_bank[rows],
+                                            data_bank[rows]))
+        return jnp.concatenate(groups)[inverse_j]
 
     return run
 
@@ -68,13 +91,13 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
     def _local(theta, data):
         return kops.vqc_fidelity(spec, theta, data)
 
-    shard_fn = jax.shard_map(
+    shard_fn = _shard_map(
         _local, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None)),
         out_specs=P(axis),
         # the Pallas interpret-mode call inside produces ShapeDtypeStructs
         # without vma annotations; skip the varying-across-mesh check.
-        check_vma=False,
+        **_SM_SKIP_CHECKS,
     )
 
     def run(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:

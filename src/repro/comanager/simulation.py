@@ -16,7 +16,7 @@ import dataclasses
 
 from repro.comanager.events import EventLoop
 from repro.comanager.manager import CoManager
-from repro.comanager.tenancy import JobResult, JobSpec
+from repro.comanager.tenancy import JobResult, JobSpec, TaskIdAllocator
 from repro.comanager.worker import CircuitTask, QuantumWorker, WorkerConfig
 
 
@@ -31,6 +31,9 @@ class SimulationReport:
     #: mean over executed circuits of (1 - error_rate_w)^depth — the
     #: fraction of SWAP-test signal surviving depolarization (1.0 = ideal).
     fidelity_retention: float = 1.0
+    #: serve-gateway telemetry (per-tenant latency, lane-fill) when the
+    #: simulation ran with gateway=True; None otherwise.
+    gateway_summary: dict | None = None
 
     @property
     def circuits_per_second(self) -> float:
@@ -46,7 +49,11 @@ class SystemSimulation:
                  assign_latency: float = 0.01, classical_overhead: float = 0.0,
                  lockstep: bool = False, fair_queue: bool = False,
                  run_until: float = 1e7,
-                 worker_failures: dict[str, float] | None = None):
+                 worker_failures: dict[str, float] | None = None,
+                 gateway: bool = False, gateway_target: int | None = None,
+                 gateway_deadline: float = 1.0,
+                 tenant_weights: dict[str, float] | None = None,
+                 arrivals: dict[str, list[float]] | None = None):
         """``assign_latency``: manager->worker dispatch cost per circuit.
 
         ``classical_overhead``: SERIAL per-circuit time on the classical
@@ -69,7 +76,23 @@ class SystemSimulation:
         serially, which is the real bottleneck on the paper's classical side.
 
         ``worker_failures``: worker_id -> time at which it silently stops
-        heartbeating (exercises the 3-missed-heartbeats eviction path)."""
+        heartbeating (exercises the 3-missed-heartbeats eviction path).
+
+        ``gateway``: route submissions through the online serving gateway
+        (repro.serve): circuits are admitted to per-client queues, dequeued
+        weighted-fair, coalesced across tenants into lane-aligned mega-batches
+        keyed by circuit structure, and each batch is ONE logical task for
+        Algorithm 2 (demand = circuit width).  Batch execution follows the
+        fused-kernel cost model: a batch of n compatible circuits takes
+        ceil(n / LANES) service times (lanes execute in parallel), so packing
+        LANES circuits into one dispatch costs one circuit's time — the
+        coalescing throughput win, on the virtual clock.
+
+        ``arrivals`` (gateway mode): client_id -> per-circuit arrival-time
+        offsets (relative to the job's submit_time); circuits then stream in
+        open-loop instead of arriving as one epoch-sized burst — the
+        high-traffic serving stand-in used by benchmarks/gateway_throughput.
+        """
         self.loop = EventLoop()
         self.manager = CoManager(multi_tenant=multi_tenant, tenancy=tenancy,
                                  eager_completion=eager_completion,
@@ -90,11 +113,29 @@ class SystemSimulation:
         self._remaining: dict[str, int] = {}
         self._results: dict[str, JobResult] = {}
         self._total = 0
+        self.task_ids = TaskIdAllocator()  # per-simulation id space
+
+        self.gateway = None
+        self.arrivals = arrivals or {}
+        if gateway:
+            from repro.kernels.vqc_statevector import LANES
+            from repro.serve.gateway import Gateway
+            self.gw_lanes = LANES
+            self.gateway = Gateway(target=gateway_target or LANES,
+                                   deadline=gateway_deadline, lanes=LANES)
+            for j in jobs:
+                self.gateway.register_client(
+                    j.client_id, weight=(tenant_weights or {}).get(j.client_id, 1.0))
+            self._gw_batches: dict[int, object] = {}   # batch task_id -> batch
+            self._gw_dispatched: set[int] = set()      # handed to a worker
+            self._gw_flush_at: float | None = None
 
         lp = self.loop
         lp.on("register", self._on_register)
         lp.on("heartbeat", self._on_heartbeat)
         lp.on("submit", self._on_submit)
+        lp.on("submit_circuit", self._on_submit_circuit)
+        lp.on("gw_flush", self._on_gw_flush)
         lp.on("start", self._on_start)
         lp.on("complete", self._on_complete)
         lp.on("liveness", self._on_liveness)
@@ -118,22 +159,96 @@ class SystemSimulation:
 
     def _on_liveness(self, t: float, _) -> None:
         self.manager.liveness_check(t, self.heartbeat_period)
+        if self.gateway is not None:
+            # batches requeued off an evicted worker go back through the
+            # coalescer (re-coalesced), not straight back to Algorithm 2
+            lost = [task for task in self.manager.pending
+                    if task.task_id in self._gw_dispatched]
+            if lost:
+                self.manager.pending = [
+                    task for task in self.manager.pending
+                    if task.task_id not in self._gw_dispatched]
+                for task in lost:
+                    self._gw_requeue(t, task)
         self._drain(t)
         if not self._all_done():
             self.loop.schedule(t + self.heartbeat_period, "liveness", None)
 
     def _all_done(self) -> bool:
         jobs_submitted = len(self._remaining) == len(self.jobs)
-        return (jobs_submitted and not any(self._remaining.values())
+        done = (jobs_submitted and not any(self._remaining.values())
                 and not self.manager.pending)
+        if done and self.gateway is not None:
+            done = self.gateway.idle and not self._gw_batches
+        return done
 
     def _on_submit(self, t: float, job: JobSpec) -> None:
-        tasks = job.circuits(self.env)
+        tasks = job.circuits(self.env, self.task_ids)
         self._remaining[job.client_id] = len(tasks)
         self._total += len(tasks)
+        if self.gateway is not None:
+            offsets = self.arrivals.get(job.client_id)
+            if offsets is not None:
+                # open-loop streaming: one admission event per circuit
+                assert len(offsets) >= len(tasks), job.client_id
+                for task, dt in zip(tasks, offsets):
+                    self.loop.schedule(t + dt, "submit_circuit", task)
+            else:
+                for task in tasks:
+                    self._gw_admit(t, task)
+                self._gw_pump(t)
+            return
         for task in tasks:
             self.manager.submit(task)
         self._drain(t)
+
+    # -------------------------------------------------- gateway (serve/) path
+    def _on_submit_circuit(self, t: float, task: CircuitTask) -> None:
+        self._gw_admit(t, task)
+        self._gw_pump(t)
+
+    def _gw_admit(self, t: float, task: CircuitTask) -> None:
+        key = (task.demand, task.service_time, task.depth)  # structural key
+        self.gateway.submit(task.client_id, key, task, now=t)
+
+    def _gw_pump(self, t: float) -> None:
+        """Coalesce admitted circuits; submit emitted batches to Algorithm 2
+        as single lane-packed tasks; keep a flush timer armed for partials."""
+        for batch in self.gateway.pump(t):
+            self._gw_dispatch(t, batch)
+        nd = self.gateway.next_deadline()
+        if nd is not None and (self._gw_flush_at is None
+                               or nd < self._gw_flush_at - 1e-12
+                               or self._gw_flush_at <= t):
+            self._gw_flush_at = max(nd, t)
+            self.loop.schedule(self._gw_flush_at, "gw_flush", None)
+        self._drain(t)
+
+    def _on_gw_flush(self, t: float, _) -> None:
+        self._gw_flush_at = None
+        self._gw_pump(t)
+
+    def _gw_dispatch(self, t: float, batch) -> None:
+        """One coalesced batch = one logical circuit-bank task: demand is the
+        member circuits' width, service time is the fused-kernel cost
+        ceil(n / LANES) * per-circuit time (lanes run in parallel)."""
+        proto: CircuitTask = batch.members[0].payload
+        n_passes = -(-batch.n // self.gw_lanes)
+        bt = CircuitTask(task_id=next(self.task_ids), client_id="__gw__",
+                         demand=proto.demand,
+                         service_time=n_passes * proto.service_time,
+                         depth=proto.depth)
+        self._gw_batches[bt.task_id] = batch
+        self.manager.submit(bt)
+
+    def _gw_requeue(self, t: float, batch_task: CircuitTask) -> None:
+        """An assigned batch came back (worker evicted / died before start):
+        return its members to the coalescer so they are RE-coalesced —
+        possibly merged with newer arrivals — rather than replayed as-is."""
+        batch = self._gw_batches.pop(batch_task.task_id)
+        self._gw_dispatched.discard(batch_task.task_id)
+        self.gateway.requeue(batch)
+        self._gw_pump(t)
 
     def _on_start(self, t: float, payload) -> None:
         task, wid = payload
@@ -141,7 +256,10 @@ class SystemSimulation:
         if w is None or task.demand > w.available_qubits:
             # worker died (or optimistic over-commit after eviction): requeue
             self._in_flight[task.client_id] -= 1
-            self.manager.submit(task)
+            if self.gateway is not None and task.task_id in self._gw_batches:
+                self._gw_requeue(t, task)
+            else:
+                self.manager.submit(task)
             return
         finish = w.start(task, t)
         self.loop.schedule(finish, "complete", (task, wid))
@@ -157,19 +275,33 @@ class SystemSimulation:
         self.manager.complete(wid, task, t)
         cid = task.client_id
         self._in_flight[cid] -= 1
+        if self.gateway is not None and task.task_id in self._gw_batches:
+            batch = self._gw_batches.pop(task.task_id)
+            self._gw_dispatched.discard(task.task_id)
+            self.gateway.complete(batch, None, t)
+            for m in batch.members:
+                self._finish_one(m.client_id, t)
+        else:
+            self._finish_one(cid, t)
+        self._drain(t)
+
+    def _finish_one(self, cid: str, t: float) -> None:
         self._remaining[cid] -= 1
         if self._remaining[cid] == 0:
             job = self.jobs[cid]
             self._results[cid] = JobResult(cid, job.n_circuits, job.submit_time, t)
-        self._drain(t)
 
     def _drain(self, t: float) -> None:
         def launch(task, wid):
             # dispatch occupies the client's serial classical process first
+            # (in gateway mode the ledger is the gateway's: one dispatch
+            # cost per BATCH — the amortization that coalescing buys)
             cid = task.client_id
             free = max(self._client_free.get(cid, 0.0), t) + self.classical_overhead
             self._client_free[cid] = free
             self._in_flight[cid] = self._in_flight.get(cid, 0) + 1
+            if self.gateway is not None and task.task_id in self._gw_batches:
+                self._gw_dispatched.add(task.task_id)
             self.loop.schedule(free + self.assign_latency, "start", (task, wid))
 
         if self.lockstep:
@@ -220,6 +352,8 @@ class SystemSimulation:
             evictions=list(self.manager.evictions),
             worker_busy_time={wid: w.busy_time for wid, w in self.workers.items()},
             fidelity_retention=(sum(rets) / len(rets)) if rets else 1.0,
+            gateway_summary=(self.gateway.telemetry.summary()
+                             if self.gateway is not None else None),
         )
 
 

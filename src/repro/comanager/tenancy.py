@@ -10,15 +10,28 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from typing import Iterator
 
 from repro.comanager.worker import CircuitTask, PAPER_RATES_GCP, PAPER_RATES_IBMQ
 
-_task_ids = itertools.count()
 
+class TaskIdAllocator:
+    """Per-runtime task-id source.
 
-def reset_task_ids() -> None:
-    global _task_ids
-    _task_ids = itertools.count()
+    Each ``SystemSimulation`` / serving gateway owns one of these, so two
+    concurrently constructed runtimes can never interleave ids (the old
+    module-global counter made task ids depend on construction order
+    process-wide, which breaks multi-stream ingestion).
+    """
+
+    def __init__(self, start: int = 0):
+        self._it = itertools.count(start)
+
+    def __next__(self) -> int:
+        return next(self._it)
+
+    def __iter__(self) -> Iterator[int]:
+        return self
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,11 +51,16 @@ class JobSpec:
         rates = PAPER_RATES_IBMQ if env == "ibmq" else PAPER_RATES_GCP
         return 1.0 / rates[(self.qc, self.n_layers)]
 
-    def circuits(self, env: str = "ibmq") -> list[CircuitTask]:
+    def circuits(self, env: str = "ibmq",
+                 ids: Iterator[int] | None = None) -> list[CircuitTask]:
+        """Expand into the epoch's circuit bank.  ``ids`` is the owning
+        runtime's task-id allocator (defaults to a fresh one, for callers
+        that only ever build a single job)."""
         st = self.service_time(env)
+        ids = ids if ids is not None else TaskIdAllocator()
         from repro.core import circuits as qcirc
         depth = len(qcirc.build_quclassi_circuit(self.qc, self.n_layers).ops)
-        return [CircuitTask(task_id=next(_task_ids), client_id=self.client_id,
+        return [CircuitTask(task_id=next(ids), client_id=self.client_id,
                             demand=self.qc, service_time=st, payload=i,
                             depth=depth)
                 for i in range(self.n_circuits)]

@@ -44,13 +44,25 @@ class TrainReport:
 def train(cfg: QuClassiConfig, train_set, test_set, *,
           epochs: int = 10, batch_size: int = 8, lr: float = 1e-3,
           grad_mode: str = "shift", executor=None, optimizer: str = "sgd",
+          gateway=None, client_id: str = "trainer",
           seed: int = 0, log: Optional[Callable[[str], None]] = None) -> TrainReport:
     """Train QuClassi per Algorithm 1.
 
     ``grad_mode``: 'shift' (paper-faithful circuit-bank path, optionally
     distributed via ``executor``) or 'autodiff' (exact local path — same
     math for 1-2 layer configs, used for fast accuracy runs).
+
+    ``gateway``: a ``repro.serve.GatewayRuntime``; the shift-rule circuit
+    banks are then streamed through the online serving gateway as client
+    ``client_id`` — coalesced (possibly with other tenants sharing the
+    runtime) into lane-aligned mega-batches, placed by the co-Manager, and
+    executed by the fused Pallas kernel.  Fidelities come back in submission
+    order, so gradient assembly is unchanged.
     """
+    if gateway is not None:
+        if executor is not None:
+            raise ValueError("pass either executor or gateway, not both")
+        executor = gateway.executor(cfg.spec, client_id)
     (xtr, ytr), (xte, yte) = train_set, test_set
     xtr, xte = pipeline.clean(xtr), pipeline.clean(xte)
     params = quclassi.init_params(cfg, jax.random.PRNGKey(seed))

@@ -1,0 +1,17 @@
+"""Online serving layer: streaming circuit submissions from many tenants
+-> weighted-fair admission -> cross-tenant lane-aligned coalescing ->
+co-Manager placement -> fused Pallas kernel execution.
+
+See ``gateway`` (admission / fairness / backpressure), ``coalescer``
+(structure-keyed mega-batch packing), ``dispatcher`` (placement + execution),
+``metrics`` (per-tenant latency / throughput / lane-fill telemetry).
+"""
+from repro.serve.coalescer import CoalescedBatch, Coalescer, PendingCircuit
+from repro.serve.dispatcher import Dispatcher, GatewayRuntime
+from repro.serve.gateway import Backpressure, CircuitFuture, Gateway
+from repro.serve.metrics import Telemetry
+
+__all__ = [
+    "Backpressure", "CircuitFuture", "CoalescedBatch", "Coalescer",
+    "Dispatcher", "Gateway", "GatewayRuntime", "PendingCircuit", "Telemetry",
+]

@@ -1,0 +1,123 @@
+"""Cross-tenant circuit-bank coalescing.
+
+The fused Pallas VQC kernel executes a *lane-aligned* batch of structurally
+identical circuits (same gate sequence, per-lane angles) in one pass — a
+tile of ``LANES`` (128) circuits costs roughly the same as one.  The
+coalescer exploits that: circuits submitted by *different* tenants are keyed
+by circuit structure and packed into shared mega-batches, so a worker
+dispatch carries up to ``target`` circuits instead of one.
+
+Flush policy is size-or-deadline:
+  * size   — the moment a key's buffer reaches ``target`` circuits (a
+             multiple of ``lanes``), a full batch is emitted;
+  * deadline — a buffered circuit never waits longer than ``deadline``
+             (bounded latency under light load: partial batches are emitted
+             when their oldest member ages out).
+
+Keys are any hashable: the real data plane uses the ``CircuitSpec`` itself
+(frozen dataclass — hash == structural identity), the virtual-clock
+simulation uses ``(demand, service_time, depth)`` tuples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Hashable, Optional
+
+from repro.kernels.vqc_statevector import LANES
+
+
+@dataclasses.dataclass
+class PendingCircuit:
+    """One admitted circuit waiting to be coalesced."""
+    key: Hashable
+    client_id: str
+    seq: int              # gateway-wide admission sequence number
+    arrival: float
+    payload: Any          # (theta_row, data_row) | simulation CircuitTask
+    future: Any = None    # CircuitFuture in the real data plane
+
+
+@dataclasses.dataclass
+class CoalescedBatch:
+    """A lane-packable unit of work: all members share ``key``."""
+    key: Hashable
+    members: list[PendingCircuit]
+    created: float
+    by_deadline: bool = False
+
+    @property
+    def n(self) -> int:
+        return len(self.members)
+
+    def padded(self, lanes: int = LANES) -> int:
+        return math.ceil(self.n / lanes) * lanes
+
+    @property
+    def lane_fill(self) -> float:
+        return self.n / self.padded()
+
+    def clients(self) -> set[str]:
+        return {m.client_id for m in self.members}
+
+
+class Coalescer:
+    def __init__(self, *, target: int = LANES, deadline: float = 1.0,
+                 lanes: int = LANES):
+        if target % lanes:
+            raise ValueError(f"target {target} must be a multiple of lanes {lanes}")
+        self.target = target
+        self.deadline = deadline
+        self.lanes = lanes
+        self._buffers: dict[Hashable, list[PendingCircuit]] = {}
+
+    # ------------------------------------------------------------- intake
+    def add(self, item: PendingCircuit) -> list[CoalescedBatch]:
+        """Buffer one circuit; returns any size-triggered full batches."""
+        buf = self._buffers.setdefault(item.key, [])
+        buf.append(item)
+        out = []
+        while len(buf) >= self.target:
+            out.append(CoalescedBatch(item.key, buf[:self.target],
+                                      created=item.arrival))
+            del buf[:self.target]
+        return out
+
+    def requeue(self, batch: CoalescedBatch) -> None:
+        """Return a failed batch's members to the FRONT of their buffer
+        (eviction recovery).  Their original arrival times are kept, so the
+        deadline policy flushes them promptly, possibly merged with newer
+        arrivals — the batch is genuinely re-coalesced, not replayed."""
+        buf = self._buffers.setdefault(batch.key, [])
+        buf[:0] = batch.members
+
+    # -------------------------------------------------------------- flush
+    def flush_due(self, now: float) -> list[CoalescedBatch]:
+        """Emit partial batches whose oldest member has aged past deadline."""
+        out = []
+        for key, buf in self._buffers.items():
+            if buf and now - buf[0].arrival + 1e-12 >= self.deadline:
+                out.append(CoalescedBatch(key, buf[:self.target], created=now,
+                                          by_deadline=True))
+                del buf[:self.target]
+        return out
+
+    def flush_all(self, now: float) -> list[CoalescedBatch]:
+        """Drain everything (end of a bank / shutdown)."""
+        out = []
+        for key, buf in self._buffers.items():
+            while buf:
+                out.append(CoalescedBatch(key, buf[:self.target], created=now,
+                                          by_deadline=True))
+                del buf[:self.target]
+        return out
+
+    # ---------------------------------------------------------- inspection
+    def next_deadline(self) -> Optional[float]:
+        """Earliest time at which some buffered circuit must be flushed."""
+        oldest = [buf[0].arrival for buf in self._buffers.values() if buf]
+        return min(oldest) + self.deadline if oldest else None
+
+    @property
+    def buffered(self) -> int:
+        return sum(len(b) for b in self._buffers.values())

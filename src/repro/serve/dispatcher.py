@@ -1,0 +1,138 @@
+"""Dispatcher: coalesced mega-batches -> co-Manager placement -> Pallas kernel.
+
+One ``CoalescedBatch`` becomes ONE logical circuit-bank task for Algorithm 2:
+its resource demand is the spec's qubit width (the co-resident lanes of a
+fused kernel batch occupy one ``n_qubits``-wide register file slot on the
+worker, not ``n * width`` qubits), so the existing capacity/CRU assignment
+logic routes whole batches exactly as it routed single circuits.
+
+This module is the *synchronous real-execution* runtime: execution happens
+inline on the chosen worker's mesh slice (here: the local device) and
+capacity is released immediately after.  The virtual-clock counterpart lives
+in ``repro.comanager.simulation`` (``gateway=True``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from repro.comanager.manager import CoManager
+from repro.comanager.tenancy import TaskIdAllocator
+from repro.comanager.worker import CircuitTask, WorkerConfig
+from repro.core.sim import CircuitSpec
+from repro.kernels import ops as kops
+from repro.serve.coalescer import CoalescedBatch
+from repro.serve.gateway import Backpressure, Gateway
+from repro.serve.metrics import Telemetry
+
+#: kernel runner signature: (spec, theta (C,P), data (C,D)) -> fidelities (C,)
+KernelFn = Callable[[CircuitSpec, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+class Dispatcher:
+    def __init__(self, gateway: Gateway, workers: Sequence[WorkerConfig],
+                 *, manager: CoManager | None = None,
+                 kernel: KernelFn | None = None, clock=time.perf_counter):
+        self.gateway = gateway
+        self.manager = manager or CoManager(multi_tenant=True)
+        self.kernel = kernel or kops.vqc_fidelity
+        self.clock = clock
+        self.task_ids = TaskIdAllocator()
+        self.batch_log: list[tuple[str, int, tuple]] = []  # (worker, n, clients)
+        for w in workers:
+            self.manager.register_worker(w.worker_id, w.max_qubits,
+                                         cru=w.base_load, t=self.clock(),
+                                         error_rate=w.error_rate)
+
+    # ----------------------------------------------------------- execution
+    @staticmethod
+    def _width(batch: CoalescedBatch) -> int:
+        key = batch.key
+        if isinstance(key, CircuitSpec):
+            return key.n_qubits
+        raise TypeError(f"dispatcher batches must be keyed by CircuitSpec, "
+                        f"got {type(key).__name__}")
+
+    def run_batch(self, batch: CoalescedBatch) -> str:
+        """Place one batch via Algorithm 2 and execute it on the spot."""
+        now = self.clock()
+        task = CircuitTask(task_id=next(self.task_ids), client_id="gateway",
+                           demand=self._width(batch), service_time=1.0)
+        wid = self.manager.assign(task, now)
+        if wid is None:
+            raise RuntimeError(
+                f"no worker fits a {task.demand}-qubit batch "
+                f"(capacities: {[v.max_qubits for v in self.manager.workers.values()]})")
+        spec: CircuitSpec = batch.key
+        theta = jnp.stack([m.payload[0] for m in batch.members])
+        data = jnp.stack([m.payload[1] for m in batch.members])
+        fids = self.kernel(spec, theta, data)
+        self.manager.complete(wid, task, self.clock())
+        self.gateway.complete(batch, fids, self.clock())
+        self.batch_log.append((wid, batch.n, tuple(sorted(batch.clients()))))
+        return wid
+
+    # ---------------------------------------------------------------- pump
+    def pump(self) -> int:
+        """Coalesce what's admitted; run every emitted batch.  Returns the
+        number of batches executed."""
+        batches = self.gateway.pump(self.clock())
+        for b in batches:
+            self.run_batch(b)
+        return len(batches)
+
+    def drain(self) -> int:
+        """Force-flush partial buffers and run everything (end of a bank)."""
+        batches = self.gateway.flush(self.clock())
+        for b in batches:
+            self.run_batch(b)
+        return len(batches)
+
+
+class GatewayRuntime:
+    """Bundled gateway + dispatcher + telemetry for local serving.
+
+    The unit the trainer and the benchmarks hold on to: multiple training
+    clients share one runtime, and their circuit banks coalesce across
+    tenants into shared kernel launches.
+    """
+
+    def __init__(self, workers: Sequence[WorkerConfig] | None = None, *,
+                 target: int | None = None, deadline: float = 1.0,
+                 kernel: KernelFn | None = None, clock=time.perf_counter,
+                 **gateway_opts):
+        if workers is None:
+            workers = [WorkerConfig(f"w{i+1}", q)
+                       for i, q in enumerate((5, 10, 15, 20))]
+        self.telemetry = Telemetry()
+        self.gateway = Gateway(target=target, deadline=deadline,
+                               telemetry=self.telemetry, **gateway_opts)
+        self.dispatcher = Dispatcher(self.gateway, workers, kernel=kernel,
+                                     clock=clock)
+
+    def executor(self, spec: CircuitSpec, client_id: str,
+                 *, weight: float = 1.0):
+        """A ``shift_rule.Executor`` that routes a circuit bank through the
+        gateway row by row and gathers fidelities in submission order —
+        ``shift_rule.assemble_gradient`` consumes the result unchanged."""
+        if client_id not in self.gateway.tenants:
+            self.gateway.register_client(client_id, weight=weight)
+
+        def run(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:
+            futures = []
+            for i in range(theta_bank.shape[0]):
+                while True:
+                    try:
+                        futures.append(self.gateway.submit(
+                            client_id, spec, (theta_bank[i], data_bank[i]),
+                            now=self.dispatcher.clock()))
+                        break
+                    except Backpressure:
+                        # drain in-flight work, then the queue has room again
+                        self.dispatcher.drain()
+            self.dispatcher.drain()
+            return jnp.stack([f.value for f in futures])
+
+        return run

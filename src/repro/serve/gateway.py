@@ -1,0 +1,187 @@
+"""Online serving gateway: admission, fairness, backpressure.
+
+Streaming circuit submissions from many concurrent clients enter per-client
+FIFO queues; a weighted-fair scheduler (stride scheduling: each dequeue
+advances the client's virtual pass by ``1/weight``, the eligible client with
+the smallest pass goes next) feeds the cross-tenant coalescer; the coalescer
+emits lane-aligned mega-batches for the dispatcher.
+
+Backpressure is two-level, both bounded per tenant:
+  * ``max_pending``   — admission queue depth; a client that outruns the
+    system gets ``Backpressure`` raised at ``submit`` (shed load / slow the
+    stream) instead of growing memory without bound;
+  * ``max_in_flight`` — circuits dequeued-but-not-completed; a client at its
+    cap is skipped by the fair scheduler until results return, so one heavy
+    tenant cannot monopolize the coalescer's buffers either.
+
+The gateway is clock-agnostic: every entry point takes ``now`` (virtual
+seconds under the simulation's event loop, ``time.perf_counter()`` in the
+real data plane).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Hashable, Optional
+
+from repro.serve.coalescer import Coalescer, CoalescedBatch, PendingCircuit
+from repro.serve.metrics import Telemetry
+
+
+class Backpressure(RuntimeError):
+    """Raised when a tenant's admission queue is full."""
+
+
+class CircuitFuture:
+    """Single-assignment result slot for one submitted circuit."""
+
+    __slots__ = ("client_id", "seq", "submit_time", "_value", "done")
+
+    def __init__(self, client_id: str, seq: int, submit_time: float):
+        self.client_id = client_id
+        self.seq = seq
+        self.submit_time = submit_time
+        self._value = None
+        self.done = False
+
+    def set(self, value) -> None:
+        assert not self.done, f"future {self.seq} resolved twice"
+        self._value = value
+        self.done = True
+
+    @property
+    def value(self):
+        if not self.done:
+            raise RuntimeError(f"circuit {self.seq} not completed yet")
+        return self._value
+
+
+@dataclasses.dataclass
+class TenantState:
+    weight: float = 1.0
+    max_pending: int = 100_000
+    max_in_flight: int = 100_000
+    queue: deque = dataclasses.field(default_factory=deque)
+    in_flight: int = 0
+    vpass: float = 0.0    # stride-scheduling virtual pass
+
+
+class Gateway:
+    def __init__(self, *, target: int | None = None, deadline: float = 1.0,
+                 lanes: int | None = None, max_pending: int = 100_000,
+                 max_in_flight: int = 100_000,
+                 telemetry: Telemetry | None = None):
+        from repro.kernels.vqc_statevector import LANES
+        lanes = lanes or LANES
+        self.coalescer = Coalescer(target=target or lanes, deadline=deadline,
+                                   lanes=lanes)
+        self.telemetry = telemetry or Telemetry(lanes=lanes)
+        self._defaults = dict(max_pending=max_pending,
+                              max_in_flight=max_in_flight)
+        self.tenants: dict[str, TenantState] = {}
+        self._seq = 0
+
+    # ---------------------------------------------------------- admission
+    def register_client(self, client_id: str, *, weight: float = 1.0,
+                        max_pending: int | None = None,
+                        max_in_flight: int | None = None) -> TenantState:
+        st = TenantState(
+            weight=weight,
+            max_pending=max_pending or self._defaults["max_pending"],
+            max_in_flight=max_in_flight or self._defaults["max_in_flight"])
+        # a late joiner starts at the current minimum virtual pass — not 0,
+        # which would hand it absolute priority until it "caught up" with
+        # tenants that have been served for a while.
+        st.vpass = min((t.vpass for t in self.tenants.values()), default=0.0)
+        self.tenants[client_id] = st
+        return st
+
+    def _tenant(self, client_id: str) -> TenantState:
+        st = self.tenants.get(client_id)
+        if st is None:
+            st = self.register_client(client_id)
+        return st
+
+    def submit(self, client_id: str, key: Hashable, payload: Any,
+               now: float) -> CircuitFuture:
+        """Admit one circuit.  Raises ``Backpressure`` at the queue bound."""
+        st = self._tenant(client_id)
+        if len(st.queue) >= st.max_pending:
+            self.telemetry.on_reject(client_id)
+            raise Backpressure(
+                f"{client_id}: {len(st.queue)} pending >= {st.max_pending}")
+        fut = CircuitFuture(client_id, self._seq, now)
+        st.queue.append(PendingCircuit(key=key, client_id=client_id,
+                                       seq=self._seq, arrival=now,
+                                       payload=payload, future=fut))
+        self._seq += 1
+        self.telemetry.on_submit(client_id, now)
+        return fut
+
+    # ------------------------------------------------- fair dequeue + pump
+    def _next_client(self) -> Optional[str]:
+        """Smallest-virtual-pass eligible client (weighted fair); ties break
+        on client id for determinism.  One O(T) pass — this runs once per
+        dequeued circuit."""
+        best = None
+        for cid, st in self.tenants.items():
+            if not st.queue or st.in_flight >= st.max_in_flight:
+                continue
+            if best is None or (st.vpass, cid) < best:
+                best = (st.vpass, cid)
+        return best[1] if best else None
+
+    def pump(self, now: float) -> list[CoalescedBatch]:
+        """Move admitted circuits into the coalescer in weighted-fair order,
+        then collect size-triggered and deadline-due batches."""
+        batches: list[CoalescedBatch] = []
+        while True:
+            cid = self._next_client()
+            if cid is None:
+                break
+            st = self.tenants[cid]
+            item = st.queue.popleft()
+            st.vpass += 1.0 / st.weight
+            st.in_flight += 1
+            batches.extend(self.coalescer.add(item))
+        batches.extend(self.coalescer.flush_due(now))
+        for b in batches:
+            self.telemetry.on_batch(b.n, by_deadline=b.by_deadline)
+        return batches
+
+    def flush(self, now: float) -> list[CoalescedBatch]:
+        """pump() then force-drain every partial buffer (end of a bank)."""
+        batches = self.pump(now)
+        forced = self.coalescer.flush_all(now)
+        for b in forced:
+            self.telemetry.on_batch(b.n, by_deadline=b.by_deadline)
+        return batches + forced
+
+    # ------------------------------------------------------------ results
+    def complete(self, batch: CoalescedBatch, values, now: float) -> None:
+        """Scatter one executed batch's fidelities back to its futures, in
+        member (submission) order.  ``values`` may be None in clock-only
+        runtimes (simulation) where there is no fidelity payload."""
+        for i, m in enumerate(batch.members):
+            st = self.tenants[m.client_id]
+            st.in_flight = max(0, st.in_flight - 1)
+            if m.future is not None:
+                m.future.set(values[i] if values is not None else None)
+            self.telemetry.on_complete(m.client_id, m.arrival, now)
+
+    def requeue(self, batch: CoalescedBatch) -> None:
+        """Return a failed (evicted-worker) batch for re-coalescing; the
+        members keep their futures and original arrivals, so nothing is
+        dropped and the deadline policy re-emits them promptly.  They remain
+        counted in-flight: they never went back through admission."""
+        self.coalescer.requeue(batch)
+
+    # --------------------------------------------------------- inspection
+    def next_deadline(self) -> Optional[float]:
+        return self.coalescer.next_deadline()
+
+    @property
+    def idle(self) -> bool:
+        """True when nothing is queued or buffered (in-flight may remain)."""
+        return (self.coalescer.buffered == 0
+                and all(not st.queue for st in self.tenants.values()))

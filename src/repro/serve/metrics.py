@@ -1,0 +1,124 @@
+"""Serving-gateway telemetry.
+
+Tracks, per tenant: submission/completion counts, rejected (backpressured)
+submissions, and end-to-end circuit latency (submit -> fidelity delivered);
+and, per coalesced batch: occupancy against the lane-padded kernel shape.
+
+``lane_fill`` is the headline packing metric: of the kernel lanes the data
+plane actually paid for (batches are padded up to a multiple of ``LANES``),
+what fraction carried a real client circuit?  1.0 = every lane useful;
+a gateway flushing mostly-empty deadline batches under light load trends
+toward ``1 / LANES``.
+
+All clocks are caller-supplied floats (virtual seconds in the simulation,
+``time.perf_counter()`` seconds in the real data plane), so the same
+telemetry object serves both runtimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def _percentile(sorted_xs: list[float], q: float) -> float:
+    """Nearest-rank percentile on an already-sorted list (no numpy needed
+    on the hot path)."""
+    if not sorted_xs:
+        return float("nan")
+    k = max(0, min(len(sorted_xs) - 1,
+                   math.ceil(q / 100.0 * len(sorted_xs)) - 1))
+    return sorted_xs[k]
+
+
+@dataclasses.dataclass
+class TenantStats:
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    first_submit: float = float("inf")
+    last_complete: float = 0.0
+    latencies: list = dataclasses.field(default_factory=list)
+
+    @property
+    def circuits_per_second(self) -> float:
+        span = self.last_complete - self.first_submit
+        return self.completed / max(span, 1e-9)
+
+    def latency_percentile(self, q: float) -> float:
+        return _percentile(sorted(self.latencies), q)
+
+
+class Telemetry:
+    def __init__(self, lanes: int = 128):
+        self.lanes = lanes
+        self.tenants: dict[str, TenantStats] = {}
+        self.batches = 0
+        self.batched_circuits = 0
+        self.padded_lanes = 0
+        self.deadline_flushes = 0
+        self.size_flushes = 0
+
+    def _tenant(self, client_id: str) -> TenantStats:
+        return self.tenants.setdefault(client_id, TenantStats())
+
+    # ------------------------------------------------------------- events
+    def on_submit(self, client_id: str, now: float) -> None:
+        s = self._tenant(client_id)
+        s.submitted += 1
+        s.first_submit = min(s.first_submit, now)
+
+    def on_reject(self, client_id: str) -> None:
+        self._tenant(client_id).rejected += 1
+
+    def on_batch(self, n_members: int, *, by_deadline: bool) -> None:
+        self.batches += 1
+        self.batched_circuits += n_members
+        self.padded_lanes += math.ceil(n_members / self.lanes) * self.lanes
+        if by_deadline:
+            self.deadline_flushes += 1
+        else:
+            self.size_flushes += 1
+
+    def on_complete(self, client_id: str, submit_time: float, now: float) -> None:
+        s = self._tenant(client_id)
+        s.completed += 1
+        s.last_complete = max(s.last_complete, now)
+        s.latencies.append(now - submit_time)
+
+    # ------------------------------------------------------------ summary
+    @property
+    def lane_fill(self) -> float:
+        return self.batched_circuits / max(self.padded_lanes, 1)
+
+    @property
+    def mean_batch_occupancy(self) -> float:
+        return self.batched_circuits / max(self.batches, 1)
+
+    def tenant_summary(self, client_id: str) -> dict:
+        s = self._tenant(client_id)
+        return {
+            "client": client_id,
+            "submitted": s.submitted,
+            "completed": s.completed,
+            "rejected": s.rejected,
+            "p50_latency_s": round(s.latency_percentile(50), 4),
+            "p99_latency_s": round(s.latency_percentile(99), 4),
+            "circuits_per_second": round(s.circuits_per_second, 2),
+        }
+
+    def summary(self) -> dict:
+        done = sum(s.completed for s in self.tenants.values())
+        t0 = min((s.first_submit for s in self.tenants.values()),
+                 default=0.0)
+        t1 = max((s.last_complete for s in self.tenants.values()),
+                 default=0.0)
+        return {
+            "tenants": [self.tenant_summary(c) for c in sorted(self.tenants)],
+            "total_completed": done,
+            "circuits_per_second": round(done / max(t1 - t0, 1e-9), 2),
+            "batches": self.batches,
+            "mean_batch_occupancy": round(self.mean_batch_occupancy, 1),
+            "lane_fill": round(self.lane_fill, 3),
+            "size_flushes": self.size_flushes,
+            "deadline_flushes": self.deadline_flushes,
+        }

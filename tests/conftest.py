@@ -5,11 +5,16 @@ import os
 import numpy as np
 import pytest
 
-# Keep hypothesis deterministic and CI-friendly.
-from hypothesis import settings
-
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+# Keep hypothesis deterministic and CI-friendly.  hypothesis is optional:
+# minimal environments run the non-property tests; the property modules
+# importorskip it themselves.
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
+else:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

@@ -10,7 +10,6 @@ from repro.comanager.worker import WorkerConfig
 
 
 def fresh_jobs(*specs):
-    tenancy.reset_task_ids()
     return [JobSpec(**s) for s in specs]
 
 

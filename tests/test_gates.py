@@ -3,6 +3,7 @@ generator structure — including hypothesis sweeps over angles."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core import gates as G

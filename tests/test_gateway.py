@@ -1,0 +1,307 @@
+"""Online serving gateway (repro.serve): coalescing policy, weighted-fair
+admission, backpressure, co-Manager placement, exactly-once eviction
+recovery, and the bank-order equivalence guarantees the gradient math
+relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comanager import dataplane
+from repro.comanager.simulation import SystemSimulation
+from repro.comanager.tenancy import JobSpec
+from repro.comanager.worker import WorkerConfig
+from repro.core import quclassi
+from repro.core.quclassi import QuClassiConfig
+from repro.serve import (Backpressure, Coalescer, Gateway, GatewayRuntime,
+                         PendingCircuit)
+
+
+def item(key, cid, seq, arrival=0.0):
+    return PendingCircuit(key=key, client_id=cid, seq=seq, arrival=arrival,
+                          payload=seq)
+
+
+# ----------------------------------------------------------------- coalescer
+def test_coalescer_size_flush_emits_full_lane_multiples():
+    c = Coalescer(target=8, lanes=4, deadline=10.0)
+    batches = []
+    for i in range(19):
+        batches += c.add(item("k", "a", i, arrival=0.0))
+    assert [b.n for b in batches] == [8, 8]
+    assert c.buffered == 3
+    # members preserved in admission order
+    assert [m.seq for m in batches[0].members] == list(range(8))
+
+
+def test_coalescer_deadline_flushes_partial_batches():
+    c = Coalescer(target=8, lanes=4, deadline=1.0)
+    c.add(item("k", "a", 0, arrival=0.0))
+    c.add(item("k", "a", 1, arrival=0.4))
+    assert c.flush_due(now=0.5) == []          # oldest is only 0.5s old
+    due = c.flush_due(now=1.0)
+    assert len(due) == 1 and due[0].n == 2 and due[0].by_deadline
+    assert c.buffered == 0
+
+
+def test_coalescer_keys_do_not_mix():
+    c = Coalescer(target=4, lanes=4, deadline=10.0)
+    out = []
+    for i in range(4):
+        out += c.add(item("k5", "a", 2 * i))
+        out += c.add(item("k7", "b", 2 * i + 1))
+    assert len(out) == 2
+    assert {b.key for b in out} == {"k5", "k7"}
+    assert all(len(b.clients()) == 1 for b in out)
+
+
+def test_coalescer_requeue_goes_to_front():
+    c = Coalescer(target=4, lanes=4, deadline=1.0)
+    (full,) = c.add(item("k", "a", 0)) + c.add(item("k", "a", 1)) + \
+              c.add(item("k", "a", 2)) + c.add(item("k", "a", 3))
+    c.add(item("k", "a", 4))
+    c.requeue(full)
+    (again,) = c.flush_due(now=5.0)   # old arrivals -> immediately due
+    assert [m.seq for m in again.members] == [0, 1, 2, 3]
+    assert c.next_deadline() is not None
+
+
+# ------------------------------------------------------------------- gateway
+def test_weighted_fair_dequeue_respects_weights():
+    g = Gateway(target=128, lanes=128, deadline=100.0)
+    g.register_client("a", weight=2.0)
+    g.register_client("b", weight=1.0)
+    for i in range(30):
+        g.submit("a", "k", i, now=0.0)
+        g.submit("b", "k", 100 + i, now=0.0)
+    g.pump(now=0.0)
+    order = [m.client_id for m in g.coalescer._buffers["k"]]
+    first9 = order[:9]
+    assert first9.count("a") == 6 and first9.count("b") == 3
+
+
+def test_late_joining_tenant_does_not_monopolize():
+    """A tenant registering after others have been served starts at the
+    current minimum virtual pass, not 0 — no catch-up monopoly."""
+    g = Gateway(target=128, lanes=128, deadline=100.0)
+    for i in range(40):
+        g.submit("a", "k", i, now=0.0)
+    g.pump(now=0.0)                      # a's vpass advances to 40
+    g.register_client("b")
+    for i in range(8):
+        g.submit("a", "k", i, now=1.0)
+        g.submit("b", "k", i, now=1.0)
+    g.pump(now=1.0)
+    recent = [m.client_id for m in g.coalescer._buffers["k"]][40:]
+    # interleaved service, not 8x b followed by 8x a
+    assert recent[:4].count("b") <= 3
+
+
+def test_backpressure_bounds_tenant_queue():
+    g = Gateway(target=128, deadline=100.0, max_pending=4)
+    for i in range(4):
+        g.submit("a", "k", i, now=0.0)
+    with pytest.raises(Backpressure):
+        g.submit("a", "k", 99, now=0.0)
+    assert g.telemetry.tenants["a"].rejected == 1
+    # another tenant's budget is untouched
+    g.submit("b", "k", 0, now=0.0)
+
+
+def test_in_flight_cap_skips_saturated_tenant():
+    g = Gateway(target=4, lanes=4, deadline=100.0)
+    g.register_client("a", max_in_flight=4)
+    g.register_client("b")
+    for i in range(8):
+        g.submit("a", "k", i, now=0.0)
+    (b1,) = g.pump(now=0.0)             # first 4 dequeue and flush by size
+    assert b1.n == 4
+    assert g.pump(now=0.0) == []        # at cap: nothing more dequeues
+    assert len(g.tenants["a"].queue) == 4
+    g.complete(b1, None, now=1.0)
+    g.submit("b", "k", 100, now=1.0)    # capacity back + a second tenant
+    (b2,) = g.pump(now=1.0)
+    assert b2.n == 4 and b2.clients() == {"a", "b"}
+
+
+def test_futures_resolve_in_submission_order():
+    g = Gateway(target=4, lanes=4, deadline=100.0)
+    futs = [g.submit("a", "k", i, now=0.0) for i in range(4)]
+    (batch,) = g.pump(now=0.0)
+    g.complete(batch, [10, 11, 12, 13], now=1.0)
+    assert [f.value for f in futs] == [10, 11, 12, 13]
+    assert all(f.done for f in futs)
+
+
+# ---------------------------------------------- real data plane equivalence
+@pytest.fixture(scope="module")
+def bank_setup():
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    rng = np.random.default_rng(0)
+    n = 70
+    theta = jnp.asarray(rng.uniform(0, np.pi, (n, cfg.n_theta)), jnp.float32)
+    data = jnp.asarray(rng.uniform(0, np.pi, (n, cfg.n_angles)), jnp.float32)
+    return cfg, theta, data
+
+
+def test_bank_order_equivalence_across_executors(bank_setup):
+    """worker_batched / sharded / gateway all return fidelities in bank
+    order: the gradient assembly is executor-independent."""
+    cfg, theta, data = bank_setup
+    assignment = dataplane.round_robin_assignment(theta.shape[0], 3)
+    f_worker = dataplane.worker_batched_executor(cfg.spec, assignment, 3)(theta, data)
+
+    from repro.launch.mesh import make_host_mesh
+    f_sharded = dataplane.sharded_executor(cfg.spec, make_host_mesh())(theta, data)
+
+    rt = GatewayRuntime(target=128, deadline=0.1)
+    f_gateway = rt.executor(cfg.spec, "c1")(theta, data)
+
+    np.testing.assert_allclose(np.asarray(f_worker), np.asarray(f_sharded),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(f_worker), np.asarray(f_gateway),
+                               atol=1e-6)
+
+
+def test_gateway_fidelities_bit_identical_to_worker_batched(bank_setup):
+    """Acceptance: gateway-scattered fidelities == worker_batched_executor
+    output, bitwise, in bank order (per-lane kernel math is independent of
+    batch composition)."""
+    cfg, theta, data = bank_setup
+    assignment = dataplane.round_robin_assignment(theta.shape[0], 4)
+    f_direct = dataplane.worker_batched_executor(cfg.spec, assignment, 4)(theta, data)
+
+    rt = GatewayRuntime(target=128, deadline=0.1)
+    # two tenants interleaved: cross-tenant batches, same bit-exact results
+    ex_a = rt.executor(cfg.spec, "a")
+    f_gw = ex_a(theta, data)
+    assert np.array_equal(np.asarray(f_direct), np.asarray(f_gw))
+
+
+def test_multi_tenant_training_through_shared_gateway(bank_setup):
+    """Two training clients share one runtime; both gradients match the
+    local executor exactly (within fp tolerance)."""
+    cfg, _, _ = bank_setup
+    from repro.data import mnist
+    x, y = mnist.make_pair_dataset(3, 9, n_per_class=4, seed=0)
+    x, y = jnp.asarray(x[:2]), jnp.asarray(y[:2])
+    params = quclassi.init_params(cfg, jax.random.PRNGKey(0))
+
+    rt = GatewayRuntime(target=128, deadline=0.2)
+    l_ref, g_ref, _ = quclassi.grad_shift(cfg, params, x, y)
+    for cid in ("alice", "bob"):
+        ex = rt.executor(cfg.spec, cid)
+        l_gw, g_gw, _ = quclassi.grad_shift(cfg, params, x, y, executor=ex)
+        np.testing.assert_allclose(np.asarray(g_gw["theta"]),
+                                   np.asarray(g_ref["theta"]), atol=1e-5)
+    assert rt.telemetry.tenants["alice"].completed > 0
+    assert rt.telemetry.tenants["bob"].completed > 0
+
+
+def test_trainer_gateway_kwarg():
+    from repro.core import trainer
+    from repro.data import mnist
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    x, y = mnist.make_pair_dataset(3, 9, n_per_class=6, seed=0)
+    split = ((x[:4], y[:4]), (x[4:], y[4:]))
+    rt = GatewayRuntime(target=128, deadline=0.2)
+    rep = trainer.train(cfg, *split, epochs=1, batch_size=4, lr=0.05,
+                        gateway=rt, client_id="t1", seed=0)
+    assert len(rep.epochs) == 1
+    assert rt.telemetry.tenants["t1"].completed > 0
+    with pytest.raises(ValueError):
+        trainer.train(cfg, *split, epochs=1, gateway=rt,
+                      executor=lambda t, d: t)
+
+
+# --------------------------------------------------- virtual-clock gateway
+def sim_jobs(n=200, st=0.3):
+    return [JobSpec(f"c{k}", 5 if k < 2 else 7, 1, n, service_override=st)
+            for k in range(4)]
+
+
+def fig6_workers(contention=0.5):
+    return [WorkerConfig(f"w{i+1}", q, contention=contention)
+            for i, q in enumerate((5, 10, 15, 20))]
+
+
+def test_sim_gateway_completes_everything_and_beats_per_circuit():
+    base = SystemSimulation(fig6_workers(), sim_jobs(), fair_queue=True,
+                            classical_overhead=0.01).run()
+    gw = SystemSimulation(fig6_workers(), sim_jobs(), gateway=True,
+                          gateway_deadline=1.0, classical_overhead=0.01).run()
+    assert gw.total_circuits == 800 and len(gw.jobs) == 4
+    for k in range(4):
+        assert gw.jobs[f"c{k}"].n_circuits == 200
+    assert gw.circuits_per_second > base.circuits_per_second
+    s = gw.gateway_summary
+    assert s["total_completed"] == 800
+    assert 0.0 < s["lane_fill"] <= 1.0
+
+
+def test_sim_gateway_deadline_bounds_latency_under_light_load():
+    """A lone trickle of circuits must not wait for a full lane batch."""
+    jobs = [JobSpec("c0", 5, 1, 3, service_override=0.1)]
+    rep = SystemSimulation([WorkerConfig("w1", 5)], jobs, gateway=True,
+                           gateway_deadline=0.5).run()
+    assert rep.jobs["c0"].n_circuits == 3
+    # 3 circuits << 128: flushed by deadline, not stuck forever
+    assert rep.makespan < 2.0
+    assert rep.gateway_summary["deadline_flushes"] >= 1
+
+
+def test_sim_gateway_poisson_arrivals_stream():
+    rng = np.random.default_rng(0)
+    jobs = [JobSpec(f"c{k}", 5, 1, 100, service_override=0.1) for k in range(2)]
+    arrivals = {f"c{k}": np.cumsum(rng.exponential(1 / 50.0, 100)).tolist()
+                for k in range(2)}
+    rep = SystemSimulation(fig6_workers(), jobs, gateway=True,
+                           gateway_deadline=1.0, arrivals=arrivals).run()
+    assert all(rep.jobs[f"c{k}"].n_circuits == 100 for k in range(2))
+    s = rep.gateway_summary
+    assert s["total_completed"] == 200
+    for t in s["tenants"]:
+        assert t["p99_latency_s"] >= t["p50_latency_s"] > 0.0
+
+
+def test_sim_gateway_eviction_requeues_and_recoalesces_exactly_once():
+    """Acceptance (satellite): a worker dying mid-batch loses nothing and
+    duplicates nothing — its batch members are re-coalesced and complete
+    exactly once each."""
+    jobs = [JobSpec(f"c{k}", 5, 1, 200, service_override=5.0) for k in range(2)]
+    workers = [WorkerConfig("w1", 5), WorkerConfig("w2", 10)]
+    sim = SystemSimulation(workers, jobs, gateway=True, gateway_deadline=1.0,
+                           worker_failures={"w2": 2.0}, run_until=1e6)
+    rep = sim.run()
+    assert [wid for _, wid in rep.evictions] == ["w2"]
+    # every circuit of every client completed exactly once
+    assert rep.jobs["c0"].n_circuits == 200
+    assert rep.jobs["c1"].n_circuits == 200
+    s = rep.gateway_summary
+    assert s["total_completed"] == 400
+    for t in s["tenants"]:
+        assert t["completed"] == t["submitted"] == 200
+    # post-eviction work all lands on the survivor
+    late = [wid for (t, _, wid) in rep.assignments if t > 20.0]
+    assert late and set(late) == {"w1"}
+
+
+def test_sim_gateway_deterministic_replay():
+    def go():
+        rep = SystemSimulation(fig6_workers(), sim_jobs(n=120), gateway=True,
+                               gateway_deadline=1.0).run()
+        return rep.makespan, tuple(rep.assignments)
+    assert go() == go()
+
+
+def test_two_simulations_have_independent_task_ids():
+    """Satellite: no module-global id counter — concurrently constructed
+    simulations allocate from isolated id spaces."""
+    jobs_a = [JobSpec("a", 5, 1, 5, service_override=0.1)]
+    jobs_b = [JobSpec("b", 5, 1, 5, service_override=0.1)]
+    s1 = SystemSimulation([WorkerConfig("w1", 5)], jobs_a)
+    s2 = SystemSimulation([WorkerConfig("w1", 5)], jobs_b)
+    r1, r2 = s1.run(), s2.run()   # interleaved construction, serial runs
+    ids1 = sorted(tid for _, tid, _ in r1.assignments)
+    ids2 = sorted(tid for _, tid, _ in r2.assignments)
+    assert ids1 == list(range(5)) and ids2 == list(range(5))

@@ -38,7 +38,6 @@ def test_fidelity_floor_excludes_noisy_machine():
 
 def test_floor_trades_runtime_for_retention():
     def go(policy, floor):
-        tenancy.reset_task_ids()
         jobs = [tenancy.JobSpec("c", 5, 2, 60, service_override=0.5)]
         workers = [WorkerConfig("a_clean", 10, error_rate=0.0005),
                    WorkerConfig("b_noisy", 20, speed=1.5, error_rate=0.015)]

@@ -29,7 +29,6 @@ def test_schedule_from_simulation_drives_real_execution(setup):
     banks, _ = quclassi.build_class_banks(cfg, params, x)
     n_circ = banks[0].n_circuits
 
-    tenancy.reset_task_ids()
     jobs = [tenancy.JobSpec("c1", cfg.qc, cfg.n_layers, n_circ,
                             service_override=0.1)]
     workers = homogeneous_workers(4, 10)
@@ -83,7 +82,6 @@ def test_multitenant_schedule_still_exact(setup):
     banks, _ = quclassi.build_class_banks(cfg, params, x)
     n_circ = banks[0].n_circuits
 
-    tenancy.reset_task_ids()
     jobs = [tenancy.JobSpec(f"c{k}", 5, 1, n_circ, service_override=0.05,
                             submit_time=0.2 * k) for k in range(4)]
     from repro.comanager.worker import WorkerConfig
