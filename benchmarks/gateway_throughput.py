@@ -128,9 +128,9 @@ def kernel(n: int = 128, qc: int = 5, n_layers: int = 1, seed: int = 0):
     }
 
 
-def main(run_kernel: bool = True):
+def main(run_kernel: bool = True, scale: float = 0.25):
     print("## fig6-shaped workload: 4 clients x 4 workers (virtual clock)")
-    base, gw, rows = fig6()
+    base, gw, rows = fig6(scale)
     keys = list(rows[0])
     print(",".join(keys))
     for r in rows:
@@ -152,12 +152,20 @@ def main(run_kernel: bool = True):
           f"({s['size_flushes']} size / {s['deadline_flushes']} deadline flushes)")
     assert s["lane_fill"] >= 0.5, "open-loop lane fill must stay >= 50%"
 
+    result = {
+        "fig6": rows,
+        "system_cps_uncoalesced": round(base.circuits_per_second, 2),
+        "system_cps_gateway": round(gw.circuits_per_second, 2),
+        "system_gain": round(gain, 2),
+        "poisson": s,
+    }
     if run_kernel:
         print("\n## real kernel: coalesced launch vs per-circuit launches")
         r = kernel()
         print(f"{r['n_circuits']} circuits: coalesced {r['coalesced_cps']} c/s "
               f"vs per-circuit {r['per_circuit_cps']} c/s ({r['speedup']})")
-    return rows
+        result["kernel"] = r
+    return result
 
 
 if __name__ == "__main__":

@@ -1,27 +1,40 @@
 """Kernel microbenchmark (beyond paper): fused Pallas VQC kernel vs the
-per-gate pure-JAX simulator on a circuit batch.
+per-gate pure-JAX simulator on a circuit batch, plus the shift-structured
+circuit-bank section (implicit ``ShiftBank`` + prefix-reuse kernel vs the
+materialized bank).
 
-On CPU the Pallas kernel runs in interpret mode, so WALL TIME here is not
-the TPU story; the structural win is HBM traffic: per-gate execution
-round-trips the statevector batch through memory once per gate, the fused
-kernel once per circuit.  We report measured wall time AND the analytic
-bytes-moved ratio that the roofline uses.
+On CPU the Pallas kernels run in interpret mode, so WALL TIME here is not
+the TPU story; the structural wins are analytic:
+
+  * gate fusion      — per-gate execution round-trips the statevector batch
+    through HBM once per gate, the fused kernel once per circuit;
+  * shift structure  — the materialized bank re-simulates every gate of all
+    (1 + 2P) * B rows and reads (P + D) * (1 + 2P) angle floats per sample;
+    the prefix-reuse kernel runs one data-register pass, one checkpointed
+    forward + one reversed-suffix backward pass over the trainable register,
+    and ONE gate + one inner product per (param, shift) variant, reading
+    (P + D) floats per sample.
+
+We report measured wall time AND the analytic ratios the roofline uses.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import circuits
+from repro.core import circuits, shift_rule
 from repro.kernels import ops, ref
+from repro.kernels import vqc_statevector as K
 
 
 def time_fn(fn, *args, iters: int = 3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    out = fn(*args)                      # warm up ONCE, bind the result
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -64,16 +77,87 @@ def rows(batch: int = 512):
     return out
 
 
-def main():
-    all_rows = rows()
-    keys = list(all_rows[0])
+def shift_rows(batch: int = 64, four_term: bool = False):
+    """Implicit ShiftBank through the prefix-reuse kernel vs the same bank
+    materialized through the standard fused kernel."""
+    out = []
+    for qc in (5, 7):
+        for nl in (1, 3):
+            spec = circuits.build_quclassi_circuit(qc, nl)
+            key = jax.random.PRNGKey(1)
+            theta = jax.random.uniform(key, (spec.n_theta,), jnp.float32,
+                                       minval=0.0, maxval=np.pi)
+            data = jax.random.uniform(jax.random.fold_in(key, 1),
+                                      (batch, spec.n_data), jnp.float32,
+                                      minval=0.0, maxval=np.pi)
+            bank = shift_rule.build_shift_bank(theta, data, four_term=four_term)
+            mat = bank.materialize()
+
+            implicit = jax.jit(lambda t, d: ops.vqc_fidelity_shiftbank(
+                spec, t, d, four_term))
+            materialized = jax.jit(lambda t, d: ops.vqc_fidelity(spec, t, d))
+            t_impl = time_fn(implicit, bank.theta, bank.data)
+            t_mat = time_fn(materialized, mat.theta, mat.data)
+            err = float(jnp.abs(implicit(bank.theta, bank.data)
+                                - materialized(mat.theta, mat.data)).max())
+            # assert on the RAW error: the displayed string is rounded to one
+            # significant figure and useless at the 1e-5 boundary.
+            assert err < 1e-5, (qc, nl, err)
+
+            stats = K.shift_bank_stats(spec, batch, four_term)
+            out.append({
+                "qc": qc, "layers": nl, "batch": batch,
+                "n_params": spec.n_theta, "n_circuits": bank.n_circuits,
+                "implicit_us_per_circuit": round(
+                    t_impl / bank.n_circuits * 1e6, 2),
+                "materialized_us_per_circuit": round(
+                    t_mat / bank.n_circuits * 1e6, 2),
+                "max_err": f"{err:.1e}",
+                "gate_apps_implicit": stats["gate_apps_implicit"],
+                "gate_apps_materialized": stats["gate_apps_materialized"],
+                "gate_apps_ratio": stats["gate_apps_ratio"],
+                "angle_bytes_implicit": stats["angle_bytes_implicit"],
+                "angle_bytes_materialized": stats["angle_bytes_materialized"],
+                "angle_bytes_ratio": stats["angle_bytes_ratio"],
+            })
+    return out
+
+
+def _print_table(table):
+    keys = list(table[0])
     print(",".join(keys))
-    for r in all_rows:
+    for r in table:
         print(",".join(str(r[k]) for k in keys))
+
+
+def main(quick: bool = False):
+    fused_table = rows(batch=128 if quick else 512)
+    _print_table(fused_table)
     print("# traffic_ratio = analytic HBM round-trips saved by gate fusion "
           "(the TPU-side win; CPU interpret-mode wall time is not indicative)")
-    return all_rows
+
+    print("\n## shift-structured circuit bank: implicit + prefix-reuse vs "
+          "materialized")
+    shift_table = shift_rows(batch=16 if quick else 64)
+    _print_table(shift_table)
+    print("# gate_apps_ratio / angle_bytes_ratio = analytic per-step savings "
+          "of the shift-structured executor (acceptance: >=5x / >=10x at "
+          "7q/3l)")
+    r7 = next(r for r in shift_table if r["qc"] == 7 and r["layers"] == 3)
+    assert r7["gate_apps_ratio"] >= 5.0, r7
+    assert r7["angle_bytes_ratio"] >= 10.0, r7
+    return {"fused": fused_table, "shift_bank": shift_table}
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller batches (CI smoke run)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the result tables to PATH as JSON")
+    args = ap.parse_args()
+    result = main(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {args.json}")

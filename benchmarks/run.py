@@ -5,13 +5,21 @@
   Fig 6   : 4 concurrent clients, heterogeneous workers, multi- vs
             single-tenant
   §IV-B   : accuracy, distributed vs non-distributed  (--full only: slow)
-  extra   : fused-kernel microbenchmark (beyond paper)
+  extra   : fused-kernel + shift-bank microbenchmarks (beyond paper)
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--full]
+Every run emits machine-readable artifacts — ``BENCH_kernel.json`` (fused
+kernel wall time + analytic traffic ratios, shift-bank gate-application and
+angle-byte ratios) and ``BENCH_gateway.json`` (coalescing throughput +
+latency) — so the perf trajectory is tracked across PRs; CI uploads them.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--full | --quick]
+                                                [--out-dir DIR]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 
@@ -19,42 +27,68 @@ def section(title):
     print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
 
 
+def _write_artifact(out_dir: str, name: str, payload) -> None:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"[artifact] wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="include the slow accuracy training runs")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: kernel + gateway sections only, "
+                         "small batches, still emits BENCH_*.json")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_kernel.json / BENCH_gateway.json")
     args = ap.parse_args()
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
     t0 = time.time()
 
-    from benchmarks import (kernel_bench, multitenant, runtime_controlled,
-                            runtime_uncontrolled)
+    from benchmarks import gateway_throughput, kernel_bench
 
-    section("Fig 3 + Fig 4: IBM-Q backends (uncontrolled), runtime & c/s")
-    runtime_uncontrolled.main()
+    if not args.quick:
+        from benchmarks import (multitenant, runtime_controlled,
+                                runtime_uncontrolled)
 
-    section("Fig 5: controlled environment (GCP), one client")
-    runtime_controlled.main()
+        section("Fig 3 + Fig 4: IBM-Q backends (uncontrolled), runtime & c/s")
+        runtime_uncontrolled.main()
 
-    section("Fig 6: multi-tenant system, 4 concurrent clients")
-    multitenant.main()
+        section("Fig 5: controlled environment (GCP), one client")
+        runtime_controlled.main()
 
-    section("Kernel microbenchmark: fused Pallas VQC vs per-gate (beyond paper)")
-    kernel_bench.main()
+        section("Fig 6: multi-tenant system, 4 concurrent clients")
+        multitenant.main()
 
-    section("Noise-aware scheduling (beyond paper — the paper's §V limitation)")
-    from benchmarks import noise_aware
-    noise_aware.main()
+    section("Kernel microbenchmark: fused Pallas VQC + shift-structured "
+            "banks (beyond paper)")
+    kernel_result = kernel_bench.main(quick=args.quick)
+    _write_artifact(args.out_dir, "BENCH_kernel.json", {
+        "wall_time_note": "CPU interpret-mode wall time; analytic ratios are "
+                          "the TPU-side signal",
+        **kernel_result,
+    })
+
+    if not args.quick:
+        section("Noise-aware scheduling (beyond paper — the paper's §V "
+                "limitation)")
+        from benchmarks import noise_aware
+        noise_aware.main()
 
     section("Serving gateway: cross-tenant circuit-bank coalescing "
             "(beyond paper)")
-    from benchmarks import gateway_throughput
-    gateway_throughput.main(run_kernel=args.full)
+    gateway_result = gateway_throughput.main(
+        run_kernel=args.full, scale=0.05 if args.quick else 0.25)
+    _write_artifact(args.out_dir, "BENCH_gateway.json", gateway_result)
 
     if args.full:
         from benchmarks import accuracy
         section("§IV-B accuracy: distributed vs non-distributed")
         accuracy.main()
-    else:
+    elif not args.quick:
         section("§IV-B accuracy (skipped — pass --full; one-step gradient "
                 "equivalence check only)")
         from benchmarks import accuracy

@@ -15,10 +15,15 @@ Two execution paths:
 Both return fidelities in bank order, so ``shift_rule.assemble_gradient``
 consumes them identically — scheduling never changes the math (the accuracy
 experiments in the paper rely on exactly this property).
+
+Both executors also accept IMPLICIT ``shift_rule.ShiftBank``s (call
+``run(bank)``): the schedulable unit then becomes the (param, shift) group
+and execution goes through the prefix-reuse kernel — same bank-order
+results, a fraction of the gate applications and angle traffic.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +43,7 @@ _SM_SKIP_CHECKS = (
     if "check_vma" in _inspect.signature(_shard_map).parameters
     else {"check_rep": False})
 
+from repro.core import shift_rule
 from repro.core.sim import CircuitSpec
 from repro.kernels import ops as kops
 
@@ -46,11 +52,17 @@ def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
                             n_workers: int):
     """Executor that mimics per-worker execution.
 
-    ``assignment[i] = worker index for bank row i``.  Rows are grouped per
-    worker and executed as one fused-kernel batch each; results come back in
-    bank order via ONE inverse-permutation gather (rather than a per-worker
-    scatter loop of ``out.at[rows].set``, which built n_workers intermediate
-    arrays).
+    Materialized banks: ``assignment[i] = worker index for bank row i``.
+    Rows are grouped per worker and executed as one fused-kernel batch each;
+    results come back in bank order via ONE inverse-permutation gather
+    (rather than a per-worker scatter loop of ``out.at[rows].set``, which
+    built n_workers intermediate arrays).
+
+    Implicit ``ShiftBank``s (``run(bank)``): the schedulable unit becomes the
+    (param, shift) GROUP — ``assignment[g] = worker index for bank group g``
+    (length ``bank.n_groups``) — and each worker executes its groups as one
+    prefix-reuse kernel call over the whole sample batch, so the co-Manager
+    distributes suffix-replay subtasks instead of materialized rows.
     """
     import numpy as np
     assignment = np.asarray(assignment)
@@ -61,7 +73,7 @@ def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
     bounds = np.searchsorted(assignment[order], np.arange(n_workers + 1))
     inverse_j = jnp.asarray(inverse)
 
-    def run(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:
+    def _run_rows(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:
         groups = []
         for w in range(n_workers):
             rows = order[bounds[w]:bounds[w + 1]]
@@ -71,20 +83,55 @@ def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
                                             data_bank[rows]))
         return jnp.concatenate(groups)[inverse_j]
 
+    def _run_shiftbank(bank: shift_rule.ShiftBank) -> jnp.ndarray:
+        if len(assignment) != bank.n_groups:
+            if len(assignment) == bank.n_circuits:
+                # per-ROW assignment (legacy scheduling granularity): honor it
+                # exactly by materializing — same per-worker row placement.
+                mat = bank.materialize()
+                return _run_rows(mat.theta, mat.data)
+            raise ValueError(
+                f"assignment must cover the bank's {bank.n_groups} groups or "
+                f"{bank.n_circuits} rows, got {len(assignment)} entries")
+        outs = []
+        for w in range(n_workers):
+            grp = order[bounds[w]:bounds[w + 1]]
+            if grp.size == 0:
+                continue
+            outs.append(kops.vqc_fidelity_shiftgroups(
+                spec, bank.theta, bank.data, bank.four_term,
+                tuple(int(g) for g in grp)))
+        stacked = jnp.concatenate(outs, 0)[inverse_j]    # (n_groups, B)
+        return stacked.reshape(-1)
+
+    def run(theta_bank, data_bank=None):
+        if isinstance(theta_bank, shift_rule.ShiftBank):
+            return _run_shiftbank(theta_bank)
+        return _run_rows(theta_bank, data_bank)
+
+    run.accepts_shiftbank = True
     return run
 
 
 def round_robin_assignment(n_circuits: int, n_workers: int):
-    """The degenerate scheduler baseline (no co-management)."""
+    """The degenerate scheduler baseline (no co-management).
+
+    Also the group-assignment baseline for implicit banks (pass
+    ``n_circuits = bank.n_groups``)."""
     return [i % n_workers for i in range(n_circuits)]
 
 
 def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
     """Whole-bank shard_map executor over one mesh axis.
 
-    Pads the bank to a multiple of the axis size, shards rows, runs the fused
-    kernel per device, gathers results.  Lowerable with ShapeDtypeStructs for
-    the dry-run.
+    Materialized banks: pads the bank to a multiple of the axis size, shards
+    rows, runs the fused kernel per device, gathers results.  Lowerable with
+    ShapeDtypeStructs for the dry-run.
+
+    Implicit ``ShiftBank``s (``run(bank)``): SAMPLES are sharded instead of
+    materialized rows — every device runs the prefix-reuse kernel over its
+    sample shard and produces all (param, shift) groups for it; the gathered
+    (n_groups, B) grid flattens back to bank order.
     """
     n_shards = mesh.shape[axis]
 
@@ -100,13 +147,37 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
         **_SM_SKIP_CHECKS,
     )
 
-    def run(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:
+    shift_fns: dict[bool, Callable] = {}
+
+    def _shift_fn(four_term: bool):
+        if four_term not in shift_fns:
+            def _local_shift(theta, data):
+                return kops.vqc_fidelity_shiftgroups(spec, theta, data,
+                                                     four_term)
+            shift_fns[four_term] = _shard_map(
+                _local_shift, mesh=mesh,
+                in_specs=(P(axis, None), P(axis, None)),
+                out_specs=P(None, axis),
+                **_SM_SKIP_CHECKS,
+            )
+        return shift_fns[four_term]
+
+    def run(theta_bank, data_bank=None) -> jnp.ndarray:
+        if isinstance(theta_bank, shift_rule.ShiftBank):
+            bank = theta_bank
+            b = bank.n_samples
+            pad = (-b) % n_shards
+            t = jnp.pad(bank.theta, ((0, pad), (0, 0)))
+            d = jnp.pad(bank.data, ((0, pad), (0, 0)))
+            out = _shift_fn(bank.four_term)(t, d)        # (n_groups, B+pad)
+            return out[:, :b].reshape(-1)
         c = theta_bank.shape[0]
         pad = (-c) % n_shards
         t = jnp.pad(theta_bank, ((0, pad), (0, 0)))
         d = jnp.pad(data_bank, ((0, pad), (0, 0)))
         return shard_fn(t, d)[:c]
 
+    run.accepts_shiftbank = True
     return run
 
 

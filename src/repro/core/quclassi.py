@@ -120,37 +120,48 @@ def grad_autodiff(cfg: QuClassiConfig, params: dict, images, labels):
     return loss, g, f
 
 
-def build_class_banks(cfg: QuClassiConfig, params: dict, images: jnp.ndarray):
+def build_class_banks(cfg: QuClassiConfig, params: dict, images: jnp.ndarray,
+                      implicit: bool = False):
     """The distributable work unit: one circuit bank per class (Algorithm 1).
 
     Returns (banks, angles) where banks[c] covers every (patch, shifted-theta)
     circuit for class c.  Total circuits = C * (B*Np) * (2*P + 1).
+
+    ``implicit=True`` builds ``ShiftBank``s — base angles + shift descriptors
+    only, never the (C, P) theta matrix; shift-aware executors run them with
+    the prefix-reuse kernel, everything else via ``materialize()``.
     """
     patches = segmentation.segment(images, cfg.seg)
     angles = encode_patches(cfg, params, patches).reshape(-1, cfg.n_angles)
-    banks = [shift_rule.build_bank(params["theta"][c], angles)
-             for c in range(cfg.n_classes)]
+    build = shift_rule.build_shift_bank if implicit else shift_rule.build_bank
+    banks = [build(params["theta"][c], angles) for c in range(cfg.n_classes)]
     return banks, angles
 
 
 def grad_shift(cfg: QuClassiConfig, params: dict, images, labels,
-               executor: shift_rule.Executor | None = None):
+               executor: shift_rule.Executor | None = None,
+               implicit: bool | None = None):
     """Paper-faithful distributed gradient: execute per-class circuit banks
     (optionally through the co-Manager) and assemble theta gradients.
+
+    ``implicit``: route through implicit ``ShiftBank``s (None = auto: exactly
+    when the executor advertises ``accepts_shiftbank``).
 
     Dense-layer params, when present, are trained with exact chain-rule
     gradients holding theta fixed (autodiff through the data-encoding path) —
     see DESIGN.md §2 for why this mirrors the paper's classical update.
     """
     spec = cfg.spec
-    banks, _ = build_class_banks(cfg, params, images)
     run = executor or shift_rule.default_executor(spec)
+    if implicit is None:
+        implicit = getattr(run, "accepts_shiftbank", False)
+    banks, _ = build_class_banks(cfg, params, images, implicit=implicit)
     onehot = jax.nn.one_hot(labels, cfg.n_classes)
     b, np_ = images.shape[0], cfg.n_patches
 
     theta_grads, losses, fids_per_class = [], [], []
     for c, bank in enumerate(banks):
-        fids = run(bank.theta, bank.data)
+        fids = shift_rule.run_bank(run, bank)
         f0, f_plus, f_minus = bank.split_results(fids)[:3]
         # class score per image = mean patch fidelity (matches
         # class_fidelities); chain BCE through the per-image MEAN, then

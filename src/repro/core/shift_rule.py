@@ -46,6 +46,36 @@ def controlled_param_indices(spec: CircuitSpec) -> tuple[int, ...]:
     return tuple(sorted(set(idx)))
 
 
+def shift_values(four_term: bool) -> tuple[float, ...]:
+    """Shift magnitudes in bank-group order: +-pi/2 [, +-3pi/2]."""
+    base = (SHIFT, -SHIFT)
+    return base + (3 * SHIFT, -3 * SHIFT) if four_term else base
+
+
+def group_descriptors(n_params: int, four_term: bool):
+    """Per-(param, shift) group descriptors in bank order.
+
+    Group g covers bank rows [g*B, (g+1)*B): g=0 is the unshifted base
+    (descriptor ``(-1, 0.0)``), g = 1 + s*P + j is shift s of param j.
+    """
+    out = [(-1, 0.0)]
+    for s in shift_values(four_term):
+        for j in range(n_params):
+            out.append((j, float(s)))
+    return tuple(out)
+
+
+def _split_results(f: jnp.ndarray, b: int, p: int, four_term: bool):
+    """fidelities (C,) -> (f0 (B,), f_plus (P,B), f_minus (P,B)[, f3p, f3m])."""
+    f0 = f[:b]
+    body = f[b:b + 2 * p * b].reshape(2, p, b)
+    out = [f0, body[0], body[1]]
+    if four_term:
+        tail = f[b + 2 * p * b:].reshape(2, p, b)
+        out += [tail[0], tail[1]]
+    return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class CircuitBank:
     """A flat batch of (theta, data) circuit instances + index bookkeeping.
@@ -66,15 +96,63 @@ class CircuitBank:
         return self.theta.shape[0]
 
     def split_results(self, f: jnp.ndarray):
-        """fidelities (C,) -> (f0 (B,), f_plus (P,B), f_minus (P,B)[, f3p, f3m])."""
+        return _split_results(f, self.n_samples, self.n_params, self.four_term)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftBank:
+    """An IMPLICIT circuit bank: base angles + shift descriptors only.
+
+    Semantically identical to the ``CircuitBank`` that ``materialize()``
+    returns, but it never stores the (C, P) theta matrix — just the per-sample
+    base ``theta (B, P)``, ``data (B, D)`` and the static group structure.
+    Shift-aware executors (the prefix-reuse Pallas kernel, the group-scheduled
+    data-plane executors, the serving gateway) consume it directly; everything
+    else goes through ``materialize()`` and keeps working unchanged.
+    """
+    theta: jnp.ndarray  # (B, P) base thetas, one row per sample
+    data: jnp.ndarray   # (B, D)
+    n_samples: int
+    n_params: int
+    four_term: bool
+
+    @property
+    def n_shifts(self) -> int:
+        return 4 if self.four_term else 2
+
+    @property
+    def n_groups(self) -> int:
+        return 1 + self.n_shifts * self.n_params
+
+    @property
+    def n_circuits(self) -> int:
+        return self.n_groups * self.n_samples
+
+    def group_descriptors(self):
+        return group_descriptors(self.n_params, self.four_term)
+
+    def split_results(self, f: jnp.ndarray):
+        return _split_results(f, self.n_samples, self.n_params, self.four_term)
+
+    def materialize(self) -> CircuitBank:
+        """The escape hatch: expand to the explicit (C, P) bank.
+
+        Bit-identical to ``build_bank`` on the same base angles (same
+        broadcast + concatenation arithmetic), pinned by tests.
+        """
         b, p = self.n_samples, self.n_params
-        f0 = f[:b]
-        body = f[b:b + 2 * p * b].reshape(2, p, b)
-        out = [f0, body[0], body[1]]
-        if self.four_term:
-            tail = f[b + 2 * p * b:].reshape(2, p, b)
-            out += [tail[0], tail[1]]
-        return tuple(out)
+        eye = jnp.eye(p, dtype=self.theta.dtype)
+
+        def shifted(s):
+            t = self.theta[None, :, :] + s * eye[:, None, :]   # (P, B, P)
+            return t.reshape(p * b, p)
+
+        blocks = [self.theta]
+        blocks += [shifted(s) for s in shift_values(self.four_term)]
+        theta_bank = jnp.concatenate(blocks, 0)
+        data_bank = jnp.tile(self.data, (self.n_groups, 1))
+        return CircuitBank(theta_bank, data_bank, n_samples=b, n_params=p,
+                           four_term=self.four_term)
 
 
 def build_bank(theta: jnp.ndarray, data: jnp.ndarray, four_term: bool = False) -> CircuitBank:
@@ -101,8 +179,35 @@ def build_bank(theta: jnp.ndarray, data: jnp.ndarray, four_term: bool = False) -
     return CircuitBank(theta_bank, data_bank, n_samples=b, n_params=p, four_term=four_term)
 
 
+def build_shift_bank(theta: jnp.ndarray, data: jnp.ndarray,
+                     four_term: bool = False) -> ShiftBank:
+    """Build the implicit bank. theta: (P,) or per-sample (B, P); data: (B, D)."""
+    b = data.shape[0]
+    if theta.ndim == 1:
+        theta = jnp.broadcast_to(theta[None, :], (b, theta.shape[0]))
+    return ShiftBank(theta, data, n_samples=b, n_params=theta.shape[1],
+                     four_term=four_term)
+
+
 def default_executor(spec: CircuitSpec) -> Executor:
     return jax.jit(lambda t, d: fid.fidelity_batch(spec, t, d))
+
+
+def run_bank(executor: Executor, bank) -> jnp.ndarray:
+    """Execute a bank (implicit or materialized) through ``executor``.
+
+    Executors that understand implicit banks advertise it with an
+    ``accepts_shiftbank`` attribute and are called with the ``ShiftBank``
+    itself; every other executor keeps its ``(theta, data)`` signature and
+    receives the materialized bank — the escape hatch that keeps the whole
+    existing executor zoo working.
+    """
+    if isinstance(bank, ShiftBank):
+        if getattr(executor, "accepts_shiftbank", False):
+            return executor(bank)
+        mat = bank.materialize()
+        return executor(mat.theta, mat.data)
+    return executor(bank.theta, bank.data)
 
 
 def assemble_gradient(spec: CircuitSpec, bank: CircuitBank, fids: jnp.ndarray,
@@ -130,16 +235,25 @@ def assemble_gradient(spec: CircuitSpec, bank: CircuitBank, fids: jnp.ndarray,
 
 def parameter_shift_grad(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
                          labels: jnp.ndarray, executor: Executor | None = None,
-                         exact_controlled: bool = False):
+                         exact_controlled: bool = False,
+                         implicit: bool | None = None):
     """One full Algorithm-1 gradient step's worth of circuit-bank work.
 
     Builds the bank, executes it (by default locally; in the distributed
     system the executor routes through the co-Manager), assembles gradients.
+
+    ``implicit``: build a ``ShiftBank`` (never materializing the (C, P) theta
+    matrix) instead of the explicit bank.  ``None`` = auto: implicit exactly
+    when the executor advertises ``accepts_shiftbank``.  Shift-unaware
+    executors still work under ``implicit=True`` via ``materialize()``.
     """
     four = exact_controlled and bool(controlled_param_indices(spec))
-    bank = build_bank(theta, data, four_term=four)
     run = executor or default_executor(spec)
-    fids = run(bank.theta, bank.data)
+    if implicit is None:
+        implicit = getattr(run, "accepts_shiftbank", False)
+    build = build_shift_bank if implicit else build_bank
+    bank = build(theta, data, four_term=four)
+    fids = run_bank(run, bank)
     return assemble_gradient(spec, bank, fids, labels)
 
 

@@ -44,7 +44,7 @@ class TrainReport:
 def train(cfg: QuClassiConfig, train_set, test_set, *,
           epochs: int = 10, batch_size: int = 8, lr: float = 1e-3,
           grad_mode: str = "shift", executor=None, optimizer: str = "sgd",
-          gateway=None, client_id: str = "trainer",
+          gateway=None, client_id: str = "trainer", bank_mode: str = "auto",
           seed: int = 0, log: Optional[Callable[[str], None]] = None) -> TrainReport:
     """Train QuClassi per Algorithm 1.
 
@@ -58,11 +58,22 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
     runtime) into lane-aligned mega-batches, placed by the co-Manager, and
     executed by the fused Pallas kernel.  Fidelities come back in submission
     order, so gradient assembly is unchanged.
+
+    ``bank_mode``: 'materialized' (explicit (C, P) circuit banks),
+    'implicit' (``ShiftBank``s — shift-aware executors run them through the
+    prefix-reuse kernel; a gateway then carries per-(param, shift) group
+    subtasks instead of per-row circuits), or 'auto' (implicit exactly when
+    the executor advertises ``accepts_shiftbank``).
     """
+    if bank_mode not in ("auto", "implicit", "materialized"):
+        raise ValueError(f"unknown bank_mode {bank_mode!r}")
+    implicit = {"auto": None, "implicit": True, "materialized": False}[bank_mode]
     if gateway is not None:
         if executor is not None:
             raise ValueError("pass either executor or gateway, not both")
-        executor = gateway.executor(cfg.spec, client_id)
+        executor = (gateway.shift_executor(cfg.spec, client_id)
+                    if bank_mode == "implicit"
+                    else gateway.executor(cfg.spec, client_id))
     (xtr, ytr), (xte, yte) = train_set, test_set
     xtr, xte = pipeline.clean(xtr), pipeline.clean(xte)
     params = quclassi.init_params(cfg, jax.random.PRNGKey(seed))
@@ -78,7 +89,8 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
             xb, yb = jnp.asarray(xb), jnp.asarray(yb)
             if grad_mode == "shift":
                 loss, grads, _ = quclassi.grad_shift(cfg, params, xb, yb,
-                                                     executor=executor)
+                                                     executor=executor,
+                                                     implicit=implicit)
                 n_circ += quclassi.total_bank_circuits(cfg, xb.shape[0])
             else:
                 loss, grads, _ = quclassi.grad_autodiff(cfg, params, xb, yb)

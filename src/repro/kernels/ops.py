@@ -35,3 +35,55 @@ def vqc_state(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray):
 def kernel_executor(spec: CircuitSpec):
     """shift_rule.Executor backed by the fused Pallas kernel."""
     return lambda theta_bank, data_bank: vqc_fidelity(spec, theta_bank, data_bank)
+
+
+# ------------------------------------------------- shift-structured banks
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def vqc_fidelity_shiftgroups(spec: CircuitSpec, theta: jnp.ndarray,
+                             data: jnp.ndarray, four_term: bool = False,
+                             groups: tuple[int, ...] | None = None) -> jnp.ndarray:
+    """Shift-bank fidelities for the requested groups, (G, B).
+
+    ``theta (B, P)`` / ``data (B, D)`` are the IMPLICIT bank — base angles
+    only.  Uses the prefix-reuse kernel when the circuit matches the
+    SWAP-test product structure; otherwise materializes just the requested
+    groups and runs the standard fused kernel (same results, more work).
+    """
+    from repro.core import shift_rule
+    if K.build_shift_plan(spec) is not None:
+        return jnp.clip(
+            K.vqc_shift_fidelity(spec, theta, data, four_term=four_term,
+                                 groups=groups), 0.0, 1.0)
+    descs = shift_rule.group_descriptors(theta.shape[1], four_term)
+    if groups is None:
+        groups = tuple(range(len(descs)))
+    blocks = []
+    for g in groups:
+        j, s = descs[g]
+        blocks.append(theta if j < 0 else theta.at[:, j].add(s))
+    b = theta.shape[0]
+    theta_bank = jnp.concatenate(blocks, 0)
+    data_bank = jnp.tile(data, (len(groups), 1))
+    return vqc_fidelity(spec, theta_bank, data_bank).reshape(len(groups), b)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def vqc_fidelity_shiftbank(spec: CircuitSpec, theta: jnp.ndarray,
+                           data: jnp.ndarray, four_term: bool = False) -> jnp.ndarray:
+    """Whole implicit bank -> flat (C,) fidelities in materialized-bank order."""
+    return vqc_fidelity_shiftgroups(spec, theta, data, four_term).reshape(-1)
+
+
+def shiftbank_executor(spec: CircuitSpec):
+    """A ``shift_rule.Executor`` that consumes implicit ``ShiftBank``s
+    directly (``accepts_shiftbank``) via the prefix-reuse kernel.  Also
+    accepts plain ``(theta_bank, data_bank)`` calls — materialized banks run
+    through the standard fused kernel, so the executor composes with every
+    bank mode."""
+    def run(bank, data_bank=None):
+        if data_bank is not None:
+            return vqc_fidelity(spec, bank, data_bank)
+        return vqc_fidelity_shiftbank(spec, bank.theta, bank.data,
+                                      bank.four_term)
+    run.accepts_shiftbank = True
+    return run

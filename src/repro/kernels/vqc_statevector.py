@@ -26,6 +26,7 @@ at TB=128); beyond that, shrink TB.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Sequence
 
@@ -149,29 +150,51 @@ def _cswap(re, im, qa, qb, qc_, n):
     return outs[0], outs[1]
 
 
+def _op_angle(op, theta_blk, data_blk, delta: float = 0.0):
+    """Per-lane angle vector for a parameterized op (+ static shift delta)."""
+    kind, j = op.param
+    if kind == "theta":
+        ang = theta_blk[j]
+    elif kind == "data":
+        ang = data_blk[j]
+    elif kind == "const":
+        ang = jnp.asarray(j, jnp.float32)
+    else:
+        raise ValueError(op.param)
+    return ang + delta if delta else ang
+
+
+def _apply_one(op, re, im, n, theta_blk, data_blk, delta: float = 0.0,
+               invert: bool = False):
+    """Apply one gate (optionally angle-shifted by ``delta`` or inverted)."""
+    if op.gate == "h":
+        return _h(re, im, op.qubits[0], n)       # self-inverse
+    if op.gate == "cswap":
+        qa, qb, qc_ = op.qubits
+        return _cswap(re, im, qa, qb, qc_, n)    # self-inverse
+    ang = _op_angle(op, theta_blk, data_blk, delta)
+    if invert:                                   # rotation: g(t)^dagger = g(-t)
+        ang = -ang
+    c, s = jnp.cos(ang / 2), jnp.sin(ang / 2)
+    if op.gate in ("rx", "ry", "rz"):
+        return _rot1(re, im, op.qubits[0], n, c, s, op.gate)
+    if op.gate in ("ryy", "rzz", "cry", "crz"):
+        qa, qb = op.qubits
+        if qa > qb:
+            if op.gate in ("ryy", "rzz"):        # symmetric under qubit swap
+                qa, qb = qb, qa
+            else:
+                raise NotImplementedError(
+                    f"{op.gate} requires ascending (control, target) qubits")
+        return _rot2(re, im, qa, qb, n, c, s, op.gate)
+    raise NotImplementedError(op.gate)
+
+
 def _apply_ops(spec: CircuitSpec, re, im, theta_blk, data_blk):
     """Unrolled gate sequence on a (dim, TB) tile. theta_blk: (P, TB)."""
     n = spec.n_qubits
     for op in spec.ops:
-        if op.gate == "h":
-            re, im = _h(re, im, op.qubits[0], n)
-            continue
-        if op.gate == "cswap":
-            qa, qb, qc_ = op.qubits
-            re, im = _cswap(re, im, qa, qb, qc_, n)
-            continue
-        kind, j = op.param
-        ang = theta_blk[j] if kind == "theta" else data_blk[j]  # (TB,)
-        c, s = jnp.cos(ang / 2), jnp.sin(ang / 2)
-        if op.gate in ("rx", "ry", "rz"):
-            re, im = _rot1(re, im, op.qubits[0], n, c, s, op.gate)
-        elif op.gate in ("ryy", "rzz", "cry", "crz"):
-            qa, qb = op.qubits
-            if qa > qb:
-                raise NotImplementedError("kernel assumes ascending qubit pairs")
-            re, im = _rot2(re, im, qa, qb, n, c, s, op.gate)
-        else:
-            raise NotImplementedError(op.gate)
+        re, im = _apply_one(op, re, im, n, theta_blk, data_blk)
     return re, im
 
 
@@ -252,3 +275,285 @@ def vqc_state(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
     data_t = jnp.pad(data, ((0, pad), (0, 0))).T
     re, im = _grid_call(spec, theta_t, data_t, tb, interpret, want_state=True)
     return re[:, :c].T, im[:, :c].T
+
+
+# ----------------------------------------------- shift-structured execution
+#
+# The parameter-shift circuit bank is pathologically redundant: its
+# (1 + 2P) * B rows differ from the B base rows by exactly ONE angle each.
+# ``vqc_p0`` on a materialized bank re-simulates every gate of every row —
+# (1+2P) * G gate applications and (P+D) * (1+2P) angle floats per sample.
+#
+# The QuClassi circuit family has structure the kernel can verify statically
+# and exploit to do far better than generic suffix replay:
+#
+#   * all ops before the SWAP-test tail act on two DISJOINT registers —
+#     encoding on the data register (no trainable angles), the variational
+#     stack on the trainable register (all trainable angles);
+#   * the SWAP-test tail [H(a), CSWAP(a, d_i, t_i)..., H(a)] measures
+#     P0 = (1 + |<psi_d|psi_t>|^2) / 2 exactly, so fidelity = 2*P0 - 1
+#     = |<psi_d|psi_t>|^2 — an inner product of the two register states.
+#
+# The shift kernel therefore evolves the two 2**m-dim register states
+# (m = register width) instead of the 2**(2m+1)-dim full state:
+#
+#   1. data register: ONE pass (theta-independent, shared by every variant);
+#   2. trainable register FORWARD pass with base angles, checkpointing the
+#      prefix state psi_j just before each parameter's (single) dependent
+#      gate in VMEM — 2*4*2**m*TB bytes per checkpointed prefix;
+#   3. trainable register BACKWARD pass holding the reversed-suffix state
+#      chi_j = (U_suffix_j)^dagger psi_d; a rotation gate's shifted variant
+#      G_j(theta_j + s) then satisfies
+#         F(j, s) = |<psi_d| U_suf G_j(theta_j+s) |psi_j>|^2
+#                 = |<chi_j| G_j(theta_j+s) |psi_j>|^2,
+#      i.e. each of the 2P (or 4P) variants costs ONE gate application plus
+#      one 2**m-dim inner product instead of a full-circuit simulation.
+#
+# Per sample-tile the kernel reads (P + D) * TB angle floats (vs
+# (P+D) * (1+2P) * TB materialized) and applies D_g + 2*T_g + n_variants
+# register-local gates (vs (1+2P) * G full-state gates) — the ratios
+# ``shift_bank_stats`` reports and benchmarks/kernel_bench.py tracks.
+#
+# Circuits that don't match the verified structure (interleaved registers,
+# multi-use parameters, theta on the data register, non-SWAP-test tail)
+# return ``None`` from ``build_shift_plan`` and fall back to the
+# materialized-bank path in ``kernels.ops``.
+
+ROT_GATES = ("rx", "ry", "rz", "ryy", "rzz", "cry", "crz")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftPlan:
+    """Static execution plan for the prefix-reuse shift kernel.
+
+    ``data_ops`` / ``train_ops`` are the body ops remapped to register-local
+    qubit indices (register width ``m``); ``theta_pos[j]`` is the index into
+    ``train_ops`` of parameter j's unique dependent gate, or -1 when the
+    parameter drives no gate (its shifted fidelity is the base fidelity).
+    """
+    m: int
+    data_ops: tuple
+    train_ops: tuple
+    theta_pos: tuple[int, ...]
+
+
+def _remap_op(op, mapping):
+    return dataclasses.replace(op, qubits=tuple(mapping[q] for q in op.qubits))
+
+
+@functools.lru_cache(maxsize=None)
+def build_shift_plan(spec: CircuitSpec) -> ShiftPlan | None:
+    """Verify the SWAP-test product structure; None -> caller must fall back."""
+    ops = spec.ops
+    # --- tail: H(anc), m CSWAP(anc, d_i, t_i), H(anc)
+    if len(ops) < 3 or ops[-1].gate != "h":
+        return None
+    anc = ops[-1].qubits[0]
+    k = len(ops) - 2
+    pairs = []
+    while k >= 0 and ops[k].gate == "cswap":
+        a, d, t = ops[k].qubits
+        if a != anc:
+            return None
+        pairs.append((d, t))
+        k -= 1
+    if k < 0 or ops[k].gate != "h" or ops[k].qubits != (anc,) or not pairs:
+        return None
+    pairs.reverse()
+    data_q = [d for d, _ in pairs]
+    train_q = [t for _, t in pairs]
+    m = len(pairs)
+    regs = set(data_q) | set(train_q) | {anc}
+    if len(regs) != 2 * m + 1 or regs != set(range(spec.n_qubits)):
+        return None
+    data_map = {q: i for i, q in enumerate(data_q)}
+    train_map = {q: i for i, q in enumerate(train_q)}
+
+    # --- body: every op entirely inside one register; theta only on train
+    data_ops, train_ops = [], []
+    theta_pos: dict[int, int] = {}
+    for op in ops[:k]:
+        qs = set(op.qubits)
+        is_theta = op.param is not None and op.param[0] == "theta"
+        if qs <= set(data_q):
+            if is_theta or op.gate == "cswap":
+                return None
+            data_ops.append(_remap_op(op, data_map))
+        elif qs <= set(train_q):
+            if op.gate == "cswap":
+                return None
+            if is_theta:
+                j = op.param[1]
+                if j in theta_pos or op.gate not in ROT_GATES:
+                    return None       # multi-use params need full suffix replay
+                theta_pos[j] = len(train_ops)
+            train_ops.append(_remap_op(op, train_map))
+        else:
+            return None               # op straddles registers / touches ancilla
+    # descending cry/crz would raise inside the kernel; reject here instead
+    for op in data_ops + train_ops:
+        if op.gate in ("cry", "crz") and op.qubits[0] > op.qubits[1]:
+            return None
+    pos = tuple(theta_pos.get(j, -1) for j in range(spec.n_theta))
+    return ShiftPlan(m=m, data_ops=tuple(data_ops), train_ops=tuple(train_ops),
+                     theta_pos=pos)
+
+
+def _zero_tile(dim: int, tb: int):
+    row = jax.lax.broadcasted_iota(jnp.int32, (dim, tb), 0)
+    re = jnp.where(row == 0, 1.0, 0.0).astype(jnp.float32)
+    im = jnp.zeros((dim, tb), jnp.float32)
+    return re, im
+
+
+def _inner_fidelity(chi, phi):
+    """|<chi|phi>|^2 per lane; chi/phi are (re, im) pairs of (dim, TB)."""
+    cre, cim = chi
+    pre, pim = phi
+    ip_re = (cre * pre + cim * pim).sum(axis=0)
+    ip_im = (cre * pim - cim * pre).sum(axis=0)
+    return ip_re * ip_re + ip_im * ip_im
+
+
+def _shiftbank_kernel(plan: ShiftPlan, shifts, groups, n_params: int,
+                      theta_ref, data_ref, out_ref):
+    """Compute the requested shift groups for one sample tile.
+
+    Output rows follow ``groups``: group 0 is the base fidelity, group
+    1 + s*P + j is shift s of param j (bank order).
+    """
+    tb = theta_ref.shape[-1]
+    dim = 2 ** plan.m
+    theta_blk = theta_ref[...]
+    data_blk = data_ref[...]
+
+    # 1. data register: one theta-independent pass, shared by every variant.
+    d_re, d_im = _zero_tile(dim, tb)
+    for op in plan.data_ops:
+        d_re, d_im = _apply_one(op, d_re, d_im, plan.m, theta_blk, data_blk)
+
+    wanted = set(groups)
+    variants = {}                       # op position -> [(group, param, shift)]
+    for s_idx, s in enumerate(shifts):
+        for j in range(n_params):
+            g = 1 + s_idx * n_params + j
+            if g not in wanted:
+                continue
+            if plan.theta_pos[j] < 0:
+                variants.setdefault(-1, []).append((g, j, s))  # unused param
+            else:
+                variants.setdefault(plan.theta_pos[j], []).append((g, j, s))
+
+    # 2. forward pass with base angles, checkpointing each needed prefix.
+    checkpoints = {}
+    t_re, t_im = _zero_tile(dim, tb)
+    for k, op in enumerate(plan.train_ops):
+        if k in variants:
+            checkpoints[k] = (t_re, t_im)
+        t_re, t_im = _apply_one(op, t_re, t_im, plan.m, theta_blk, data_blk)
+
+    rows = {}
+    f0 = _inner_fidelity((d_re, d_im), (t_re, t_im))
+    if 0 in wanted:
+        rows[0] = f0
+    for g, _, _ in variants.get(-1, ()):   # shifting an unused param is a no-op
+        rows[g] = f0
+
+    # 3. backward pass: chi = (suffix)^dagger psi_d; one gate + one inner
+    #    product per variant.
+    c_re, c_im = d_re, d_im
+    for k in range(len(plan.train_ops) - 1, -1, -1):
+        op = plan.train_ops[k]
+        for g, j, s in variants.get(k, ()):
+            p_re, p_im = checkpoints[k]
+            v_re, v_im = _apply_one(op, p_re, p_im, plan.m, theta_blk,
+                                    data_blk, delta=s)
+            rows[g] = _inner_fidelity((c_re, c_im), (v_re, v_im))
+        if k > 0:                      # nothing consumes chi before op 0
+            c_re, c_im = _apply_one(op, c_re, c_im, plan.m, theta_blk,
+                                    data_blk, invert=True)
+    out_ref[...] = jnp.stack([rows[g] for g in groups], axis=0)
+
+
+def vqc_shift_fidelity(spec: CircuitSpec, theta: jnp.ndarray,
+                       data: jnp.ndarray, *, four_term: bool = False,
+                       groups: tuple[int, ...] | None = None,
+                       tb: int = 4 * LANES,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Prefix-reuse shift-bank fidelities. theta: (B,P), data: (B,D).
+
+    Returns (G, B) where G = len(groups) (default: every group of the bank,
+    1 + 2P or 1 + 4P rows) — row g is |<psi_d|psi_t>|^2 with the group's
+    (param, shift) applied.  Flattening in group-major order reproduces the
+    materialized bank's fidelity vector exactly (same layout).
+
+    Raises ValueError when the spec doesn't match the SWAP-test product
+    structure; call ``build_shift_plan`` first (or use ``kernels.ops``,
+    which falls back to the materialized path).
+    """
+    plan = build_shift_plan(spec)
+    if plan is None:
+        raise ValueError("circuit does not match the SWAP-test product "
+                         "structure; use the materialized-bank path")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_shifts = 4 if four_term else 2
+    n_groups = 1 + n_shifts * spec.n_theta
+    if groups is None:
+        groups = tuple(range(n_groups))
+    if not groups or not all(0 <= g < n_groups for g in groups):
+        raise ValueError(f"groups out of range for {n_groups}-group bank: {groups}")
+
+    from repro.core.shift_rule import shift_values
+    shifts = tuple(float(s) for s in shift_values(four_term))
+
+    b = theta.shape[0]
+    p, d = theta.shape[1], data.shape[1]
+    tb = min(tb, max(LANES, 1 << (b - 1).bit_length()))
+    pad = (-b) % tb
+    theta_t = jnp.pad(theta.astype(jnp.float32), ((0, pad), (0, 0))).T
+    data_t = jnp.pad(data.astype(jnp.float32), ((0, pad), (0, 0))).T
+    g = len(groups)
+    kern = functools.partial(_shiftbank_kernel, plan, shifts, groups,
+                             spec.n_theta)
+    out = pl.pallas_call(
+        kern,
+        grid=((b + pad) // tb,),
+        in_specs=[pl.BlockSpec((p, tb), lambda i: (0, i)),
+                  pl.BlockSpec((d, tb), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((g, tb), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((g, b + pad), jnp.float32),
+        interpret=interpret,
+    )(theta_t, data_t)
+    return out[:, :b]
+
+
+# ------------------------------------------------------- analytic counters
+def shift_bank_stats(spec: CircuitSpec, n_samples: int,
+                     four_term: bool = False) -> dict:
+    """Analytic gate-application and angle-traffic counts, implicit vs
+    materialized — the ratios the acceptance benchmark tracks."""
+    p, d = spec.n_theta, spec.n_data
+    n_groups = 1 + (4 if four_term else 2) * p
+    g_full = len(spec.ops)
+    mat_gates = n_groups * g_full * n_samples
+    mat_angle_floats = n_groups * n_samples * (p + d)
+    plan = build_shift_plan(spec)
+    if plan is None:                        # fallback executes the same work
+        impl_gates = mat_gates
+        impl_angle_floats = mat_angle_floats
+    else:
+        n_variants = sum(1 for j in range(p) if plan.theta_pos[j] >= 0) * \
+            (4 if four_term else 2)
+        impl_gates = (len(plan.data_ops) + 2 * len(plan.train_ops)
+                      + n_variants) * n_samples
+        impl_angle_floats = n_samples * (p + d)
+    return {
+        "n_groups": n_groups,
+        "gate_apps_materialized": mat_gates,
+        "gate_apps_implicit": impl_gates,
+        "gate_apps_ratio": round(mat_gates / impl_gates, 1),
+        "angle_bytes_materialized": 4 * mat_angle_floats,
+        "angle_bytes_implicit": 4 * impl_angle_floats,
+        "angle_bytes_ratio": round(mat_angle_floats / impl_angle_floats, 1),
+    }

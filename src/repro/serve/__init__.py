@@ -7,11 +7,12 @@ See ``gateway`` (admission / fairness / backpressure), ``coalescer``
 ``metrics`` (per-tenant latency / throughput / lane-fill telemetry).
 """
 from repro.serve.coalescer import CoalescedBatch, Coalescer, PendingCircuit
-from repro.serve.dispatcher import Dispatcher, GatewayRuntime
+from repro.serve.dispatcher import Dispatcher, GatewayRuntime, ShiftGroupKey
 from repro.serve.gateway import Backpressure, CircuitFuture, Gateway
 from repro.serve.metrics import Telemetry
 
 __all__ = [
     "Backpressure", "CircuitFuture", "CoalescedBatch", "Coalescer",
-    "Dispatcher", "Gateway", "GatewayRuntime", "PendingCircuit", "Telemetry",
+    "Dispatcher", "Gateway", "GatewayRuntime", "PendingCircuit",
+    "ShiftGroupKey", "Telemetry",
 ]

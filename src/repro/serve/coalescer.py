@@ -36,6 +36,8 @@ class PendingCircuit:
     arrival: float
     payload: Any          # (theta_row, data_row) | simulation CircuitTask
     future: Any = None    # CircuitFuture in the real data plane
+    lanes: int = 1        # kernel lanes this item occupies (a shift-group
+                          # subtask covers its bank's B sample lanes)
 
 
 @dataclasses.dataclass
@@ -50,12 +52,24 @@ class CoalescedBatch:
     def n(self) -> int:
         return len(self.members)
 
+    @property
+    def lane_count(self) -> int:
+        """Kernel lanes the members actually occupy (== n for row circuits)."""
+        return sum(m.lanes for m in self.members)
+
     def padded(self, lanes: int = LANES) -> int:
-        return math.ceil(self.n / lanes) * lanes
+        """Lanes the kernel launch actually pays for.
+
+        Row circuits share lane rows, so the batch pads once as a whole; a
+        multi-lane member (shift-group subtask) gets its own kernel rows and
+        pads its B sample lanes independently."""
+        if all(m.lanes == 1 for m in self.members):
+            return math.ceil(self.n / lanes) * lanes
+        return sum(math.ceil(m.lanes / lanes) * lanes for m in self.members)
 
     @property
     def lane_fill(self) -> float:
-        return self.n / self.padded()
+        return self.lane_count / self.padded()
 
     def clients(self) -> set[str]:
         return {m.client_id for m in self.members}
@@ -100,6 +114,7 @@ class Coalescer:
                 out.append(CoalescedBatch(key, buf[:self.target], created=now,
                                           by_deadline=True))
                 del buf[:self.target]
+        self._drop_empty()
         return out
 
     def flush_all(self, now: float) -> list[CoalescedBatch]:
@@ -110,7 +125,15 @@ class Coalescer:
                 out.append(CoalescedBatch(key, buf[:self.target], created=now,
                                           by_deadline=True))
                 del buf[:self.target]
+        self._drop_empty()
         return out
+
+    def _drop_empty(self) -> None:
+        """Retire emptied buffers: single-use keys (one per submitted
+        ShiftBank) would otherwise accumulate forever and every pump scans
+        the whole dict."""
+        for key in [k for k, buf in self._buffers.items() if not buf]:
+            del self._buffers[key]
 
     # ---------------------------------------------------------- inspection
     def next_deadline(self) -> Optional[float]:

@@ -13,6 +13,8 @@ in ``repro.comanager.simulation`` (``gateway=True``).
 """
 from __future__ import annotations
 
+import dataclasses
+import itertools
 import time
 from typing import Callable, Sequence
 
@@ -30,14 +32,36 @@ from repro.serve.metrics import Telemetry
 #: kernel runner signature: (spec, theta (C,P), data (C,D)) -> fidelities (C,)
 KernelFn = Callable[[CircuitSpec, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
+#: shift-group runner: (spec, theta (B,P), data (B,D), four_term, groups)
+#: -> per-group fidelities (len(groups), B)
+ShiftKernelFn = Callable[[CircuitSpec, jnp.ndarray, jnp.ndarray, bool,
+                          tuple], jnp.ndarray]
+
+@dataclasses.dataclass(frozen=True)
+class ShiftGroupKey:
+    """Coalescing key for one implicit bank's (param, shift) group subtasks.
+
+    All groups of one submitted ``ShiftBank`` share a key (they coalesce into
+    joint prefix-reuse kernel launches); ``bank_token`` keeps different banks
+    — different base angles — apart."""
+    spec: CircuitSpec
+    bank_token: int
+
 
 class Dispatcher:
     def __init__(self, gateway: Gateway, workers: Sequence[WorkerConfig],
                  *, manager: CoManager | None = None,
-                 kernel: KernelFn | None = None, clock=time.perf_counter):
+                 kernel: KernelFn | None = None,
+                 shift_kernel: ShiftKernelFn | None = None,
+                 clock=time.perf_counter):
         self.gateway = gateway
         self.manager = manager or CoManager(multi_tenant=True)
         self.kernel = kernel or kops.vqc_fidelity
+        self.shift_kernel = shift_kernel or kops.vqc_fidelity_shiftgroups
+        # distinguishes shift-group submissions of different banks (different
+        # base angles can never share a kernel launch, so they must not
+        # coalesce); per-dispatcher so concurrent runtimes stay deterministic.
+        self.bank_tokens = itertools.count()
         self.clock = clock
         self.task_ids = TaskIdAllocator()
         self.batch_log: list[tuple[str, int, tuple]] = []  # (worker, n, clients)
@@ -52,8 +76,10 @@ class Dispatcher:
         key = batch.key
         if isinstance(key, CircuitSpec):
             return key.n_qubits
-        raise TypeError(f"dispatcher batches must be keyed by CircuitSpec, "
-                        f"got {type(key).__name__}")
+        if isinstance(key, ShiftGroupKey):
+            return key.spec.n_qubits
+        raise TypeError(f"dispatcher batches must be keyed by CircuitSpec or "
+                        f"ShiftGroupKey, got {type(key).__name__}")
 
     def run_batch(self, batch: CoalescedBatch) -> str:
         """Place one batch via Algorithm 2 and execute it on the spot."""
@@ -65,10 +91,21 @@ class Dispatcher:
             raise RuntimeError(
                 f"no worker fits a {task.demand}-qubit batch "
                 f"(capacities: {[v.max_qubits for v in self.manager.workers.values()]})")
-        spec: CircuitSpec = batch.key
-        theta = jnp.stack([m.payload[0] for m in batch.members])
-        data = jnp.stack([m.payload[1] for m in batch.members])
-        fids = self.kernel(spec, theta, data)
+        if isinstance(batch.key, ShiftGroupKey):
+            # one prefix-reuse kernel launch computes every coalesced
+            # (param, shift) group of this bank; member i gets its group's
+            # (B,) fidelity row.
+            spec = batch.key.spec
+            bank = batch.members[0].payload[0]
+            groups = tuple(int(m.payload[1]) for m in batch.members)
+            rows = self.shift_kernel(spec, bank.theta, bank.data,
+                                     bank.four_term, groups)
+            fids = [rows[i] for i in range(len(batch.members))]
+        else:
+            spec: CircuitSpec = batch.key
+            theta = jnp.stack([m.payload[0] for m in batch.members])
+            data = jnp.stack([m.payload[1] for m in batch.members])
+            fids = self.kernel(spec, theta, data)
         self.manager.complete(wid, task, self.clock())
         self.gateway.complete(batch, fids, self.clock())
         self.batch_log.append((wid, batch.n, tuple(sorted(batch.clients()))))
@@ -101,8 +138,9 @@ class GatewayRuntime:
 
     def __init__(self, workers: Sequence[WorkerConfig] | None = None, *,
                  target: int | None = None, deadline: float = 1.0,
-                 kernel: KernelFn | None = None, clock=time.perf_counter,
-                 **gateway_opts):
+                 kernel: KernelFn | None = None,
+                 shift_kernel: ShiftKernelFn | None = None,
+                 clock=time.perf_counter, **gateway_opts):
         if workers is None:
             workers = [WorkerConfig(f"w{i+1}", q)
                        for i, q in enumerate((5, 10, 15, 20))]
@@ -110,7 +148,7 @@ class GatewayRuntime:
         self.gateway = Gateway(target=target, deadline=deadline,
                                telemetry=self.telemetry, **gateway_opts)
         self.dispatcher = Dispatcher(self.gateway, workers, kernel=kernel,
-                                     clock=clock)
+                                     shift_kernel=shift_kernel, clock=clock)
 
     def executor(self, spec: CircuitSpec, client_id: str,
                  *, weight: float = 1.0):
@@ -135,4 +173,39 @@ class GatewayRuntime:
             self.dispatcher.drain()
             return jnp.stack([f.value for f in futures])
 
+        return run
+
+    def shift_executor(self, spec: CircuitSpec, client_id: str,
+                       *, weight: float = 1.0):
+        """A shift-aware ``shift_rule.Executor``: an implicit ``ShiftBank``
+        enters the gateway as per-(param, shift) GROUP subtasks — 1 + 2P
+        admissions instead of (1 + 2P) * B — which the coalescer packs into
+        joint prefix-reuse kernel launches and the co-Manager places as
+        whole-batch tasks.  Group fidelities come back in bank order, so
+        ``shift_rule.assemble_gradient`` consumes them unchanged.
+
+        Plain ``(theta_bank, data_bank)`` calls are also accepted and fall
+        back to per-row submission, so the executor composes with every bank
+        mode."""
+        row_run = self.executor(spec, client_id, weight=weight)
+
+        def run(bank, data_bank=None) -> jnp.ndarray:
+            if data_bank is not None:
+                return row_run(bank, data_bank)
+            key = ShiftGroupKey(spec, next(self.dispatcher.bank_tokens))
+            futures = []
+            for g in range(bank.n_groups):
+                while True:
+                    try:
+                        futures.append(self.gateway.submit(
+                            client_id, key, (bank, g),
+                            now=self.dispatcher.clock(),
+                            lanes=bank.n_samples))
+                        break
+                    except Backpressure:
+                        self.dispatcher.drain()
+            self.dispatcher.drain()
+            return jnp.concatenate([f.value for f in futures])
+
+        run.accepts_shiftbank = True
         return run

@@ -103,8 +103,12 @@ class Gateway:
         return st
 
     def submit(self, client_id: str, key: Hashable, payload: Any,
-               now: float) -> CircuitFuture:
-        """Admit one circuit.  Raises ``Backpressure`` at the queue bound."""
+               now: float, lanes: int = 1) -> CircuitFuture:
+        """Admit one circuit.  Raises ``Backpressure`` at the queue bound.
+
+        ``lanes``: kernel lanes the item occupies (1 for a row circuit; a
+        shift-group subtask covers its bank's B sample lanes) — feeds the
+        lane-fill telemetry, not admission accounting."""
         st = self._tenant(client_id)
         if len(st.queue) >= st.max_pending:
             self.telemetry.on_reject(client_id)
@@ -113,7 +117,8 @@ class Gateway:
         fut = CircuitFuture(client_id, self._seq, now)
         st.queue.append(PendingCircuit(key=key, client_id=client_id,
                                        seq=self._seq, arrival=now,
-                                       payload=payload, future=fut))
+                                       payload=payload, future=fut,
+                                       lanes=lanes))
         self._seq += 1
         self.telemetry.on_submit(client_id, now)
         return fut
@@ -146,7 +151,9 @@ class Gateway:
             batches.extend(self.coalescer.add(item))
         batches.extend(self.coalescer.flush_due(now))
         for b in batches:
-            self.telemetry.on_batch(b.n, by_deadline=b.by_deadline)
+            self.telemetry.on_batch(b.lane_count,
+                                    padded=b.padded(self.coalescer.lanes),
+                                    by_deadline=b.by_deadline)
         return batches
 
     def flush(self, now: float) -> list[CoalescedBatch]:
@@ -154,7 +161,9 @@ class Gateway:
         batches = self.pump(now)
         forced = self.coalescer.flush_all(now)
         for b in forced:
-            self.telemetry.on_batch(b.n, by_deadline=b.by_deadline)
+            self.telemetry.on_batch(b.lane_count,
+                                    padded=b.padded(self.coalescer.lanes),
+                                    by_deadline=b.by_deadline)
         return batches + forced
 
     # ------------------------------------------------------------ results

@@ -70,10 +70,18 @@ class Telemetry:
     def on_reject(self, client_id: str) -> None:
         self._tenant(client_id).rejected += 1
 
-    def on_batch(self, n_members: int, *, by_deadline: bool) -> None:
+    def on_batch(self, n_lanes: int, *, padded: int | None = None,
+                 by_deadline: bool) -> None:
+        """``n_lanes``: kernel lanes the batch's members occupy — member
+        count for row circuits, sum of bank sample widths for shift-group
+        subtasks (``CoalescedBatch.lane_count``).  ``padded``: lanes the
+        launch pays for (``CoalescedBatch.padded``); defaults to padding
+        ``n_lanes`` once, which is only right for shared-row batches."""
         self.batches += 1
-        self.batched_circuits += n_members
-        self.padded_lanes += math.ceil(n_members / self.lanes) * self.lanes
+        self.batched_circuits += n_lanes
+        if padded is None:
+            padded = math.ceil(n_lanes / self.lanes) * self.lanes
+        self.padded_lanes += padded
         if by_deadline:
             self.deadline_flushes += 1
         else:

@@ -1,0 +1,376 @@
+"""Shift-structured circuit-bank execution: implicit ``ShiftBank``s, the
+prefix-reuse kernel, group-scheduled data-plane executors, and the serving
+gateway's per-(param, shift)-group path.
+
+Correctness contract: everything here must agree with the MATERIALIZED bank
+(``build_bank`` + the standard fused kernel / dense-sim oracle) — scheduling
+and the shift-structured execution strategy never change the math.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import circuits, shift_rule
+from repro.core.sim import CircuitSpec, Op
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels import vqc_statevector as K
+
+
+def _setup(qc, nl, b=3, seed=0):
+    spec = circuits.build_quclassi_circuit(qc, nl)
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.uniform(key, (spec.n_theta,), jnp.float32,
+                               minval=0.0, maxval=np.pi)
+    data = jax.random.uniform(jax.random.fold_in(key, 1), (b, spec.n_data),
+                              jnp.float32, minval=0.0, maxval=np.pi)
+    return spec, theta, data
+
+
+# ------------------------------------------------------------ ShiftBank
+@pytest.mark.parametrize("qc,nl", [(5, 1), (5, 3), (7, 1), (7, 3)])
+@pytest.mark.parametrize("four_term", [False, True])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_materialize_reproduces_build_bank_exactly(qc, nl, four_term, seed):
+    """The escape hatch is BIT-identical to build_bank, not just close."""
+    spec, theta, data = _setup(qc, nl, b=4, seed=seed)
+    implicit = shift_rule.build_shift_bank(theta, data, four_term=four_term)
+    explicit = shift_rule.build_bank(theta, data, four_term=four_term)
+    mat = implicit.materialize()
+    assert np.array_equal(np.asarray(mat.theta), np.asarray(explicit.theta))
+    assert np.array_equal(np.asarray(mat.data), np.asarray(explicit.data))
+    assert (mat.n_samples, mat.n_params, mat.four_term) == \
+        (explicit.n_samples, explicit.n_params, explicit.four_term)
+
+
+def test_shiftbank_bookkeeping_matches_circuitbank():
+    spec, theta, data = _setup(5, 2, b=3)
+    bank = shift_rule.build_shift_bank(theta, data)
+    assert bank.n_groups == 1 + 2 * spec.n_theta
+    assert bank.n_circuits == bank.n_groups * 3
+    f = jnp.arange(bank.n_circuits, dtype=jnp.float32)
+    for got, want in zip(bank.split_results(f),
+                         bank.materialize().split_results(f)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    descs = bank.group_descriptors()
+    assert descs[0] == (-1, 0.0)
+    assert len(descs) == bank.n_groups
+    assert descs[1][0] == 0 and descs[1][1] == pytest.approx(np.pi / 2)
+    assert descs[1 + spec.n_theta][1] == pytest.approx(-np.pi / 2)
+
+
+def test_per_sample_theta_shiftbank():
+    """ShiftBank generalizes build_bank: per-sample base thetas are allowed."""
+    spec, _, data = _setup(5, 1, b=4)
+    theta = jax.random.uniform(jax.random.PRNGKey(3), (4, spec.n_theta),
+                               jnp.float32, minval=0.0, maxval=np.pi)
+    bank = shift_rule.build_shift_bank(theta, data)
+    mat = bank.materialize()
+    j, b = 2, 1
+    row = np.asarray(mat.theta[4 + j * 4 + b])
+    expect = np.asarray(theta[b]).copy()
+    expect[j] += np.pi / 2
+    np.testing.assert_allclose(row, expect, atol=1e-6)
+    got = kops.vqc_fidelity_shiftbank(spec, bank.theta, bank.data)
+    want = ref.vqc_fidelity_ref(spec, mat.theta, mat.data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ------------------------------------------------- prefix-reuse kernel
+@pytest.mark.parametrize("qc", [5, 7])
+@pytest.mark.parametrize("nl", [1, 3])
+@pytest.mark.parametrize("four_term", [False, True])
+def test_prefix_reuse_matches_ref(qc, nl, four_term):
+    spec, theta, data = _setup(qc, nl, b=3, seed=qc * 10 + nl)
+    bank = shift_rule.build_shift_bank(theta, data, four_term=four_term)
+    mat = bank.materialize()
+    got = kops.vqc_fidelity_shiftbank(spec, bank.theta, bank.data, four_term)
+    want = ref.vqc_fidelity_ref(spec, mat.theta, mat.data)
+    assert got.shape == (bank.n_circuits,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_group_subset_matches_full():
+    spec, theta, data = _setup(5, 3, b=4)
+    bank = shift_rule.build_shift_bank(theta, data)
+    full = np.asarray(kops.vqc_fidelity_shiftgroups(spec, bank.theta,
+                                                    bank.data))
+    groups = (0, 2, 5, bank.n_groups - 1)
+    sub = np.asarray(kops.vqc_fidelity_shiftgroups(spec, bank.theta,
+                                                   bank.data, False, groups))
+    np.testing.assert_allclose(sub, full[list(groups)], atol=1e-6)
+
+
+def test_shift_plan_structure():
+    spec = circuits.build_quclassi_circuit(7, 3)
+    plan = K.build_shift_plan(spec)
+    assert plan is not None
+    m = (7 - 1) // 2
+    assert plan.m == m
+    assert len(plan.data_ops) == spec.n_data
+    assert len(plan.train_ops) == spec.n_theta
+    # every parameter has a unique dependent gate, in circuit order
+    assert plan.theta_pos == tuple(range(spec.n_theta))
+
+
+def test_shift_plan_rejects_unstructured_circuits():
+    # no SWAP-test tail -> no product structure to exploit
+    spec = CircuitSpec(n_qubits=2, ops=(Op("ry", (0,), ("theta", 0)),
+                                        Op("ry", (1,), ("data", 0))),
+                       n_theta=1, n_data=1)
+    assert K.build_shift_plan(spec) is None
+    # fallback path still produces correct bank fidelities
+    theta = jnp.asarray([[0.3], [0.9]], jnp.float32)
+    data = jnp.asarray([[0.1], [0.4]], jnp.float32)
+    bank = shift_rule.build_shift_bank(theta, data)
+    got = kops.vqc_fidelity_shiftbank(spec, bank.theta, bank.data)
+    mat = bank.materialize()
+    want = ref.vqc_fidelity_ref(spec, mat.theta, mat.data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_shift_bank_stats_acceptance_ratios():
+    """The paper's 7q/3l config: >=5x fewer gate applications, >=10x fewer
+    angle bytes than the materialized bank (ISSUE acceptance)."""
+    spec = circuits.build_quclassi_circuit(7, 3)
+    stats = K.shift_bank_stats(spec, n_samples=64)
+    assert stats["gate_apps_ratio"] >= 5.0
+    assert stats["angle_bytes_ratio"] >= 10.0
+
+
+# -------------------------------------------- descending two-qubit pairs
+def test_rot2_descending_symmetric_pairs():
+    """RYY/RZZ are symmetric under qubit exchange; the kernel now accepts
+    descending pairs instead of raising (satellite fix)."""
+    ops_desc = (Op("ry", (0,), ("data", 0)), Op("ryy", (1, 0), ("theta", 0)),
+                Op("rzz", (2, 1), ("theta", 1)))
+    ops_asc = (Op("ry", (0,), ("data", 0)), Op("ryy", (0, 1), ("theta", 0)),
+               Op("rzz", (1, 2), ("theta", 1)))
+    sd = CircuitSpec(n_qubits=3, ops=ops_desc, n_theta=2, n_data=1)
+    sa = CircuitSpec(n_qubits=3, ops=ops_asc, n_theta=2, n_data=1)
+    theta = jnp.asarray([[0.7, 1.1], [0.2, 2.0]], jnp.float32)
+    data = jnp.asarray([[0.5], [1.3]], jnp.float32)
+    re_d, im_d = kops.vqc_state(sd, theta, data)
+    re_a, im_a = kops.vqc_state(sa, theta, data)
+    np.testing.assert_allclose(np.asarray(re_d), np.asarray(re_a), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(im_d), np.asarray(im_a), atol=1e-6)
+    # and against the dense-sim oracle, which permutes axes generically
+    re_r, im_r = ref.vqc_state_ref(sd, theta, data)
+    np.testing.assert_allclose(np.asarray(re_d), np.asarray(re_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(im_d), np.asarray(im_r), atol=1e-5)
+
+
+def test_rot2_descending_controlled_still_raises():
+    ops_bad = (Op("cry", (1, 0), ("theta", 0)),)
+    spec = CircuitSpec(n_qubits=2, ops=ops_bad, n_theta=1, n_data=0)
+    theta = jnp.asarray([[0.7]], jnp.float32)
+    data = jnp.zeros((1, 0), jnp.float32)
+    with pytest.raises(NotImplementedError):
+        kops.vqc_state(spec, theta, data)
+
+
+# -------------------------------------------------- gradient equivalence
+@pytest.mark.parametrize("qc,nl,exact", [(5, 1, False), (5, 3, True),
+                                         (7, 2, False)])
+def test_parameter_shift_grad_implicit_vs_materialized(qc, nl, exact):
+    spec, theta, data = _setup(qc, nl, b=3, seed=nl)
+    labels = jnp.asarray([0.0, 1.0, 1.0])
+    l_mat, g_mat, f_mat = shift_rule.parameter_shift_grad(
+        spec, theta, data, labels, exact_controlled=exact)
+    l_imp, g_imp, f_imp = shift_rule.parameter_shift_grad(
+        spec, theta, data, labels, executor=kops.shiftbank_executor(spec),
+        exact_controlled=exact)
+    np.testing.assert_allclose(float(l_imp), float(l_mat), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_imp), np.asarray(g_mat), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_imp), np.asarray(f_mat), atol=1e-5)
+
+
+def test_implicit_flag_with_shift_unaware_executor():
+    """implicit=True + a plain (theta, data) executor goes through
+    materialize() — the compatibility escape hatch."""
+    spec, theta, data = _setup(5, 1, b=2)
+    labels = jnp.asarray([1.0, 0.0])
+    seen = {}
+
+    def executor(t, d):
+        seen["shape"] = (t.shape, d.shape)
+        from repro.core import fidelity as fid
+        return fid.fidelity_batch(spec, t, d)
+
+    l1, g1, _ = shift_rule.parameter_shift_grad(spec, theta, data, labels,
+                                                executor=executor,
+                                                implicit=True)
+    c = 2 * (2 * spec.n_theta + 1)
+    assert seen["shape"] == ((c, spec.n_theta), (c, spec.n_data))
+    l0, g0, _ = shift_rule.parameter_shift_grad(spec, theta, data, labels)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g0), atol=1e-6)
+
+
+# ------------------------------------------------- data-plane executors
+def test_worker_batched_group_assignment():
+    from repro.comanager import dataplane
+    spec, theta, data = _setup(5, 2, b=5)
+    bank = shift_rule.build_shift_bank(theta, data)
+    assignment = dataplane.round_robin_assignment(bank.n_groups, 3)
+    run = dataplane.worker_batched_executor(spec, assignment, 3)
+    assert run.accepts_shiftbank
+    got = run(bank)
+    mat = bank.materialize()
+    want = kops.vqc_fidelity(spec, mat.theta, mat.data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_worker_batched_row_assignment_accepts_implicit_bank():
+    """Legacy per-row assignments still work on implicit banks (materialize
+    fallback preserves exact per-worker row placement)."""
+    from repro.comanager import dataplane
+    spec, theta, data = _setup(5, 1, b=4)
+    bank = shift_rule.build_shift_bank(theta, data)
+    assignment = dataplane.round_robin_assignment(bank.n_circuits, 2)
+    run = dataplane.worker_batched_executor(spec, assignment, 2)
+    mat = bank.materialize()
+    np.testing.assert_allclose(np.asarray(run(bank)),
+                               np.asarray(run(mat.theta, mat.data)),
+                               atol=1e-6)
+
+
+def test_worker_batched_bad_assignment_length():
+    from repro.comanager import dataplane
+    spec, theta, data = _setup(5, 1, b=4)
+    bank = shift_rule.build_shift_bank(theta, data)
+    run = dataplane.worker_batched_executor(spec, [0, 1], 2)
+    with pytest.raises(ValueError, match="groups"):
+        run(bank)
+
+
+def test_sharded_executor_accepts_implicit_bank():
+    from repro.comanager import dataplane
+    from repro.launch.mesh import make_host_mesh
+    spec, theta, data = _setup(5, 2, b=5)    # odd B exercises sample padding
+    bank = shift_rule.build_shift_bank(theta, data)
+    run = dataplane.sharded_executor(spec, make_host_mesh())
+    got = run(bank)
+    assert got.shape == (bank.n_circuits,)
+    mat = bank.materialize()
+    want = kops.vqc_fidelity(spec, mat.theta, mat.data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ------------------------------------------------------ serving gateway
+def test_gateway_shift_executor_matches_materialized():
+    from repro.serve import GatewayRuntime, ShiftGroupKey
+    spec, theta, data = _setup(5, 2, b=4)
+    bank = shift_rule.build_shift_bank(theta, data)
+    rt = GatewayRuntime()
+    run = rt.shift_executor(spec, "tenant-a")
+    assert run.accepts_shiftbank
+    got = run(bank)
+    mat = bank.materialize()
+    want = kops.vqc_fidelity(spec, mat.theta, mat.data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # groups were dispatched as shift-group batches, not per-row circuits
+    assert rt.dispatcher.batch_log, "no batches executed"
+    total_members = sum(n for (_, n, _) in rt.dispatcher.batch_log)
+    assert total_members == bank.n_groups
+    # lane-fill telemetry counts the kernel lanes the groups occupy
+    # (n_groups * B sample lanes), not the group-subtask member count,
+    # and pays per-group row padding (each group pads its B samples
+    # independently in the kernel launch)
+    assert rt.telemetry.batched_circuits == bank.n_groups * bank.n_samples
+    import math
+    per_group = math.ceil(bank.n_samples / rt.gateway.coalescer.lanes) * \
+        rt.gateway.coalescer.lanes
+    assert rt.telemetry.padded_lanes == bank.n_groups * per_group
+
+
+def test_shift_executors_accept_materialized_banks():
+    """Shift-aware executors still take plain (theta, data) calls, so
+    bank_mode='materialized' composes with them instead of crashing."""
+    from repro.serve import GatewayRuntime
+    spec, theta, data = _setup(5, 1, b=3)
+    bank = shift_rule.build_shift_bank(theta, data)
+    mat = bank.materialize()
+    want = np.asarray(kops.vqc_fidelity(spec, mat.theta, mat.data))
+    np.testing.assert_allclose(
+        np.asarray(kops.shiftbank_executor(spec)(mat.theta, mat.data)),
+        want, atol=1e-6)
+    rt = GatewayRuntime()
+    run = rt.shift_executor(spec, "tenant-a")
+    np.testing.assert_allclose(np.asarray(run(mat.theta, mat.data)), want,
+                               atol=1e-5)
+    # and run_bank routes a materialized CircuitBank through the same path
+    np.testing.assert_allclose(
+        np.asarray(shift_rule.run_bank(run, mat)), want, atol=1e-5)
+
+
+def test_gateway_shift_groups_coalesce_within_bank_only():
+    """Different banks (different base angles) never share a kernel launch."""
+    from repro.serve import ShiftGroupKey
+    spec, theta, data = _setup(5, 1, b=2)
+    k1 = ShiftGroupKey(spec, 1)
+    k2 = ShiftGroupKey(spec, 2)
+    assert k1 != k2 and hash(k1) != hash(k2)
+    assert k1 == ShiftGroupKey(spec, 1)
+
+
+def test_grad_shift_through_gateway_shift_executor():
+    from repro.core import quclassi
+    from repro.core.quclassi import QuClassiConfig
+    from repro.data import mnist
+    from repro.serve import GatewayRuntime
+    cfg = QuClassiConfig(qc=5, n_layers=1)
+    x, y = mnist.make_pair_dataset(3, 9, n_per_class=4, seed=0)
+    x, y = jnp.asarray(x[:3]), jnp.asarray(y[:3])
+    params = quclassi.init_params(cfg, jax.random.PRNGKey(0))
+    rt = GatewayRuntime()
+    ex = rt.shift_executor(cfg.spec, "trainer")
+    l_gw, g_gw, _ = quclassi.grad_shift(cfg, params, x, y, executor=ex)
+    l_ref, g_ref, _ = quclassi.grad_shift(cfg, params, x, y)
+    np.testing.assert_allclose(float(l_gw), float(l_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_gw["theta"]),
+                               np.asarray(g_ref["theta"]), atol=1e-5)
+
+
+def test_gateway_shift_keys_do_not_leak_coalescer_buffers():
+    """Every bank submission mints a fresh ShiftGroupKey; emptied buffers
+    must be retired or a long training run grows the coalescer forever."""
+    from repro.serve import GatewayRuntime
+    spec, theta, data = _setup(5, 1, b=2)
+    rt = GatewayRuntime()
+    run = rt.shift_executor(spec, "tenant-a")
+    for i in range(5):
+        run(shift_rule.build_shift_bank(theta + 0.01 * i, data))
+    assert len(rt.gateway.coalescer._buffers) == 0
+
+
+def test_dispatcher_shift_kernel_injectable():
+    """GatewayRuntime(shift_kernel=...) substitutes the shift-group runner,
+    mirroring the documented KernelFn substitution point."""
+    from repro.serve import GatewayRuntime
+    spec, theta, data = _setup(5, 1, b=3)
+    bank = shift_rule.build_shift_bank(theta, data)
+    calls = []
+
+    def stub(s, t, d, four_term, groups):
+        calls.append(groups)
+        return kops.vqc_fidelity_shiftgroups(s, t, d, four_term, groups)
+
+    rt = GatewayRuntime(shift_kernel=stub)
+    run = rt.shift_executor(spec, "tenant-a")
+    got = run(bank)
+    assert calls and sorted(g for gs in calls for g in gs) == \
+        list(range(bank.n_groups))
+    mat = bank.materialize()
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(kops.vqc_fidelity(spec, mat.theta,
+                                                      mat.data)), atol=1e-5)
+
+
+def test_trainer_bank_mode_validation():
+    from repro.core import trainer
+    from repro.core.quclassi import QuClassiConfig
+    with pytest.raises(ValueError, match="bank_mode"):
+        trainer.train(QuClassiConfig(), (np.zeros((2, 8, 8)), np.zeros(2)),
+                      (np.zeros((2, 8, 8)), np.zeros(2)),
+                      epochs=0, bank_mode="bogus")
