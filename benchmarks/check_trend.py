@@ -1,0 +1,182 @@
+"""Benchmark-regression gate: freshly emitted BENCH_*.json vs baselines.
+
+``benchmarks/run.py`` emits ``BENCH_kernel.json`` / ``BENCH_gateway.json``
+every run; this script compares them against the committed baselines in
+``benchmarks/baselines/`` and exits non-zero when a gated metric regressed
+past its tolerance band — the cross-PR trend check CI runs after the
+benchmark smoke step.
+
+Only MACHINE-INDEPENDENT metrics are gated: analytic ratios (gate
+applications, angle bytes, HBM traffic) and virtual-clock results
+(circuits/sec, lane fill, SLO attainment) are bit-deterministic across
+hosts, so a committed baseline is meaningful.  Wall-clock numbers
+(``*_us_per_circuit``, real-kernel c/s) vary wildly between the committing
+machine and a CI runner and are reported informationally only.
+
+Usage:
+    python benchmarks/check_trend.py [--emitted DIR] [--baselines DIR]
+                                     [--tolerance-scale S]
+                                     [--update-baselines]
+
+``--update-baselines`` copies the emitted artifacts over the committed
+baselines (run after an intentional perf change, then commit the diff).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import sys
+
+ARTIFACTS = ("BENCH_kernel.json", "BENCH_gateway.json")
+
+#: (artifact, path regex, direction, relative tolerance).  ``higher`` means
+#: the metric regressed if current < baseline * (1 - tol); ``lower`` means
+#: regressed if current > baseline * (1 + tol).  Analytic ratios are
+#: deterministic, so their band is tight; virtual-clock throughput gets the
+#: 25% band (scheduling-policy tweaks legitimately move it a little).
+GATES = [
+    ("BENCH_kernel.json", r"fused\.\d+\.traffic_ratio$", "higher", 0.01),
+    ("BENCH_kernel.json", r"shift_bank\.\d+\.gate_apps_ratio$", "higher", 0.01),
+    ("BENCH_kernel.json", r"shift_bank\.\d+\.angle_bytes_ratio$", "higher", 0.01),
+    ("BENCH_gateway.json", r"^system_cps_gateway$", "higher", 0.25),
+    ("BENCH_gateway.json", r"^system_gain$", "higher", 0.25),
+    ("BENCH_gateway.json", r"fig6\.\d+\.cps_gateway$", "higher", 0.25),
+    ("BENCH_gateway.json", r"sync_vs_async\.async_over_sync$", "higher", 0.25),
+    ("BENCH_gateway.json", r"poisson\.lane_fill$", "higher", 0.25),
+    ("BENCH_gateway.json", r"poisson\.slo_attainment$", "higher", 0.10),
+    ("BENCH_gateway.json", r"poisson\.tenants\.\d+\.p99_latency_s$", "lower", 0.25),
+]
+
+#: substrings marking wall-clock metrics: never gated, listed informationally.
+WALL_CLOCK_MARKERS = ("us_per_circuit", "_cps", "speedup")
+
+
+def flatten(obj, prefix=""):
+    """JSON tree -> {dot.path: numeric leaf} (bools and strings skipped)."""
+    out = {}
+    if isinstance(obj, dict):
+        items = obj.items()
+    elif isinstance(obj, list):
+        items = ((str(i), v) for i, v in enumerate(obj))
+    else:
+        if isinstance(obj, (int, float)) and not isinstance(obj, bool):
+            out[prefix] = float(obj)
+        return out
+    for k, v in items:
+        path = f"{prefix}.{k}" if prefix else str(k)
+        out.update(flatten(v, path))
+    return out
+
+
+def load(path):
+    with open(path) as f:
+        return flatten(json.load(f))
+
+
+def check(emitted_dir, baseline_dir, tolerance_scale=1.0, verbose=True):
+    """Returns a list of regression strings (empty = gate passes)."""
+    failures = []
+    rows = []
+    for artifact in ARTIFACTS:
+        emitted_path = os.path.join(emitted_dir, artifact)
+        baseline_path = os.path.join(baseline_dir, artifact)
+        if not os.path.exists(emitted_path):
+            failures.append(f"{artifact}: not emitted in {emitted_dir} "
+                            f"(run benchmarks/run.py --quick first)")
+            continue
+        if not os.path.exists(baseline_path):
+            failures.append(f"{artifact}: no baseline in {baseline_dir} "
+                            f"(run with --update-baselines and commit)")
+            continue
+        current = load(emitted_path)
+        baseline = load(baseline_path)
+        gates = [g for g in GATES if g[0] == artifact]
+        for _, pattern, direction, tol in gates:
+            tol = tol * tolerance_scale
+            matched = [p for p in baseline if re.search(pattern, p)]
+            if not matched:
+                failures.append(f"{artifact}: gate {pattern!r} matches "
+                                f"nothing in the baseline")
+            for path in sorted(matched):
+                base = baseline[path]
+                if path not in current:
+                    failures.append(f"{artifact}:{path}: gated metric "
+                                    f"missing from the emitted artifact "
+                                    f"(baseline {base}); if intentional, "
+                                    f"--update-baselines")
+                    continue
+                cur = current[path]
+                if direction == "higher":
+                    bad = cur < base * (1.0 - tol)
+                else:
+                    bad = cur > base * (1.0 + tol)
+                delta = (cur - base) / base if base else 0.0
+                rows.append((artifact, path, base, cur, delta, direction,
+                             tol, bad))
+                if bad:
+                    failures.append(
+                        f"{artifact}:{path}: {cur:g} vs baseline {base:g} "
+                        f"({delta:+.1%}, tolerance {tol:.0%}, "
+                        f"want {direction})")
+    if verbose:
+        print(f"{'artifact':<19} {'metric':<42} {'baseline':>10} "
+              f"{'current':>10} {'change':>8}  status")
+        for artifact, path, base, cur, delta, direction, tol, bad in rows:
+            status = "REGRESSED" if bad else "ok"
+            print(f"{artifact:<19} {path:<42} {base:>10g} {cur:>10g} "
+                  f"{delta:>+8.1%}  {status}")
+        wall = []
+        for artifact in ARTIFACTS:
+            path = os.path.join(emitted_dir, artifact)
+            if os.path.exists(path):
+                wall += [f"{artifact}:{p}={v:g}" for p, v in load(path).items()
+                         if any(m in p for m in WALL_CLOCK_MARKERS)
+                         and not any(re.search(g[1], p) for g in GATES)]
+        if wall:
+            print(f"# {len(wall)} wall-clock metrics not gated "
+                  f"(machine-dependent), e.g. {wall[0]}")
+    return failures
+
+
+def update_baselines(emitted_dir, baseline_dir):
+    os.makedirs(baseline_dir, exist_ok=True)
+    for artifact in ARTIFACTS:
+        src = os.path.join(emitted_dir, artifact)
+        if not os.path.exists(src):
+            sys.exit(f"cannot update baselines: {src} missing "
+                     f"(run benchmarks/run.py --quick first)")
+        shutil.copy(src, os.path.join(baseline_dir, artifact))
+        print(f"baseline updated: {os.path.join(baseline_dir, artifact)}")
+
+
+def main(argv=None) -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--emitted", default=".",
+                    help="directory holding the freshly emitted BENCH_*.json")
+    ap.add_argument("--baselines", default=os.path.join(here, "baselines"),
+                    help="directory holding the committed baselines")
+    ap.add_argument("--tolerance-scale", type=float, default=1.0,
+                    help="multiply every gate's tolerance band (e.g. 2.0 to "
+                         "loosen all bands while bisecting)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy the emitted artifacts over the baselines")
+    args = ap.parse_args(argv)
+    if args.update_baselines:
+        update_baselines(args.emitted, args.baselines)
+        return 0
+    failures = check(args.emitted, args.baselines, args.tolerance_scale)
+    if failures:
+        print("\nbenchmark regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbenchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

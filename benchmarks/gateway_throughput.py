@@ -1,7 +1,7 @@
 """Serving-gateway throughput: cross-tenant circuit-bank coalescing vs the
 per-circuit dispatch path, on the Fig-6-shaped multi-tenant workload.
 
-Three modes:
+Sections:
 
 * ``fig6``    — 4 concurrent clients (5Q/1L, 5Q/2L, 7Q/1L, 7Q/2L) against 4
   heterogeneous workers (5/10/15/20 qubits), on the virtual clock.  The
@@ -9,13 +9,21 @@ Three modes:
   coalesces compatible circuits across tenants into lane-aligned mega-batches
   (one Algorithm-2 task each, fused-kernel cost model).
 
+* ``sync_vs_async`` — the same Fig-6 workload through the synchronous
+  gateway (one serial dispatch ledger: batch execution head-of-line-blocks
+  admission) vs the async counterpart (per-worker slot pipelines), on the
+  virtual clock.  Acceptance: async circuits/sec >= sync.
+
 * ``poisson`` — open-loop serving stand-in: each client's circuits arrive as
   a Poisson stream rather than an epoch burst, so the coalescer has to trade
-  batch fill against the flush deadline.  Reports per-tenant p50/p99 latency
-  and the lane-fill rate.
+  batch fill against the flush deadline.  Reports per-tenant p50/p99 latency,
+  SLO attainment, and the lane-fill rate.
 
-* ``kernel``  — real-execution sanity check (no virtual clock): wall-clock
-  circuits/sec of one coalesced Pallas launch vs per-circuit kernel launches.
+* ``kernel`` / ``async_kernel`` — real-execution sanity checks (no virtual
+  clock): wall-clock circuits/sec of one coalesced Pallas launch vs
+  per-circuit launches, and of the sync inline dispatcher vs the
+  ``AsyncDispatcher`` worker pool (>= 2 slots) on the Fig-6 client mix,
+  with per-tenant SLO attainment.
 
 Run:  PYTHONPATH=src:. python benchmarks/gateway_throughput.py
 """
@@ -68,6 +76,25 @@ def fig6(scale: float = 0.25):
     return base, gw, rows
 
 
+# ---------------------------------------------------------- sync vs async
+def sync_vs_async(scale: float = 0.25):
+    """Fig-6 workload through the synchronous gateway (serial dispatch
+    ledger) vs the async gateway (per-worker slot pipelines overlap batch
+    dispatch across workers), virtual clock — deterministic, so the trend
+    gate pins it."""
+    common = dict(classical_overhead=0.01, assign_latency=PD.ASSIGN_LATENCY,
+                  gateway=True, gateway_deadline=1.0)
+    sync = SystemSimulation(workers(), make_jobs(scale), **common).run()
+    asyn = SystemSimulation(workers(), make_jobs(scale), gateway_async=True,
+                            **common).run()
+    return {
+        "sync_cps": round(sync.circuits_per_second, 2),
+        "async_cps": round(asyn.circuits_per_second, 2),
+        "async_over_sync": round(asyn.circuits_per_second
+                                 / sync.circuits_per_second, 3),
+    }
+
+
 # ---------------------------------------------------------------- poisson
 #: serving tenants arrive in structural families — two tenants per circuit
 #: shape — so the coalescer's cross-tenant packing actually has peers to
@@ -75,6 +102,11 @@ def fig6(scale: float = 0.25):
 #: within the deadline; two tenants sharing a structure fill it).
 POISSON_CLIENTS = [("alice-5q", 5, 1), ("bob-5q", 5, 1),
                    ("carol-7q", 7, 1), ("dave-7q", 7, 1)]
+
+#: end-to-end latency SLOs for the Poisson tenants (ms).  2000 ms keeps the
+#: SLO flush budget (SLO_FLUSH_FRACTION * 2 s = 1 s) equal to the default
+#: 1 s deadline — attainment is REPORTED without changing the flush policy.
+POISSON_SLOS_MS = {cid: 2000.0 for cid, _, _ in POISSON_CLIENTS}
 
 
 def poisson(rate_per_client: float = 60.0, n_per_client: int = 300,
@@ -89,6 +121,7 @@ def poisson(rate_per_client: float = 60.0, n_per_client: int = 300,
             rng.exponential(1.0 / rate_per_client, n_per_client)).tolist()
     sim = SystemSimulation(workers(), jobs, gateway=True,
                            gateway_deadline=deadline, arrivals=arrivals,
+                           tenant_slos_ms=POISSON_SLOS_MS,
                            classical_overhead=0.01,
                            assign_latency=PD.ASSIGN_LATENCY)
     return sim.run()
@@ -128,6 +161,71 @@ def kernel(n: int = 128, qc: int = 5, n_layers: int = 1, seed: int = 0):
     }
 
 
+#: (client, qc, layers, slo_ms) for the real-execution async section: the
+#: Fig-6 client mix with latency SLOs attached.
+ASYNC_CLIENTS = [("5q1l", 5, 1, 4000.0), ("5q2l", 5, 2, 4000.0),
+                 ("7q1l", 7, 1, 8000.0), ("7q2l", 7, 2, 8000.0)]
+
+
+def async_kernel(n_per_client: int = 256, slots_per_worker: int = 2,
+                 deadline: float = 0.25, seed: int = 0):
+    """Real data plane, Fig-6 client mix: the sync dispatcher executes every
+    mega-batch inline (serial kernel launches), the async dispatcher overlaps
+    launches across per-worker slots.  Reports wall-clock circuits/sec for
+    both and per-tenant SLO attainment from the async run."""
+    import jax.numpy as jnp
+    from repro.core import circuits
+    from repro.serve import GatewayRuntime
+
+    rng = np.random.default_rng(seed)
+    streams = []
+    for cid, qc, nl, slo in ASYNC_CLIENTS:
+        spec = circuits.build_quclassi_circuit(qc, nl)
+        theta = jnp.asarray(rng.uniform(0, np.pi, (n_per_client, spec.n_theta)),
+                            jnp.float32)
+        data = jnp.asarray(rng.uniform(0, np.pi, (n_per_client, spec.n_data)),
+                           jnp.float32)
+        streams.append((cid, spec, theta, data, slo))
+
+    def run(mode: str):
+        rt = GatewayRuntime(target=128, deadline=deadline, mode=mode,
+                            slots_per_worker=slots_per_worker)
+        try:
+            for cid, spec, theta, data, slo in streams:
+                rt.gateway.register_client(cid, slo_ms=slo)
+            # warm the per-spec kernel jits so both modes time execution,
+            # not compilation
+            for _, spec, theta, data, _ in streams:
+                rt.dispatcher.kernel(spec, theta[:1], data[:1])
+            t0 = time.perf_counter()
+            futures = []
+            for i in range(n_per_client):      # interleaved open-loop streams
+                for cid, spec, theta, data, _ in streams:
+                    futures.append(rt.gateway.submit(
+                        cid, spec, (theta[i], data[i]),
+                        now=rt.dispatcher.clock()))
+                rt.dispatcher.kick()
+            rt.dispatcher.drain()
+            wall = time.perf_counter() - t0
+            assert all(f.done for f in futures)
+            summary = rt.telemetry.summary()
+        finally:
+            rt.close()
+        return len(futures) / wall, summary
+
+    sync_cps, _ = run("sync")
+    async_cps, summary = run("async")
+    return {
+        "n_circuits": n_per_client * len(ASYNC_CLIENTS),
+        "worker_slots": 4 * slots_per_worker,
+        "sync_cps": round(sync_cps, 1),
+        "async_cps": round(async_cps, 1),
+        "async_over_sync": round(async_cps / sync_cps, 2),
+        "slo_attainment": {t["client"]: t.get("slo_attainment")
+                           for t in summary["tenants"]},
+    }
+
+
 def main(run_kernel: bool = True, scale: float = 0.25):
     print("## fig6-shaped workload: 4 clients x 4 workers (virtual clock)")
     base, gw, rows = fig6(scale)
@@ -142,14 +240,25 @@ def main(run_kernel: bool = True, scale: float = 0.25):
     assert gw.circuits_per_second > base.circuits_per_second, \
         "coalesced gateway must beat per-circuit dispatch"
 
-    print("\n## open-loop Poisson arrivals (60 circuits/sec/client)")
+    print("\n## sync vs async dispatch (virtual clock, per-worker slot "
+          "pipelines)")
+    sva = sync_vs_async(scale)
+    print(f"# sync {sva['sync_cps']} c/s -> async {sva['async_cps']} c/s "
+          f"({sva['async_over_sync']}x)")
+    assert sva["async_cps"] >= sva["sync_cps"], \
+        "async dispatcher must sustain >= the sync path's circuits/sec"
+
+    print("\n## open-loop Poisson arrivals (60 circuits/sec/client, "
+          "2 s latency SLO)")
     rep = poisson()
     s = rep.gateway_summary
     for t in s["tenants"]:
         print(f"{t['client']}: p50={t['p50_latency_s']:.2f}s "
-              f"p99={t['p99_latency_s']:.2f}s cps={t['circuits_per_second']}")
+              f"p99={t['p99_latency_s']:.2f}s cps={t['circuits_per_second']} "
+              f"slo_attainment={t.get('slo_attainment')}")
     print(f"# lane fill {s['lane_fill']:.0%} over {s['batches']} batches "
-          f"({s['size_flushes']} size / {s['deadline_flushes']} deadline flushes)")
+          f"({s['size_flushes']} size / {s['deadline_flushes']} deadline "
+          f"flushes), slo attainment {s.get('slo_attainment')}")
     assert s["lane_fill"] >= 0.5, "open-loop lane fill must stay >= 50%"
 
     result = {
@@ -157,6 +266,7 @@ def main(run_kernel: bool = True, scale: float = 0.25):
         "system_cps_uncoalesced": round(base.circuits_per_second, 2),
         "system_cps_gateway": round(gw.circuits_per_second, 2),
         "system_gain": round(gain, 2),
+        "sync_vs_async": sva,
         "poisson": s,
     }
     if run_kernel:
@@ -165,6 +275,15 @@ def main(run_kernel: bool = True, scale: float = 0.25):
         print(f"{r['n_circuits']} circuits: coalesced {r['coalesced_cps']} c/s "
               f"vs per-circuit {r['per_circuit_cps']} c/s ({r['speedup']})")
         result["kernel"] = r
+
+        print("\n## real kernel: sync inline dispatcher vs async worker pool "
+              "(Fig-6 client mix)")
+        ra = async_kernel()
+        print(f"{ra['n_circuits']} circuits over {ra['worker_slots']} worker "
+              f"slots: sync {ra['sync_cps']} c/s vs async {ra['async_cps']} "
+              f"c/s ({ra['async_over_sync']}x), "
+              f"slo attainment {ra['slo_attainment']}")
+        result["async_kernel"] = ra
     return result
 
 

@@ -52,7 +52,10 @@ class SystemSimulation:
                  worker_failures: dict[str, float] | None = None,
                  gateway: bool = False, gateway_target: int | None = None,
                  gateway_deadline: float = 1.0,
+                 gateway_async: bool = False,
                  tenant_weights: dict[str, float] | None = None,
+                 tenant_priorities: dict[str, int] | None = None,
+                 tenant_slos_ms: dict[str, float] | None = None,
                  arrivals: dict[str, list[float]] | None = None):
         """``assign_latency``: manager->worker dispatch cost per circuit.
 
@@ -88,6 +91,20 @@ class SystemSimulation:
         LANES circuits into one dispatch costs one circuit's time — the
         coalescing throughput win, on the virtual clock.
 
+        ``gateway_async``: virtual-clock counterpart of the real runtime's
+        ``AsyncDispatcher`` worker pool.  The synchronous gateway charges
+        every batch's dispatch overhead to ONE serial classical ledger (the
+        pump thread executing batches inline), so a slow dispatch
+        head-of-line-blocks all workers; async mode charges it to a
+        PER-WORKER ledger — each worker's execution slot pipelines its own
+        admissions — so in-flight batches on different workers overlap.
+
+        ``tenant_priorities`` / ``tenant_slos_ms`` (gateway mode): strict
+        scheduling tier (lower = first) and end-to-end latency SLO per
+        client, forwarded to ``Gateway.register_client``; SLOs shorten the
+        coalescer's flush deadline and arm deadline-miss accounting in the
+        gateway telemetry (``slo_attainment`` in ``gateway_summary``).
+
         ``arrivals`` (gateway mode): client_id -> per-circuit arrival-time
         offsets (relative to the job's submit_time); circuits then stream in
         open-loop instead of arriving as one epoch-sized burst — the
@@ -116,6 +133,7 @@ class SystemSimulation:
         self.task_ids = TaskIdAllocator()  # per-simulation id space
 
         self.gateway = None
+        self.gateway_async = gateway_async
         self.arrivals = arrivals or {}
         if gateway:
             from repro.kernels.vqc_statevector import LANES
@@ -125,7 +143,10 @@ class SystemSimulation:
                                    deadline=gateway_deadline, lanes=LANES)
             for j in jobs:
                 self.gateway.register_client(
-                    j.client_id, weight=(tenant_weights or {}).get(j.client_id, 1.0))
+                    j.client_id,
+                    weight=(tenant_weights or {}).get(j.client_id, 1.0),
+                    priority=(tenant_priorities or {}).get(j.client_id, 1),
+                    slo_ms=(tenant_slos_ms or {}).get(j.client_id))
             self._gw_batches: dict[int, object] = {}   # batch task_id -> batch
             self._gw_dispatched: set[int] = set()      # handed to a worker
             self._gw_flush_at: float | None = None
@@ -295,10 +316,17 @@ class SystemSimulation:
         def launch(task, wid):
             # dispatch occupies the client's serial classical process first
             # (in gateway mode the ledger is the gateway's: one dispatch
-            # cost per BATCH — the amortization that coalescing buys)
+            # cost per BATCH — the amortization that coalescing buys).
+            # gateway_async splits that ledger PER WORKER: each worker's
+            # execution slot pipelines its own dispatches, so batch dispatch
+            # on one worker no longer head-of-line-blocks the others.
             cid = task.client_id
-            free = max(self._client_free.get(cid, 0.0), t) + self.classical_overhead
-            self._client_free[cid] = free
+            ledger = cid
+            if (self.gateway_async and self.gateway is not None
+                    and task.task_id in self._gw_batches):
+                ledger = f"{cid}/{wid}"
+            free = max(self._client_free.get(ledger, 0.0), t) + self.classical_overhead
+            self._client_free[ledger] = free
             self._in_flight[cid] = self._in_flight.get(cid, 0) + 1
             if self.gateway is not None and task.task_id in self._gw_batches:
                 self._gw_dispatched.add(task.task_id)

@@ -45,6 +45,7 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
           epochs: int = 10, batch_size: int = 8, lr: float = 1e-3,
           grad_mode: str = "shift", executor=None, optimizer: str = "sgd",
           gateway=None, client_id: str = "trainer", bank_mode: str = "auto",
+          priority: int = 1, slo_ms: Optional[float] = None,
           seed: int = 0, log: Optional[Callable[[str], None]] = None) -> TrainReport:
     """Train QuClassi per Algorithm 1.
 
@@ -57,7 +58,15 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
     ``client_id`` — coalesced (possibly with other tenants sharing the
     runtime) into lane-aligned mega-batches, placed by the co-Manager, and
     executed by the fused Pallas kernel.  Fidelities come back in submission
-    order, so gradient assembly is unchanged.
+    order, so gradient assembly is unchanged.  A runtime constructed with
+    ``mode="async"`` rides the async path transparently: submissions stream
+    into the pump loop while earlier batches execute on the worker pool, and
+    the per-bank gather blocks on out-of-order futures.
+
+    ``priority`` / ``slo_ms`` (gateway mode): this client's strict
+    scheduling tier (lower = served first — a tier-0 interactive tenant
+    preempts tier-1 training traffic) and end-to-end latency SLO, forwarded
+    to ``Gateway.register_client``.
 
     ``bank_mode``: 'materialized' (explicit (C, P) circuit banks),
     'implicit' (``ShiftBank``s — shift-aware executors run them through the
@@ -71,9 +80,10 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
     if gateway is not None:
         if executor is not None:
             raise ValueError("pass either executor or gateway, not both")
-        executor = (gateway.shift_executor(cfg.spec, client_id)
+        gw_opts = dict(priority=priority, slo_ms=slo_ms)
+        executor = (gateway.shift_executor(cfg.spec, client_id, **gw_opts)
                     if bank_mode == "implicit"
-                    else gateway.executor(cfg.spec, client_id))
+                    else gateway.executor(cfg.spec, client_id, **gw_opts))
     (xtr, ytr), (xte, yte) = train_set, test_set
     xtr, xte = pipeline.clean(xtr), pipeline.clean(xte)
     params = quclassi.init_params(cfg, jax.random.PRNGKey(seed))

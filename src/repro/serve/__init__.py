@@ -1,18 +1,25 @@
 """Online serving layer: streaming circuit submissions from many tenants
--> weighted-fair admission -> cross-tenant lane-aligned coalescing ->
-co-Manager placement -> fused Pallas kernel execution.
+-> priority-tiered weighted-fair admission -> cross-tenant lane-aligned
+coalescing (SLO-aware flush deadlines) -> co-Manager placement -> fused
+Pallas kernel execution, synchronously inline or async on a worker pool.
 
-See ``gateway`` (admission / fairness / backpressure), ``coalescer``
-(structure-keyed mega-batch packing), ``dispatcher`` (placement + execution),
-``metrics`` (per-tenant latency / throughput / lane-fill telemetry).
+See ``gateway`` (admission / priority tiers / SLOs / backpressure),
+``coalescer`` (structure-keyed mega-batch packing), ``dispatcher``
+(placement + inline execution + EWMA cost model), ``async_dispatcher``
+(pump loop + per-worker execution slots, out-of-order futures), ``metrics``
+(per-tenant latency / throughput / lane-fill / SLO-attainment telemetry).
 """
+from repro.serve.async_dispatcher import AsyncDispatcher
 from repro.serve.coalescer import CoalescedBatch, Coalescer, PendingCircuit
-from repro.serve.dispatcher import Dispatcher, GatewayRuntime, ShiftGroupKey
-from repro.serve.gateway import Backpressure, CircuitFuture, Gateway
-from repro.serve.metrics import Telemetry
+from repro.serve.dispatcher import (Dispatcher, GatewayRuntime, ShiftGroupKey,
+                                    batch_cost_units, execute_batch)
+from repro.serve.gateway import (Backpressure, CircuitFuture, Gateway,
+                                 SLO_FLUSH_FRACTION)
+from repro.serve.metrics import ServiceModel, Telemetry
 
 __all__ = [
-    "Backpressure", "CircuitFuture", "CoalescedBatch", "Coalescer",
-    "Dispatcher", "Gateway", "GatewayRuntime", "PendingCircuit",
-    "ShiftGroupKey", "Telemetry",
+    "AsyncDispatcher", "Backpressure", "CircuitFuture", "CoalescedBatch",
+    "Coalescer", "Dispatcher", "Gateway", "GatewayRuntime", "PendingCircuit",
+    "ServiceModel", "ShiftGroupKey", "SLO_FLUSH_FRACTION", "Telemetry",
+    "batch_cost_units", "execute_batch",
 ]

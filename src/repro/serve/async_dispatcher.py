@@ -1,0 +1,293 @@
+"""Async serving runtime: non-blocking dispatch with per-worker slots.
+
+The synchronous ``Dispatcher`` executes every coalesced mega-batch inline on
+the submitting thread, so one slow kernel launch head-of-line-blocks every
+tenant — exactly the uncontrolled behavior the paper's co-Manager exists to
+avoid.  ``AsyncDispatcher`` decouples the stages:
+
+  * a PUMP THREAD moves admitted circuits through the weighted-fair
+    scheduler and the coalescer, places emitted batches via Algorithm 2,
+    and re-arms itself on the coalescer's next SLO/deadline flush;
+  * a WORKER POOL executes placed batches — each registered worker owns
+    ``slots_per_worker`` execution slots, one in-flight mega-batch each, so
+    distinct workers (and slots) overlap kernel execution with admission,
+    coalescing, and placement;
+  * ``CircuitFuture``s resolve OUT OF ORDER as their batches finish; a
+    batch that cannot currently be placed waits in a ready queue without
+    blocking later batches that fit another worker.
+
+Placement charges each batch's EWMA-predicted service seconds to the chosen
+worker's CRU for the time it is outstanding (see ``repro.serve.dispatcher``),
+so Algorithm 2 keeps steering work toward the least-loaded worker even
+though completions now arrive asynchronously.
+
+Locking: the gateway has its own re-entrant lock; this class guards its
+scheduler state (ready queue, slot counts, co-Manager views) with one
+condition variable.  The two are never held nested in the
+gateway-then-condition order, so there is no lock-ordering cycle.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Sequence
+
+from repro.comanager.manager import CoManager
+from repro.comanager.worker import CircuitTask, WorkerConfig
+from repro.serve.coalescer import CoalescedBatch
+from repro.serve.dispatcher import (
+    Dispatcher,
+    KernelFn,
+    ShiftKernelFn,
+    execute_batch,
+)
+from repro.serve.gateway import Gateway
+
+
+class AsyncDispatcher(Dispatcher):
+    """Non-blocking dispatcher: pump loop + per-worker execution pool."""
+
+    def __init__(
+        self,
+        gateway: Gateway,
+        workers: Sequence[WorkerConfig],
+        *,
+        manager: CoManager | None = None,
+        kernel: KernelFn | None = None,
+        shift_kernel: ShiftKernelFn | None = None,
+        clock=time.perf_counter,
+        slots_per_worker: int = 1,
+    ):
+        super().__init__(
+            gateway,
+            workers,
+            manager=manager,
+            kernel=kernel,
+            shift_kernel=shift_kernel,
+            clock=clock,
+        )
+        if slots_per_worker < 1:
+            raise ValueError(f"slots_per_worker must be >= 1, got {slots_per_worker}")
+        self.slots_per_worker = slots_per_worker
+        self._cv = threading.Condition()
+        self._slot_free = {w.worker_id: slots_per_worker for w in workers}
+        self._max_width = max(w.max_qubits for w in workers)
+        self._ready: list[CoalescedBatch] = []
+        self._in_flight = 0
+        self._pumping = False  # a _pump_once holds popped-but-unqueued batches
+        self._kicked = False
+        self._stop = False
+        self._errors: list[BaseException] = []
+        self._pump_errors: list[BaseException] = []
+        self._pool = ThreadPoolExecutor(
+            max_workers=len(workers) * slots_per_worker,
+            thread_name_prefix="serve-slot",
+        )
+        self._pump_thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        """Launch the pump thread (idempotent)."""
+        if self._pump_thread is not None and self._pump_thread.is_alive():
+            return
+        self._stop = False
+        self._pump_thread = threading.Thread(
+            target=self._pump_loop, name="serve-pump", daemon=True
+        )
+        self._pump_thread.start()
+
+    def close(self) -> None:
+        """Stop the pump thread and wait for in-flight batches to finish."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._pump_thread is not None:
+            self._pump_thread.join(timeout=10.0)
+            self._pump_thread = None
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "AsyncDispatcher":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def kick(self) -> None:
+        """Wake the pump loop (call after submitting work)."""
+        with self._cv:
+            self._kicked = True
+            self._cv.notify_all()
+
+    # ----------------------------------------------------------- pump loop
+    def _wait_timeout(self) -> float | None:
+        """Seconds until the pump must wake for a deadline flush; a short
+        safety poll while batches wait for capacity; None to sleep until
+        kicked/notified."""
+        nd = self.gateway.next_deadline()
+        timeout = None
+        with self._cv:
+            if self._ready:
+                timeout = 0.05
+        if nd is not None:
+            until = max(nd - self.clock(), 1e-3)
+            timeout = until if timeout is None else min(timeout, until)
+        return timeout
+
+    def _pump_loop(self) -> None:
+        while True:
+            timeout = self._wait_timeout()
+            with self._cv:
+                if self._stop:
+                    return
+                if not self._kicked:
+                    self._cv.wait(timeout)
+                self._kicked = False
+                if self._stop:
+                    return
+            try:
+                self._pump_once()
+            except Exception as exc:  # keep the loop alive; drain() raises it
+                with self._cv:
+                    self._pump_errors.append(exc)
+                    self._cv.notify_all()
+
+    def _pump_once(self) -> None:
+        # _pumping marks the window where batches have been popped from the
+        # gateway but not yet queued in _ready: drain() must not conclude
+        # "quiesced" while their futures are still in limbo.
+        with self._cv:
+            self._pumping = True
+        try:
+            batches = self.gateway.pump(self.clock())
+            with self._cv:
+                self._ready.extend(batches)
+        finally:
+            with self._cv:
+                self._pumping = False
+                self._cv.notify_all()
+        self._place_ready()
+
+    def _place_ready(self) -> None:
+        """Try to place every ready batch; no head-of-line blocking — a
+        batch that fits no worker right now is skipped, later batches may
+        fit a different worker."""
+        while True:
+            now = self.clock()
+            launch = None
+            with self._cv:
+                exclude = {w for w, free in self._slot_free.items() if free <= 0}
+                for i, batch in enumerate(self._ready):
+                    width = self._width(batch)
+                    if width > self._max_width:
+                        self._ready.pop(i)
+                        err = RuntimeError(
+                            f"no worker fits a {width}-qubit batch "
+                            f"(largest worker: {self._max_width} qubits)"
+                        )
+                        self._errors.append(err)
+                        self.gateway.fail(batch, err, now)
+                        break
+                    est = self._estimate_s(batch)
+                    task = CircuitTask(
+                        task_id=next(self.task_ids),
+                        client_id="gateway",
+                        demand=width,
+                        service_time=est,
+                    )
+                    wid = self.manager.assign(task, now, exclude=exclude)
+                    if wid is None:
+                        continue
+                    self._ready.pop(i)
+                    self._slot_free[wid] -= 1
+                    self._in_flight += 1
+                    self._charge(wid, est)
+                    launch = (batch, task, wid, est)
+                    break
+                else:
+                    return  # nothing placeable right now
+            if launch is not None:
+                self._pool.submit(self._run, *launch)
+
+    def _run(
+        self, batch: CoalescedBatch, task: CircuitTask, wid: str, est: float
+    ) -> None:
+        """Worker-slot thread: execute one batch, resolve its futures (out
+        of submission order relative to other batches), release the slot."""
+        t0 = self.clock()
+        err: BaseException | None = None
+        fids = None
+        try:
+            fids = execute_batch(batch, self.kernel, self.shift_kernel)
+        except BaseException as exc:
+            err = exc
+        dt = self.clock() - t0
+        now = self.clock()
+        if err is None:
+            self._observe(batch, dt)
+            self.gateway.complete(batch, fids, now)
+        else:
+            self.gateway.fail(batch, err, now)
+        # futures are resolved BEFORE the slot is released, so drain()'s
+        # "no in-flight batches" implies "every future resolved".
+        with self._cv:
+            self.manager.complete(wid, task, now)
+            self._charge(wid, -est)
+            self._slot_free[wid] += 1
+            self._in_flight -= 1
+            self.batch_log.append((wid, batch.n, tuple(sorted(batch.clients()))))
+            if err is not None:
+                self._errors.append(err)
+            self._kicked = True  # freed capacity: ready batches may now place
+            self._cv.notify_all()
+
+    # ------------------------------------------------------------- control
+    def pump(self) -> int:
+        """Non-blocking: wake the pump loop and return immediately."""
+        self.kick()
+        return 0
+
+    def drain(self) -> int:
+        """Force-flush partial buffers and block until the gateway is idle
+        and every in-flight batch has resolved its futures.  Returns the
+        number of batches executed while draining.  Raises the first pump-
+        loop error instead of spinning forever on a wedged pump."""
+        self.start()
+        n0 = len(self.batch_log)
+        while True:
+            batches = self.gateway.flush(self.clock())
+            with self._cv:
+                if self._pump_errors:
+                    raise self._pump_errors[0]
+                self._ready.extend(batches)
+                self._kicked = True
+                self._cv.notify_all()
+                quiesced = (not self._ready and self._in_flight == 0
+                            and not self._pumping)
+            if quiesced and self.gateway.idle:
+                break
+            with self._cv:
+                self._cv.wait(0.02)
+        return len(self.batch_log) - n0
+
+    def absorb_backpressure(self) -> None:
+        """Backpressure-retry hook: wake the pump, then wait briefly for a
+        completion to free queue space — WITHOUT quiescing the whole runtime
+        (the sync dispatcher has no choice but to drain inline; here a full
+        drain would collapse the submission/execution overlap)."""
+        self.kick()
+        with self._cv:
+            if self._pump_errors:
+                raise self._pump_errors[0]
+            self._cv.wait(0.05)
+
+    @property
+    def in_flight_batches(self) -> int:
+        with self._cv:
+            return self._in_flight
+
+    @property
+    def errors(self) -> list[BaseException]:
+        with self._cv:
+            return list(self._pump_errors) + list(self._errors)

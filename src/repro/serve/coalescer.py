@@ -12,7 +12,11 @@ Flush policy is size-or-deadline:
              multiple of ``lanes``), a full batch is emitted;
   * deadline — a buffered circuit never waits longer than ``deadline``
              (bounded latency under light load: partial batches are emitted
-             when their oldest member ages out).
+             when their oldest member ages out).  An item may carry its own
+             earlier ``flush_by`` (SLO-aware gateways set it from the
+             tenant's latency SLO): a buffer's effective flush deadline is
+             the MIN over its members, so one latency-sensitive circuit
+             pulls the whole shared batch forward.
 
 Keys are any hashable: the real data plane uses the ``CircuitSpec`` itself
 (frozen dataclass — hash == structural identity), the virtual-clock
@@ -38,6 +42,8 @@ class PendingCircuit:
     future: Any = None    # CircuitFuture in the real data plane
     lanes: int = 1        # kernel lanes this item occupies (a shift-group
                           # subtask covers its bank's B sample lanes)
+    flush_by: Optional[float] = None  # SLO-derived flush deadline; None ->
+                                      # default (arrival + deadline)
 
 
 @dataclasses.dataclass
@@ -105,12 +111,19 @@ class Coalescer:
         buf = self._buffers.setdefault(batch.key, [])
         buf[:0] = batch.members
 
+    def _due_at(self, buf: list[PendingCircuit]) -> float:
+        """Effective flush deadline of one buffer: min over members of their
+        SLO-derived ``flush_by`` (falling back to arrival + deadline)."""
+        return min(m.arrival + self.deadline if m.flush_by is None
+                   else m.flush_by for m in buf)
+
     # -------------------------------------------------------------- flush
     def flush_due(self, now: float) -> list[CoalescedBatch]:
-        """Emit partial batches whose oldest member has aged past deadline."""
+        """Emit partial batches whose flush deadline has passed (the oldest
+        member aged out, or a member's SLO budget ran down)."""
         out = []
         for key, buf in self._buffers.items():
-            if buf and now - buf[0].arrival + 1e-12 >= self.deadline:
+            if buf and now + 1e-12 >= self._due_at(buf):
                 out.append(CoalescedBatch(key, buf[:self.target], created=now,
                                           by_deadline=True))
                 del buf[:self.target]
@@ -138,8 +151,8 @@ class Coalescer:
     # ---------------------------------------------------------- inspection
     def next_deadline(self) -> Optional[float]:
         """Earliest time at which some buffered circuit must be flushed."""
-        oldest = [buf[0].arrival for buf in self._buffers.values() if buf]
-        return min(oldest) + self.deadline if oldest else None
+        dues = [self._due_at(buf) for buf in self._buffers.values() if buf]
+        return min(dues) if dues else None
 
     @property
     def buffered(self) -> int:

@@ -6,15 +6,27 @@ fused kernel batch occupy one ``n_qubits``-wide register file slot on the
 worker, not ``n * width`` qubits), so the existing capacity/CRU assignment
 logic routes whole batches exactly as it routed single circuits.
 
+Cost model: every batch carries an analytic work estimate
+(``batch_cost_units`` — gate applications x padded kernel lanes; for
+shift-group subtasks the TRUE prefix-reuse cost, including the suffix depth
+the backward pass must cover) which the ``Telemetry.service`` EWMA converts
+into predicted seconds.  The prediction becomes the task's ``service_time``
+AND is charged to the assigned worker's CRU while the batch is outstanding,
+so Algorithm 2's lowest-CRU-first choice routes new batches toward the
+worker with the least predicted backlog.
+
 This module is the *synchronous real-execution* runtime: execution happens
 inline on the chosen worker's mesh slice (here: the local device) and
-capacity is released immediately after.  The virtual-clock counterpart lives
-in ``repro.comanager.simulation`` (``gateway=True``).
+capacity is released immediately after.  The non-blocking counterpart with
+a pump loop and per-worker execution slots is
+``repro.serve.async_dispatcher.AsyncDispatcher``; the virtual-clock
+counterpart lives in ``repro.comanager.simulation`` (``gateway=True``).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import time
 from typing import Callable, Sequence
 
@@ -25,6 +37,7 @@ from repro.comanager.tenancy import TaskIdAllocator
 from repro.comanager.worker import CircuitTask, WorkerConfig
 from repro.core.sim import CircuitSpec
 from repro.kernels import ops as kops
+from repro.kernels.vqc_statevector import LANES, build_shift_plan
 from repro.serve.coalescer import CoalescedBatch
 from repro.serve.gateway import Backpressure, Gateway
 from repro.serve.metrics import Telemetry
@@ -48,6 +61,102 @@ class ShiftGroupKey:
     bank_token: int
 
 
+# --------------------------------------------------------- shared execution
+def batch_spec(batch: CoalescedBatch) -> CircuitSpec:
+    key = batch.key
+    if isinstance(key, CircuitSpec):
+        return key
+    if isinstance(key, ShiftGroupKey):
+        return key.spec
+    raise TypeError(f"dispatcher batches must be keyed by CircuitSpec or "
+                    f"ShiftGroupKey, got {type(key).__name__}")
+
+
+def execute_batch(batch: CoalescedBatch, kernel: KernelFn,
+                  shift_kernel: ShiftKernelFn) -> list:
+    """Run one coalesced batch on the local device; returns one fidelity
+    entry per member, in member (submission) order.  Shared by the sync and
+    async dispatchers — batch composition never changes per-lane math, so
+    both paths are bit-identical.
+
+    Row batches are zero-padded up to a LANES multiple (shape bucketing):
+    deadline flushes emit arbitrary partial sizes, and without bucketing
+    every new size costs a fresh XLA compile — under the async pump, where
+    partial flushes are routine, that recompile storm dwarfs the kernel
+    time.  The pad lanes are dead weight the launch already paid for
+    (``CoalescedBatch.padded``) and are sliced off before scatter-back."""
+    if isinstance(batch.key, ShiftGroupKey):
+        # one prefix-reuse kernel launch computes every coalesced
+        # (param, shift) group of this bank; member i gets its group's
+        # (B,) fidelity row.
+        spec = batch.key.spec
+        bank = batch.members[0].payload[0]
+        groups = tuple(int(m.payload[1]) for m in batch.members)
+        rows = shift_kernel(spec, bank.theta, bank.data,
+                            bank.four_term, groups)
+        return [rows[i] for i in range(len(batch.members))]
+    spec: CircuitSpec = batch.key
+    theta = jnp.stack([m.payload[0] for m in batch.members])
+    data = jnp.stack([m.payload[1] for m in batch.members])
+    n = len(batch.members)
+    # bucketing to LANES (not the coalescer's possibly-smaller test-time lane
+    # config) is free: the Pallas kernel's internal tile is >= LANES lanes
+    # for ANY batch size, so the pad rows add zero kernel work while keeping
+    # the number of distinct compiled shapes minimal.
+    pad = (-n) % LANES
+    if pad:
+        theta = jnp.pad(theta, ((0, pad), (0, 0)))
+        data = jnp.pad(data, ((0, pad), (0, 0)))
+    fids = kernel(spec, theta, data)
+    return [fids[i] for i in range(n)]
+
+
+# ------------------------------------------------------- analytic cost model
+def batch_family(batch: CoalescedBatch):
+    """Service-model key: batches of one structural family share an EWMA."""
+    if isinstance(batch.key, ShiftGroupKey):
+        return ("shift", batch.key.spec)
+    return batch.key
+
+
+def batch_cost_units(batch: CoalescedBatch) -> float:
+    """Analytic work units of one batch: gate applications x padded lanes.
+
+    Row batches pay the full gate sequence over their padded lane tile.
+    Shift-group batches pay the prefix-reuse cost: the data-register pass,
+    the trainable-register forward pass, the backward pass down to the
+    DEEPEST suffix any coalesced group needs (a group shifting an early
+    parameter forces a longer reversed-suffix walk), and one gate + inner
+    product per shift variant — the "true cost" Algorithm 2 should charge a
+    group subtask, not one flat unit.
+    """
+    spec = batch_spec(batch)
+    if not isinstance(batch.key, ShiftGroupKey):
+        pad = batch.padded(LANES)
+        return float(len(spec.ops) * pad)
+    bank = batch.members[0].payload[0]
+    pad_b = math.ceil(bank.n_samples / LANES) * LANES
+    plan = build_shift_plan(spec)
+    groups = [int(m.payload[1]) for m in batch.members]
+    if plan is None:
+        # fallback materializes each requested group through the full circuit
+        return float(len(spec.ops) * len(groups) * pad_b)
+    n_train = len(plan.train_ops)
+    max_suffix = 0
+    n_variants = 0
+    for g in groups:
+        if g == 0:
+            continue
+        j = (g - 1) % bank.n_params
+        pos = plan.theta_pos[j]
+        if pos < 0:
+            continue              # parameter drives no gate: base fidelity
+        n_variants += 1
+        max_suffix = max(max_suffix, n_train - pos)
+    gate_apps = (len(plan.data_ops) + n_train + max_suffix + n_variants)
+    return float(gate_apps * pad_b)
+
+
 class Dispatcher:
     def __init__(self, gateway: Gateway, workers: Sequence[WorkerConfig],
                  *, manager: CoManager | None = None,
@@ -65,47 +174,54 @@ class Dispatcher:
         self.clock = clock
         self.task_ids = TaskIdAllocator()
         self.batch_log: list[tuple[str, int, tuple]] = []  # (worker, n, clients)
+        self._base_cru: dict[str, float] = {}
+        self._outstanding_s: dict[str, float] = {}  # predicted queued seconds
         for w in workers:
             self.manager.register_worker(w.worker_id, w.max_qubits,
                                          cru=w.base_load, t=self.clock(),
                                          error_rate=w.error_rate)
+            self._base_cru[w.worker_id] = w.base_load
+            self._outstanding_s[w.worker_id] = 0.0
+
+    # ------------------------------------------------------ CRU cost model
+    def _estimate_s(self, batch: CoalescedBatch) -> float:
+        return self.gateway.telemetry.service.estimate(
+            batch_family(batch), batch_cost_units(batch))
+
+    def _charge(self, wid: str, seconds: float) -> None:
+        """Add/remove predicted outstanding work from a worker's CRU: the
+        EWMA service estimate is the co-Manager's view of classical load."""
+        self._outstanding_s[wid] = max(
+            0.0, self._outstanding_s.get(wid, 0.0) + seconds)
+        view = self.manager.workers.get(wid)
+        if view is not None:
+            view.cru = self._base_cru.get(wid, 0.0) + self._outstanding_s[wid]
+
+    def _observe(self, batch: CoalescedBatch, seconds: float) -> None:
+        self.gateway.telemetry.service.update(
+            batch_family(batch), batch_cost_units(batch), seconds)
 
     # ----------------------------------------------------------- execution
     @staticmethod
     def _width(batch: CoalescedBatch) -> int:
-        key = batch.key
-        if isinstance(key, CircuitSpec):
-            return key.n_qubits
-        if isinstance(key, ShiftGroupKey):
-            return key.spec.n_qubits
-        raise TypeError(f"dispatcher batches must be keyed by CircuitSpec or "
-                        f"ShiftGroupKey, got {type(key).__name__}")
+        return batch_spec(batch).n_qubits
 
     def run_batch(self, batch: CoalescedBatch) -> str:
         """Place one batch via Algorithm 2 and execute it on the spot."""
         now = self.clock()
+        est = self._estimate_s(batch)
         task = CircuitTask(task_id=next(self.task_ids), client_id="gateway",
-                           demand=self._width(batch), service_time=1.0)
+                           demand=self._width(batch), service_time=est)
         wid = self.manager.assign(task, now)
         if wid is None:
             raise RuntimeError(
                 f"no worker fits a {task.demand}-qubit batch "
                 f"(capacities: {[v.max_qubits for v in self.manager.workers.values()]})")
-        if isinstance(batch.key, ShiftGroupKey):
-            # one prefix-reuse kernel launch computes every coalesced
-            # (param, shift) group of this bank; member i gets its group's
-            # (B,) fidelity row.
-            spec = batch.key.spec
-            bank = batch.members[0].payload[0]
-            groups = tuple(int(m.payload[1]) for m in batch.members)
-            rows = self.shift_kernel(spec, bank.theta, bank.data,
-                                     bank.four_term, groups)
-            fids = [rows[i] for i in range(len(batch.members))]
-        else:
-            spec: CircuitSpec = batch.key
-            theta = jnp.stack([m.payload[0] for m in batch.members])
-            data = jnp.stack([m.payload[1] for m in batch.members])
-            fids = self.kernel(spec, theta, data)
+        self._charge(wid, est)
+        t0 = self.clock()
+        fids = execute_batch(batch, self.kernel, self.shift_kernel)
+        self._observe(batch, self.clock() - t0)
+        self._charge(wid, -est)
         self.manager.complete(wid, task, self.clock())
         self.gateway.complete(batch, fids, self.clock())
         self.batch_log.append((wid, batch.n, tuple(sorted(batch.clients()))))
@@ -127,6 +243,22 @@ class Dispatcher:
             self.run_batch(b)
         return len(batches)
 
+    # lifecycle no-ops so sync/async runtimes share a shutdown path
+    def start(self) -> None:
+        pass
+
+    def kick(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+    def absorb_backpressure(self) -> None:
+        """A tenant queue is full: inline execution is the only way the sync
+        dispatcher frees it (the async override waits for a completion
+        instead of quiescing everything)."""
+        self.drain()
+
 
 class GatewayRuntime:
     """Bundled gateway + dispatcher + telemetry for local serving.
@@ -134,29 +266,63 @@ class GatewayRuntime:
     The unit the trainer and the benchmarks hold on to: multiple training
     clients share one runtime, and their circuit banks coalesce across
     tenants into shared kernel launches.
+
+    ``mode``: "sync" executes each mega-batch inline on the submitting
+    thread; "async" starts an ``AsyncDispatcher`` — a pump thread plus a
+    per-worker execution pool (``slots_per_worker`` in-flight mega-batches
+    per worker), so kernel execution overlaps with admission, coalescing,
+    and placement, and futures resolve out of order.
     """
 
     def __init__(self, workers: Sequence[WorkerConfig] | None = None, *,
                  target: int | None = None, deadline: float = 1.0,
                  kernel: KernelFn | None = None,
                  shift_kernel: ShiftKernelFn | None = None,
-                 clock=time.perf_counter, **gateway_opts):
+                 clock=time.perf_counter, mode: str = "sync",
+                 slots_per_worker: int = 1, **gateway_opts):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"unknown mode {mode!r}")
         if workers is None:
             workers = [WorkerConfig(f"w{i+1}", q)
                        for i, q in enumerate((5, 10, 15, 20))]
+        self.mode = mode
         self.telemetry = Telemetry()
         self.gateway = Gateway(target=target, deadline=deadline,
                                telemetry=self.telemetry, **gateway_opts)
-        self.dispatcher = Dispatcher(self.gateway, workers, kernel=kernel,
-                                     shift_kernel=shift_kernel, clock=clock)
+        if mode == "async":
+            from repro.serve.async_dispatcher import AsyncDispatcher
+            self.dispatcher = AsyncDispatcher(
+                self.gateway, workers, kernel=kernel,
+                shift_kernel=shift_kernel, clock=clock,
+                slots_per_worker=slots_per_worker)
+        else:
+            self.dispatcher = Dispatcher(self.gateway, workers, kernel=kernel,
+                                         shift_kernel=shift_kernel, clock=clock)
+        self.dispatcher.start()
+
+    def close(self) -> None:
+        """Stop the pump thread and worker pool (async mode; sync no-op)."""
+        self.dispatcher.close()
+
+    def __enter__(self) -> "GatewayRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def executor(self, spec: CircuitSpec, client_id: str,
-                 *, weight: float = 1.0):
+                 *, weight: float = 1.0, priority: int = 1,
+                 slo_ms: float | None = None):
         """A ``shift_rule.Executor`` that routes a circuit bank through the
         gateway row by row and gathers fidelities in submission order —
-        ``shift_rule.assemble_gradient`` consumes the result unchanged."""
+        ``shift_rule.assemble_gradient`` consumes the result unchanged.
+
+        In async mode submission overlaps with execution: rows stream into
+        the pump loop as they are admitted, and the final gather blocks on
+        the out-of-order futures."""
         if client_id not in self.gateway.tenants:
-            self.gateway.register_client(client_id, weight=weight)
+            self.gateway.register_client(client_id, weight=weight,
+                                         priority=priority, slo_ms=slo_ms)
 
         def run(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:
             futures = []
@@ -168,15 +334,18 @@ class GatewayRuntime:
                             now=self.dispatcher.clock()))
                         break
                     except Backpressure:
-                        # drain in-flight work, then the queue has room again
-                        self.dispatcher.drain()
+                        # sync: drain in-flight work; async: wait for a
+                        # completion to free queue space without quiescing
+                        self.dispatcher.absorb_backpressure()
+                self.dispatcher.kick()
             self.dispatcher.drain()
             return jnp.stack([f.value for f in futures])
 
         return run
 
     def shift_executor(self, spec: CircuitSpec, client_id: str,
-                       *, weight: float = 1.0):
+                       *, weight: float = 1.0, priority: int = 1,
+                       slo_ms: float | None = None):
         """A shift-aware ``shift_rule.Executor``: an implicit ``ShiftBank``
         enters the gateway as per-(param, shift) GROUP subtasks — 1 + 2P
         admissions instead of (1 + 2P) * B — which the coalescer packs into
@@ -187,7 +356,8 @@ class GatewayRuntime:
         Plain ``(theta_bank, data_bank)`` calls are also accepted and fall
         back to per-row submission, so the executor composes with every bank
         mode."""
-        row_run = self.executor(spec, client_id, weight=weight)
+        row_run = self.executor(spec, client_id, weight=weight,
+                                priority=priority, slo_ms=slo_ms)
 
         def run(bank, data_bank=None) -> jnp.ndarray:
             if data_bank is not None:
@@ -203,7 +373,8 @@ class GatewayRuntime:
                             lanes=bank.n_samples))
                         break
                     except Backpressure:
-                        self.dispatcher.drain()
+                        self.dispatcher.absorb_backpressure()
+                self.dispatcher.kick()
             self.dispatcher.drain()
             return jnp.concatenate([f.value for f in futures])
 

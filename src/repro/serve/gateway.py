@@ -1,10 +1,21 @@
-"""Online serving gateway: admission, fairness, backpressure.
+"""Online serving gateway: admission, fairness, backpressure, SLOs.
 
 Streaming circuit submissions from many concurrent clients enter per-client
-FIFO queues; a weighted-fair scheduler (stride scheduling: each dequeue
-advances the client's virtual pass by ``1/weight``, the eligible client with
-the smallest pass goes next) feeds the cross-tenant coalescer; the coalescer
-emits lane-aligned mega-batches for the dispatcher.
+FIFO queues; a two-level scheduler feeds the cross-tenant coalescer:
+
+  * strict PRIORITY tiers — a lower ``priority`` number is served strictly
+    first; tier 0 (interactive/latency-critical) always preempts tier 1
+    (batch training), which preempts tier 2, and so on;
+  * weighted-fair STRIDE within a tier — each dequeue advances the client's
+    virtual pass by ``1/weight``; the eligible client with the smallest pass
+    goes next.
+
+SLO-aware deadlines: a tenant registered with ``slo_ms`` gives every one of
+its circuits a flush budget of ``SLO_FLUSH_FRACTION`` of the SLO (the rest
+is reserved for placement + kernel execution); the coalescer flushes a
+shared buffer at the MIN of its members' budgets, so one latency-sensitive
+tenant pulls the whole cross-tenant batch forward.  Deadline misses are
+counted per tenant in ``Telemetry`` (``slo_attainment``).
 
 Backpressure is two-level, both bounded per tenant:
   * ``max_pending``   — admission queue depth; a client that outruns the
@@ -17,15 +28,27 @@ Backpressure is two-level, both bounded per tenant:
 The gateway is clock-agnostic: every entry point takes ``now`` (virtual
 seconds under the simulation's event loop, ``time.perf_counter()`` in the
 real data plane).
+
+Thread safety: all mutating entry points (``submit``, ``pump``, ``flush``,
+``complete``, ``fail``, ``requeue``) take an internal re-entrant lock, so
+the async dispatcher's pump loop and worker-pool completion threads can run
+concurrently with user threads calling ``submit``.  ``CircuitFuture``
+resolution is single-assignment behind that lock; ``CircuitFuture.result``
+blocks on an event and is safe to call from any thread.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
 from typing import Any, Hashable, Optional
 
 from repro.serve.coalescer import Coalescer, CoalescedBatch, PendingCircuit
 from repro.serve.metrics import Telemetry
+
+#: fraction of a tenant's latency SLO spent waiting in the coalescer; the
+#: remainder is budget for placement + kernel execution + scatter-back.
+SLO_FLUSH_FRACTION = 0.5
 
 
 class Backpressure(RuntimeError):
@@ -33,37 +56,66 @@ class Backpressure(RuntimeError):
 
 
 class CircuitFuture:
-    """Single-assignment result slot for one submitted circuit."""
+    """Single-assignment result slot for one submitted circuit.
 
-    __slots__ = ("client_id", "seq", "submit_time", "_value", "done")
+    Under the async dispatcher, futures resolve out of submission order from
+    worker-pool threads: ``done``/``value`` stay cheap for polling loops, and
+    ``result(timeout)`` blocks on an event for cross-thread waits.  A failed
+    batch execution resolves its futures with ``set_error``; reading them
+    re-raises the execution error in the waiting thread.
+    """
+
+    __slots__ = ("client_id", "seq", "submit_time", "_value", "_error",
+                 "done", "_event")
 
     def __init__(self, client_id: str, seq: int, submit_time: float):
         self.client_id = client_id
         self.seq = seq
         self.submit_time = submit_time
         self._value = None
+        self._error = None
         self.done = False
+        self._event = threading.Event()
 
     def set(self, value) -> None:
         assert not self.done, f"future {self.seq} resolved twice"
         self._value = value
         self.done = True
+        self._event.set()
+
+    def set_error(self, exc: BaseException) -> None:
+        assert not self.done, f"future {self.seq} resolved twice"
+        self._error = exc
+        self.done = True
+        self._event.set()
 
     @property
     def value(self):
         if not self.done:
             raise RuntimeError(f"circuit {self.seq} not completed yet")
+        if self._error is not None:
+            raise self._error
         return self._value
+
+    def result(self, timeout: float | None = None):
+        """Block until resolved; returns the value or re-raises the batch's
+        execution error."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"circuit {self.seq} not completed "
+                               f"within {timeout}s")
+        return self.value
 
 
 @dataclasses.dataclass
 class TenantState:
     weight: float = 1.0
+    priority: int = 1     # strict tier: lower value = served strictly first
+    slo_s: Optional[float] = None  # end-to-end latency SLO (None: best-effort)
     max_pending: int = 100_000
     max_in_flight: int = 100_000
     queue: deque = dataclasses.field(default_factory=deque)
     in_flight: int = 0
-    vpass: float = 0.0    # stride-scheduling virtual pass
+    vpass: float = 0.0    # stride-scheduling virtual pass (within its tier)
 
 
 class Gateway:
@@ -80,21 +132,34 @@ class Gateway:
                               max_in_flight=max_in_flight)
         self.tenants: dict[str, TenantState] = {}
         self._seq = 0
+        # serializes queue/coalescer/telemetry mutation against the async
+        # dispatcher's pump + completion threads; re-entrant because flush()
+        # pumps and submit() may auto-register under the same lock.
+        self._lock = threading.RLock()
 
     # ---------------------------------------------------------- admission
     def register_client(self, client_id: str, *, weight: float = 1.0,
+                        priority: int = 1, slo_ms: float | None = None,
                         max_pending: int | None = None,
                         max_in_flight: int | None = None) -> TenantState:
-        st = TenantState(
-            weight=weight,
-            max_pending=max_pending or self._defaults["max_pending"],
-            max_in_flight=max_in_flight or self._defaults["max_in_flight"])
-        # a late joiner starts at the current minimum virtual pass — not 0,
-        # which would hand it absolute priority until it "caught up" with
-        # tenants that have been served for a while.
-        st.vpass = min((t.vpass for t in self.tenants.values()), default=0.0)
-        self.tenants[client_id] = st
-        return st
+        """``priority``: strict scheduling tier (lower = first).  ``slo_ms``:
+        end-to-end latency SLO; shortens the coalescer flush deadline for
+        this tenant's circuits and arms deadline-miss accounting."""
+        with self._lock:
+            st = TenantState(
+                weight=weight,
+                priority=priority,
+                slo_s=None if slo_ms is None else slo_ms / 1e3,
+                max_pending=max_pending or self._defaults["max_pending"],
+                max_in_flight=max_in_flight or self._defaults["max_in_flight"])
+            # a late joiner starts at the current minimum virtual pass OF ITS
+            # TIER — not 0, which would hand it absolute priority within the
+            # tier until it "caught up" with tenants served for a while.
+            st.vpass = min((t.vpass for t in self.tenants.values()
+                            if t.priority == priority), default=0.0)
+            self.tenants[client_id] = st
+            self.telemetry.set_slo(client_id, st.slo_s)
+            return st
 
     def _tenant(self, client_id: str) -> TenantState:
         st = self.tenants.get(client_id)
@@ -109,88 +174,110 @@ class Gateway:
         ``lanes``: kernel lanes the item occupies (1 for a row circuit; a
         shift-group subtask covers its bank's B sample lanes) — feeds the
         lane-fill telemetry, not admission accounting."""
-        st = self._tenant(client_id)
-        if len(st.queue) >= st.max_pending:
-            self.telemetry.on_reject(client_id)
-            raise Backpressure(
-                f"{client_id}: {len(st.queue)} pending >= {st.max_pending}")
-        fut = CircuitFuture(client_id, self._seq, now)
-        st.queue.append(PendingCircuit(key=key, client_id=client_id,
-                                       seq=self._seq, arrival=now,
-                                       payload=payload, future=fut,
-                                       lanes=lanes))
-        self._seq += 1
-        self.telemetry.on_submit(client_id, now)
-        return fut
+        with self._lock:
+            st = self._tenant(client_id)
+            if len(st.queue) >= st.max_pending:
+                self.telemetry.on_reject(client_id)
+                raise Backpressure(
+                    f"{client_id}: {len(st.queue)} pending >= {st.max_pending}")
+            fut = CircuitFuture(client_id, self._seq, now)
+            flush_by = (None if st.slo_s is None
+                        else now + min(self.coalescer.deadline,
+                                       SLO_FLUSH_FRACTION * st.slo_s))
+            st.queue.append(PendingCircuit(key=key, client_id=client_id,
+                                           seq=self._seq, arrival=now,
+                                           payload=payload, future=fut,
+                                           lanes=lanes, flush_by=flush_by))
+            self._seq += 1
+            self.telemetry.on_submit(client_id, now)
+            return fut
 
     # ------------------------------------------------- fair dequeue + pump
     def _next_client(self) -> Optional[str]:
-        """Smallest-virtual-pass eligible client (weighted fair); ties break
-        on client id for determinism.  One O(T) pass — this runs once per
-        dequeued circuit."""
+        """Two-level pick: strict priority tier first, then smallest virtual
+        pass within the tier (weighted fair); ties break on client id for
+        determinism.  One O(T) pass — this runs once per dequeued circuit."""
         best = None
         for cid, st in self.tenants.items():
             if not st.queue or st.in_flight >= st.max_in_flight:
                 continue
-            if best is None or (st.vpass, cid) < best:
-                best = (st.vpass, cid)
-        return best[1] if best else None
+            if best is None or (st.priority, st.vpass, cid) < best:
+                best = (st.priority, st.vpass, cid)
+        return best[2] if best else None
 
     def pump(self, now: float) -> list[CoalescedBatch]:
-        """Move admitted circuits into the coalescer in weighted-fair order,
-        then collect size-triggered and deadline-due batches."""
-        batches: list[CoalescedBatch] = []
-        while True:
-            cid = self._next_client()
-            if cid is None:
-                break
-            st = self.tenants[cid]
-            item = st.queue.popleft()
-            st.vpass += 1.0 / st.weight
-            st.in_flight += 1
-            batches.extend(self.coalescer.add(item))
-        batches.extend(self.coalescer.flush_due(now))
-        for b in batches:
-            self.telemetry.on_batch(b.lane_count,
-                                    padded=b.padded(self.coalescer.lanes),
-                                    by_deadline=b.by_deadline)
-        return batches
+        """Move admitted circuits into the coalescer in priority-then-fair
+        order, then collect size-triggered and deadline-due batches."""
+        with self._lock:
+            batches: list[CoalescedBatch] = []
+            while True:
+                cid = self._next_client()
+                if cid is None:
+                    break
+                st = self.tenants[cid]
+                item = st.queue.popleft()
+                st.vpass += 1.0 / st.weight
+                st.in_flight += 1
+                batches.extend(self.coalescer.add(item))
+            batches.extend(self.coalescer.flush_due(now))
+            for b in batches:
+                self.telemetry.on_batch(b.lane_count,
+                                        padded=b.padded(self.coalescer.lanes),
+                                        by_deadline=b.by_deadline)
+            return batches
 
     def flush(self, now: float) -> list[CoalescedBatch]:
         """pump() then force-drain every partial buffer (end of a bank)."""
-        batches = self.pump(now)
-        forced = self.coalescer.flush_all(now)
-        for b in forced:
-            self.telemetry.on_batch(b.lane_count,
-                                    padded=b.padded(self.coalescer.lanes),
-                                    by_deadline=b.by_deadline)
-        return batches + forced
+        with self._lock:
+            batches = self.pump(now)
+            forced = self.coalescer.flush_all(now)
+            for b in forced:
+                self.telemetry.on_batch(b.lane_count,
+                                        padded=b.padded(self.coalescer.lanes),
+                                        by_deadline=b.by_deadline)
+            return batches + forced
 
     # ------------------------------------------------------------ results
     def complete(self, batch: CoalescedBatch, values, now: float) -> None:
         """Scatter one executed batch's fidelities back to its futures, in
         member (submission) order.  ``values`` may be None in clock-only
         runtimes (simulation) where there is no fidelity payload."""
-        for i, m in enumerate(batch.members):
-            st = self.tenants[m.client_id]
-            st.in_flight = max(0, st.in_flight - 1)
-            if m.future is not None:
-                m.future.set(values[i] if values is not None else None)
-            self.telemetry.on_complete(m.client_id, m.arrival, now)
+        with self._lock:
+            for i, m in enumerate(batch.members):
+                st = self.tenants[m.client_id]
+                st.in_flight = max(0, st.in_flight - 1)
+                if m.future is not None:
+                    m.future.set(values[i] if values is not None else None)
+                self.telemetry.on_complete(m.client_id, m.arrival, now)
+
+    def fail(self, batch: CoalescedBatch, exc: BaseException,
+             now: float) -> None:
+        """Resolve a batch whose execution errored: every member future
+        re-raises ``exc``; tenant in-flight accounting is released so the
+        scheduler is not wedged by a poisoned batch."""
+        with self._lock:
+            for m in batch.members:
+                st = self.tenants[m.client_id]
+                st.in_flight = max(0, st.in_flight - 1)
+                if m.future is not None:
+                    m.future.set_error(exc)
 
     def requeue(self, batch: CoalescedBatch) -> None:
         """Return a failed (evicted-worker) batch for re-coalescing; the
         members keep their futures and original arrivals, so nothing is
         dropped and the deadline policy re-emits them promptly.  They remain
         counted in-flight: they never went back through admission."""
-        self.coalescer.requeue(batch)
+        with self._lock:
+            self.coalescer.requeue(batch)
 
     # --------------------------------------------------------- inspection
     def next_deadline(self) -> Optional[float]:
-        return self.coalescer.next_deadline()
+        with self._lock:
+            return self.coalescer.next_deadline()
 
     @property
     def idle(self) -> bool:
         """True when nothing is queued or buffered (in-flight may remain)."""
-        return (self.coalescer.buffered == 0
-                and all(not st.queue for st in self.tenants.values()))
+        with self._lock:
+            return (self.coalescer.buffered == 0
+                    and all(not st.queue for st in self.tenants.values()))

@@ -1,8 +1,17 @@
 """Serving-gateway telemetry.
 
 Tracks, per tenant: submission/completion counts, rejected (backpressured)
-submissions, and end-to-end circuit latency (submit -> fidelity delivered);
+submissions, end-to-end circuit latency (submit -> fidelity delivered), and
+SLO attainment (completions within the tenant's registered deadline);
 and, per coalesced batch: occupancy against the lane-padded kernel shape.
+
+``ServiceModel`` is the EWMA per-spec service-time estimator: the dispatcher
+reports each executed batch's measured wall time together with its analytic
+work units (gate applications x padded lanes), and the model's estimates
+feed the co-Manager's CRU cost model — a worker's classical-resource usage
+rises by the *predicted* seconds of the batches queued on it, so Algorithm 2
+steers new mega-batches toward the worker with the least outstanding work,
+not just the fewest resident circuits.
 
 ``lane_fill`` is the headline packing metric: of the kernel lanes the data
 plane actually paid for (batches are padded up to a multiple of ``LANES``),
@@ -18,6 +27,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+from typing import Hashable
 
 
 def _percentile(sorted_xs: list[float], q: float) -> float:
@@ -38,14 +49,58 @@ class TenantStats:
     first_submit: float = float("inf")
     last_complete: float = 0.0
     latencies: list = dataclasses.field(default_factory=list)
+    #: end-to-end latency SLO in seconds (None = best-effort tenant).
+    slo_s: float | None = None
+    slo_misses: int = 0
 
     @property
     def circuits_per_second(self) -> float:
         span = self.last_complete - self.first_submit
         return self.completed / max(span, 1e-9)
 
+    @property
+    def slo_attainment(self) -> float | None:
+        """Fraction of completions delivered within the SLO (None: no SLO)."""
+        if self.slo_s is None:
+            return None
+        return 1.0 - self.slo_misses / max(self.completed, 1)
+
     def latency_percentile(self, q: float) -> float:
         return _percentile(sorted(self.latencies), q)
+
+
+class ServiceModel:
+    """EWMA seconds-per-work-unit, keyed by batch family (the CircuitSpec or
+    shift-group spec): ``estimate`` = ewma[key] * units, falling back to a
+    global ewma (then ``default_s``) for keys never executed.  Thread-safe:
+    the async dispatcher updates it from worker-pool threads."""
+
+    def __init__(self, alpha: float = 0.25, default_s: float = 1.0):
+        self.alpha = alpha
+        self.default_s = default_s
+        self._per_key: dict[Hashable, float] = {}
+        self._global: float | None = None
+        self._lock = threading.Lock()
+
+    def update(self, key: Hashable, units: float, seconds: float) -> None:
+        if units <= 0 or seconds < 0:
+            return
+        per_unit = seconds / units
+        with self._lock:
+            old = self._per_key.get(key)
+            self._per_key[key] = (per_unit if old is None
+                                  else self.alpha * per_unit
+                                  + (1 - self.alpha) * old)
+            self._global = (per_unit if self._global is None
+                            else self.alpha * per_unit
+                            + (1 - self.alpha) * self._global)
+
+    def estimate(self, key: Hashable, units: float) -> float:
+        with self._lock:
+            per_unit = self._per_key.get(key, self._global)
+        if per_unit is None:
+            return self.default_s
+        return per_unit * units
 
 
 class Telemetry:
@@ -57,9 +112,13 @@ class Telemetry:
         self.padded_lanes = 0
         self.deadline_flushes = 0
         self.size_flushes = 0
+        self.service = ServiceModel()
 
     def _tenant(self, client_id: str) -> TenantStats:
         return self.tenants.setdefault(client_id, TenantStats())
+
+    def set_slo(self, client_id: str, slo_s: float | None) -> None:
+        self._tenant(client_id).slo_s = slo_s
 
     # ------------------------------------------------------------- events
     def on_submit(self, client_id: str, now: float) -> None:
@@ -91,7 +150,10 @@ class Telemetry:
         s = self._tenant(client_id)
         s.completed += 1
         s.last_complete = max(s.last_complete, now)
-        s.latencies.append(now - submit_time)
+        latency = now - submit_time
+        s.latencies.append(latency)
+        if s.slo_s is not None and latency > s.slo_s + 1e-12:
+            s.slo_misses += 1
 
     # ------------------------------------------------------------ summary
     @property
@@ -104,7 +166,7 @@ class Telemetry:
 
     def tenant_summary(self, client_id: str) -> dict:
         s = self._tenant(client_id)
-        return {
+        out = {
             "client": client_id,
             "submitted": s.submitted,
             "completed": s.completed,
@@ -113,6 +175,11 @@ class Telemetry:
             "p99_latency_s": round(s.latency_percentile(99), 4),
             "circuits_per_second": round(s.circuits_per_second, 2),
         }
+        if s.slo_s is not None:
+            out["slo_s"] = s.slo_s
+            out["slo_misses"] = s.slo_misses
+            out["slo_attainment"] = round(s.slo_attainment, 4)
+        return out
 
     def summary(self) -> dict:
         done = sum(s.completed for s in self.tenants.values())
@@ -120,7 +187,10 @@ class Telemetry:
                  default=0.0)
         t1 = max((s.last_complete for s in self.tenants.values()),
                  default=0.0)
-        return {
+        slo_done = sum(s.completed for s in self.tenants.values()
+                       if s.slo_s is not None)
+        slo_misses = sum(s.slo_misses for s in self.tenants.values())
+        out = {
             "tenants": [self.tenant_summary(c) for c in sorted(self.tenants)],
             "total_completed": done,
             "circuits_per_second": round(done / max(t1 - t0, 1e-9), 2),
@@ -130,3 +200,7 @@ class Telemetry:
             "size_flushes": self.size_flushes,
             "deadline_flushes": self.deadline_flushes,
         }
+        if slo_done:
+            out["slo_misses"] = slo_misses
+            out["slo_attainment"] = round(1.0 - slo_misses / slo_done, 4)
+        return out
