@@ -182,6 +182,59 @@ def worker_pool_executor(spec: CircuitSpec, assignment: Sequence[int],
     return run
 
 
+def worker_multibank_executor(spec: CircuitSpec, assignment: Sequence[int],
+                              n_workers: int):
+    """Multi-bank scheduling: the schedulable unit is the (bank, group)
+    subtask of a same-spec BANK SET.
+
+    ``assignment[i]`` is the worker for flat subtask i, where subtasks
+    enumerate every bank's groups in bank-major order (bank 0 groups
+    0..G-1, bank 1 groups 0..G-1, ...).  Each worker executes ALL its
+    subtasks — possibly spanning several banks — as ONE fused multi-bank
+    prefix-reuse launch, so K co-scheduled tenant banks cost per-worker
+    launches instead of K x per-worker launches.  Returns per-bank flat
+    fidelity vectors in bank order (``run(banks) -> [f_0, f_1, ...]``) —
+    ``shift_rule.assemble_gradient`` consumes each unchanged.
+    """
+    import numpy as np
+    assignment = np.asarray(assignment)
+
+    def run(banks: Sequence[shift_rule.ShiftBank]) -> list:
+        if len({b.four_term for b in banks}) > 1:
+            raise ValueError("banks in one fused set must share four_term")
+        flat = [(bi, g) for bi, b in enumerate(banks)
+                for g in range(b.n_groups)]
+        if len(assignment) != len(flat):
+            raise ValueError(
+                f"assignment must cover the bank set's {len(flat)} "
+                f"(bank, group) subtasks, got {len(assignment)} entries")
+        grids = [[None] * b.n_groups for b in banks]
+        for w in range(n_workers):
+            subtasks = [flat[i] for i in np.flatnonzero(assignment == w)]
+            if not subtasks:
+                continue
+            w_banks, group_sets, slots = [], [], []
+            index: dict[int, int] = {}
+            for bi, g in subtasks:
+                k = index.get(bi)
+                if k is None:
+                    k = index[bi] = len(w_banks)
+                    w_banks.append(bi)
+                    group_sets.append([])
+                slots.append((k, len(group_sets[k])))
+                group_sets[k].append(g)
+            outs = kops.vqc_fidelity_shiftgroups_multibank(
+                spec, tuple(banks[bi].theta for bi in w_banks),
+                tuple(banks[bi].data for bi in w_banks),
+                banks[0].four_term, tuple(tuple(gs) for gs in group_sets))
+            for (bi, g), (k, i) in zip(subtasks, slots):
+                grids[bi][g] = outs[k][i]
+        return [jnp.stack(rows, 0).reshape(-1) for rows in grids]
+
+    run.accepts_bankset = True
+    return run
+
+
 def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
     """Whole-bank shard_map executor over one mesh axis.
 
@@ -223,6 +276,22 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
             )
         return shift_fns[four_term]
 
+    group_fns: dict[tuple, Callable] = {}
+
+    def _group_fn(four_term: bool, groups: tuple):
+        key = (four_term, groups)
+        if key not in group_fns:
+            def _local_groups(theta, data):
+                return kops.vqc_fidelity_shiftgroups(spec, theta, data,
+                                                     four_term, groups)
+            group_fns[key] = _shard_map(
+                _local_groups, mesh=mesh,
+                in_specs=(P(axis, None), P(axis, None)),
+                out_specs=P(None, axis),
+                **_SM_SKIP_CHECKS,
+            )
+        return group_fns[key]
+
     def run(theta_bank, data_bank=None) -> jnp.ndarray:
         if isinstance(theta_bank, shift_rule.ShiftBank):
             bank = theta_bank
@@ -238,8 +307,66 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
         d = jnp.pad(data_bank, ((0, pad), (0, 0)))
         return shard_fn(t, d)[:c]
 
+    def run_banks(thetas, datas, four_term: bool, group_sets: tuple):
+        """Fused multi-bank launch SHARDED over the mesh: per-bank
+        LANES-padded lane segments concatenate, the union group set runs on
+        every device's lane shard, and per-bank blocks slice back out —
+        the contract of ``kops.vqc_fidelity_shiftgroups_multibank`` with
+        the device mesh as the executor (the dispatcher's mega-batch spill
+        path)."""
+        union = tuple(sorted({g for gs in group_sets for g in gs}))
+        theta_cat, data_cat, segments = kops._pack_banks(thetas, datas)
+        lanes = theta_cat.shape[0]
+        pad = (-lanes) % n_shards
+        theta_cat = jnp.pad(theta_cat, ((0, pad), (0, 0)))
+        data_cat = jnp.pad(data_cat, ((0, pad), (0, 0)))
+        out = jnp.clip(_group_fn(four_term, union)(theta_cat, data_cat),
+                       0.0, 1.0)
+        row = {g: i for i, g in enumerate(union)}
+        return tuple(
+            jnp.stack([out[row[g], off:off + b] for g in gs], axis=0)
+            for (off, b), gs in zip(segments, group_sets))
+
     run.accepts_shiftbank = True
+    run.run_banks = run_banks
     return run
+
+
+class MeshSpillExecutor:
+    """Whole-mesh escape hatch for mega-batches that fit no single worker.
+
+    A coalesced batch too wide (qubit count above every worker's register
+    capacity) or too deep (statevector tile over the per-worker VMEM model)
+    is routed HERE instead of failing fast: row batches shard their lanes
+    across the mesh's ``data`` axis, shift-group bank sets run the fused
+    multi-bank kernel with lane segments sharded the same way.  Per-spec
+    sharded executors are built lazily and cached — a long-lived dispatcher
+    pays the shard_map trace once per circuit structure.
+    """
+
+    def __init__(self, mesh: Mesh | None = None, axis: str = "data"):
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        self.mesh = mesh
+        self.axis = axis
+        self._per_spec: dict[CircuitSpec, Callable] = {}
+
+    def _executor(self, spec: CircuitSpec):
+        if spec not in self._per_spec:
+            self._per_spec[spec] = sharded_executor(spec, self.mesh,
+                                                    self.axis)
+        return self._per_spec[spec]
+
+    def rows(self, spec: CircuitSpec, theta_bank, data_bank):
+        """(C, P), (C, D) -> (C,) fidelities, lanes sharded over the mesh."""
+        return self._executor(spec)(theta_bank, data_bank)
+
+    def banks(self, spec: CircuitSpec, thetas, datas, four_term: bool,
+              group_sets: tuple):
+        """Fused multi-bank bank-set execution sharded over the mesh."""
+        return self._executor(spec).run_banks(thetas, datas, four_term,
+                                              group_sets)
 
 
 def bank_shardings(mesh: Mesh, axis: str = "data"):

@@ -189,6 +189,34 @@ def build_shift_bank(theta: jnp.ndarray, data: jnp.ndarray,
                      four_term=four_term)
 
 
+def group_bank_sets(items):
+    """Group (spec, ShiftBank) pairs into FUSABLE bank-sets.
+
+    Banks can share one multi-bank kernel launch exactly when they agree on
+    circuit structure and shift rule: same ``CircuitSpec`` (hash ==
+    structural identity) and same ``four_term``.  Base angles and sample
+    counts may differ — they become per-lane data of the fused launch.
+    Returns ``{(spec, four_term): [bank, ...]}`` preserving submission
+    order within each set (the serving coalescer keys batches the same
+    way via ``ShiftGroupKey``)."""
+    sets: dict = {}
+    for spec, bank in items:
+        sets.setdefault((spec, bank.four_term), []).append(bank)
+    return sets
+
+
+def run_bank_set(executor, banks) -> list:
+    """Execute several same-spec implicit banks through ``executor``.
+
+    Executors that fuse whole bank-sets advertise ``accepts_bankset`` and
+    receive the list itself (one multi-bank launch); everything else falls
+    back to per-bank ``run_bank`` calls — same results, K launches."""
+    banks = list(banks)
+    if getattr(executor, "accepts_bankset", False):
+        return list(executor(banks))
+    return [run_bank(executor, bank) for bank in banks]
+
+
 def default_executor(spec: CircuitSpec) -> Executor:
     return jax.jit(lambda t, d: fid.fidelity_batch(spec, t, d))
 

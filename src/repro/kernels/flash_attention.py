@@ -28,9 +28,21 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  block_q: int, block_k: int, causal: bool, window: int,
-                  n_kv_blocks: int):
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    window: int,
+    n_kv_blocks: int,
+):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -45,13 +57,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     v = v_ref[0].astype(jnp.float32)                     # (Kb, hd)
 
     scores = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)              # (Qb, Kb)
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Qb, Kb)
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                    (block_q, block_k), 0)
-    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
-                                                    (block_q, block_k), 1)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
     ok = jnp.ones((block_q, block_k), jnp.bool_)
     if causal:
         ok = ok & (k_pos <= q_pos)
@@ -65,8 +79,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
     acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
     m_ref[...] = m_new
 
     @pl.when(kj == n_kv_blocks - 1)
@@ -75,11 +89,21 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 512, block_k: int = 512,
-                    interpret: bool | None = None):
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+):
     """q, k, v: (BH, S, hd) — batch*heads flattened, scale pre-applied.
     Returns (BH, S, hd).  GQA callers expand K/V across groups (or flatten
     (kv_head, group) into BH with repeated K/V refs)."""
@@ -93,8 +117,13 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         interpret = jax.default_backend() == "cpu"
 
     kernel = functools.partial(
-        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
-        window=window, n_kv_blocks=n_k)
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        window=window,
+        n_kv_blocks=n_k,
+    )
 
     return pl.pallas_call(
         kernel,
@@ -136,20 +165,23 @@ def gqa_flash_attention(params, x, cfg, *, positions=None):
     k = apply_rope(k, positions, cfg.rope_theta)
 
     # flatten (b, kv, g) -> BH; K/V repeat over groups
-    qf = (q.reshape(b, s, kv, g, hd) * hd ** -0.5).transpose(0, 2, 3, 1, 4)
+    qf = (q.reshape(b, s, kv, g, hd) * hd**-0.5).transpose(0, 2, 3, 1, 4)
     qf = qf.reshape(b * kv * g, s, hd)
     kf = jnp.repeat(k.transpose(0, 2, 1, 3)[:, :, None], g, 2).reshape(
-        b * kv * g, s, hd)
+        b * kv * g, s, hd
+    )
     vf = jnp.repeat(v.transpose(0, 2, 1, 3)[:, :, None], g, 2).reshape(
-        b * kv * g, s, hd)
+        b * kv * g, s, hd
+    )
 
     o = flash_attention(qf, kf, vf, causal=True, window=cfg.sliding_window)
     o = o.reshape(b, kv, g, s, hd).transpose(0, 3, 1, 2, 4).reshape(b, s, h * hd)
     return o @ params["wo"]
 
 
-def flash_hbm_bytes(b, s, h, kv, hd, dtype_bytes: int = 2,
-                    block_q: int = 512) -> int:
+def flash_hbm_bytes(
+    b, s, h, kv, hd, dtype_bytes: int = 2, block_q: int = 512
+) -> int:
     """Analytic per-layer HBM traffic of the kernel: Q read once, K/V read
     once per q-block pass (grid revisits them), O written once."""
     n_q = s // block_q

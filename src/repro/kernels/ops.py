@@ -16,13 +16,19 @@ from repro.kernels import vqc_statevector as K
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
-def vqc_p0(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
-           tb: int = 4 * K.LANES) -> jnp.ndarray:
+def vqc_p0(
+    spec: CircuitSpec,
+    theta: jnp.ndarray,
+    data: jnp.ndarray,
+    tb: int = 4 * K.LANES,
+) -> jnp.ndarray:
     return K.vqc_p0(spec, theta, data, tb=tb)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def vqc_fidelity(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+def vqc_fidelity(
+    spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray
+) -> jnp.ndarray:
     """Fused SWAP-test fidelity for a circuit bank: (C,P),(C,D) -> (C,)."""
     return jnp.clip(2.0 * K.vqc_p0(spec, theta, data) - 1.0, 0.0, 1.0)
 
@@ -39,21 +45,30 @@ def kernel_executor(spec: CircuitSpec):
 
 # ------------------------------------------------- shift-structured banks
 @functools.partial(jax.jit, static_argnums=(0, 3, 4))
-def vqc_fidelity_shiftgroups(spec: CircuitSpec, theta: jnp.ndarray,
-                             data: jnp.ndarray, four_term: bool = False,
-                             groups: tuple[int, ...] | None = None) -> jnp.ndarray:
+def vqc_fidelity_shiftgroups(
+    spec: CircuitSpec,
+    theta: jnp.ndarray,
+    data: jnp.ndarray,
+    four_term: bool = False,
+    groups: tuple[int, ...] | None = None,
+) -> jnp.ndarray:
     """Shift-bank fidelities for the requested groups, (G, B).
 
     ``theta (B, P)`` / ``data (B, D)`` are the IMPLICIT bank — base angles
     only.  Uses the prefix-reuse kernel when the circuit matches the
-    SWAP-test product structure; otherwise materializes just the requested
-    groups and runs the standard fused kernel (same results, more work).
+    SWAP-test product structure (spilling prefix checkpoints to HBM in
+    depth tiles when the register is too wide for VMEM); otherwise
+    materializes just the requested groups and runs the standard fused
+    kernel (same results, more work).
     """
     from repro.core import shift_rule
+
     if K.build_shift_plan(spec) is not None:
         return jnp.clip(
-            K.vqc_shift_fidelity(spec, theta, data, four_term=four_term,
-                                 groups=groups), 0.0, 1.0)
+            K.vqc_shift_fidelity(spec, theta, data, four_term=four_term, groups=groups),
+            0.0,
+            1.0,
+        )
     descs = shift_rule.group_descriptors(theta.shape[1], four_term)
     if groups is None:
         groups = tuple(range(len(descs)))
@@ -68,10 +83,98 @@ def vqc_fidelity_shiftgroups(spec: CircuitSpec, theta: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
-def vqc_fidelity_shiftbank(spec: CircuitSpec, theta: jnp.ndarray,
-                           data: jnp.ndarray, four_term: bool = False) -> jnp.ndarray:
+def vqc_fidelity_shiftbank(
+    spec: CircuitSpec,
+    theta: jnp.ndarray,
+    data: jnp.ndarray,
+    four_term: bool = False,
+) -> jnp.ndarray:
     """Whole implicit bank -> flat (C,) fidelities in materialized-bank order."""
     return vqc_fidelity_shiftgroups(spec, theta, data, four_term).reshape(-1)
+
+
+def _pack_banks(thetas, datas):
+    """Pad each bank's samples to a LANES multiple and concatenate along the
+    lane axis.  Returns (theta_cat, data_cat, segments) with ``segments[k] =
+    (lane_offset, n_samples_k)`` — static Python ints, so downstream slicing
+    stays trace-free."""
+    t_parts, d_parts, segments = [], [], []
+    off = 0
+    for t, d in zip(thetas, datas):
+        b = t.shape[0]
+        pad = (-b) % K.LANES
+        t_parts.append(jnp.pad(t.astype(jnp.float32), ((0, pad), (0, 0))))
+        d_parts.append(jnp.pad(d.astype(jnp.float32), ((0, pad), (0, 0))))
+        segments.append((off, b))
+        off += b + pad
+    return (
+        jnp.concatenate(t_parts, 0),
+        jnp.concatenate(d_parts, 0),
+        tuple(segments),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def vqc_fidelity_shiftgroups_multibank(
+    spec: CircuitSpec, thetas, datas, four_term: bool, group_sets: tuple
+) -> tuple:
+    """FUSED multi-bank shift execution: K same-spec implicit banks in ONE
+    prefix-reuse kernel launch.
+
+    ``thetas`` / ``datas``: tuples of K per-bank base-angle arrays
+    ((B_k, P), (B_k, D)); ``group_sets[k]``: the (param, shift) groups
+    requested for bank k.  Each bank occupies its own LANES-padded lane
+    segment of the launch; base angles are per-lane, so different banks
+    (different thetas, even different sample counts) share the one
+    data-register pass, checkpointed forward pass, and reversed-suffix
+    backward pass — K x (1+2P) per-bank launches collapse to the union
+    group set in ONE launch.  Returns a tuple of (len(group_sets[k]), B_k)
+    fidelity blocks, each bit-identical per lane to the per-bank path.
+
+    Circuits without the verified product structure fall back to per-bank
+    materialized execution (correct, not fused).
+    """
+    union = tuple(sorted({g for gs in group_sets for g in gs}))
+    if K.build_shift_plan(spec) is None:
+        return tuple(
+            vqc_fidelity_shiftgroups(spec, t, d, four_term, gs)
+            for t, d, gs in zip(thetas, datas, group_sets)
+        )
+    theta_cat, data_cat, segments = _pack_banks(thetas, datas)
+    out = jnp.clip(
+        K.vqc_shift_fidelity(
+            spec, theta_cat, data_cat, four_term=four_term, groups=union
+        ),
+        0.0,
+        1.0,
+    )
+    row = {g: i for i, g in enumerate(union)}
+    return tuple(
+        jnp.stack([out[row[g], off : off + b] for g in gs], axis=0)
+        for (off, b), gs in zip(segments, group_sets)
+    )
+
+
+def multibank_executor(spec: CircuitSpec):
+    """A bank-set executor (``accepts_bankset``): runs a sequence of
+    same-spec ``ShiftBank``s as one fused multi-bank launch and returns the
+    per-bank flat fidelity vectors in bank order."""
+
+    def run(banks):
+        four = {b.four_term for b in banks}
+        if len(four) > 1:
+            raise ValueError("banks in one fused set must share four_term")
+        outs = vqc_fidelity_shiftgroups_multibank(
+            spec,
+            tuple(b.theta for b in banks),
+            tuple(b.data for b in banks),
+            four.pop(),
+            tuple(tuple(range(b.n_groups)) for b in banks),
+        )
+        return [o.reshape(-1) for o in outs]
+
+    run.accepts_bankset = True
+    return run
 
 
 def shiftbank_executor(spec: CircuitSpec):
@@ -80,10 +183,11 @@ def shiftbank_executor(spec: CircuitSpec):
     accepts plain ``(theta_bank, data_bank)`` calls — materialized banks run
     through the standard fused kernel, so the executor composes with every
     bank mode."""
+
     def run(bank, data_bank=None):
         if data_bank is not None:
             return vqc_fidelity(spec, bank, data_bank)
-        return vqc_fidelity_shiftbank(spec, bank.theta, bank.data,
-                                      bank.four_term)
+        return vqc_fidelity_shiftbank(spec, bank.theta, bank.data, bank.four_term)
+
     run.accepts_shiftbank = True
     return run

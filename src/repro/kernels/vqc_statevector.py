@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,21 +38,31 @@ from repro.core.sim import CircuitSpec
 LANES = 128  # TPU lane width; batch tiles are multiples of this.
 
 
+def kernel_tb(n_lanes: int, tb: int = 4 * LANES) -> int:
+    """Lane-tile width a kernel launch picks for an ``n_lanes`` batch: the
+    requested ``tb`` shrunk to the batch's power-of-two envelope, never
+    below one LANES tile.  The dispatcher's VMEM model MUST use this same
+    policy (a divergent copy would silently mis-predict the real kernel
+    footprint)."""
+    return min(tb, max(LANES, 1 << (max(n_lanes, 1) - 1).bit_length()))
+
+
 # ----------------------------------------------------------- gate micro-ops
 # Each helper operates on (re, im) arrays of shape (2**n, TB) and per-lane
 # angle vectors of shape (TB,).  Qubit q is the q-th MOST significant bit of
 # the basis (row) index, matching repro.core.sim.
 
+
 def _split1(x: jnp.ndarray, q: int, n: int):
     """-> (x0, x1) halves along qubit q's bit; each (2**q, 2**(n-q-1), TB)."""
     tb = x.shape[-1]
-    t = x.reshape(2 ** q, 2, 2 ** (n - q - 1), tb)
+    t = x.reshape(2**q, 2, 2 ** (n - q - 1), tb)
     return t[:, 0], t[:, 1]
 
 
 def _merge1(x0, x1, q: int, n: int, tb: int):
     t = jnp.stack([x0, x1], axis=1)
-    return t.reshape(2 ** n, tb)
+    return t.reshape(2**n, tb)
 
 
 def _rot1(re, im, q, n, c, s, kind):
@@ -61,13 +70,13 @@ def _rot1(re, im, q, n, c, s, kind):
     tb = re.shape[-1]
     r0, r1 = _split1(re, q, n)
     i0, i1 = _split1(im, q, n)
-    if kind == "ry":                      # [[c,-s],[s,c]] real
+    if kind == "ry":  # [[c,-s],[s,c]] real
         nr0, ni0 = c * r0 - s * r1, c * i0 - s * i1
         nr1, ni1 = s * r0 + c * r1, s * i0 + c * i1
-    elif kind == "rx":                    # [[c,-is],[-is,c]]
+    elif kind == "rx":  # [[c,-is],[-is,c]]
         nr0, ni0 = c * r0 + s * i1, c * i0 - s * r1
         nr1, ni1 = c * r1 + s * i0, c * i1 - s * r0
-    elif kind == "rz":                    # diag(e^{-it/2}, e^{it/2})
+    elif kind == "rz":  # diag(e^{-it/2}, e^{it/2})
         nr0, ni0 = c * r0 + s * i0, c * i0 - s * r0
         nr1, ni1 = c * r1 - s * i1, c * i1 + s * r1
     else:
@@ -79,24 +88,29 @@ def _split2(x, qa, qb, n):
     """-> 2x2 blocks b[ba][bb] over qubits qa < qb; each block
     (2**qa, 2**(qb-qa-1), 2**(n-qb-1), TB)."""
     tb = x.shape[-1]
-    t = x.reshape(2 ** qa, 2, 2 ** (qb - qa - 1), 2, 2 ** (n - qb - 1), tb)
+    t = x.reshape(2**qa, 2, 2 ** (qb - qa - 1), 2, 2 ** (n - qb - 1), tb)
     return ((t[:, 0, :, 0], t[:, 0, :, 1]), (t[:, 1, :, 0], t[:, 1, :, 1]))
 
 
 def _merge2(b, qa, qb, n, tb):
-    t = jnp.stack([jnp.stack([b[0][0], b[0][1]], axis=2),
-                   jnp.stack([b[1][0], b[1][1]], axis=2)], axis=1)
-    return t.reshape(2 ** n, tb)
+    t = jnp.stack(
+        [
+            jnp.stack([b[0][0], b[0][1]], axis=2),
+            jnp.stack([b[1][0], b[1][1]], axis=2),
+        ],
+        axis=1,
+    )
+    return t.reshape(2**n, tb)
 
 
 def _rot2(re, im, qa, qb, n, c, s, kind):
     """RYY / RZZ / CRY / CRZ with per-lane (c, s); qa < qb required."""
     tb = re.shape[-1]
     R = _split2(re, qa, qb, n)
-    I = _split2(im, qa, qb, n)
+    I = _split2(im, qa, qb, n)  # noqa: E741
     r00, r01, r10, r11 = R[0][0], R[0][1], R[1][0], R[1][1]
     i00, i01, i10, i11 = I[0][0], I[0][1], I[1][0], I[1][1]
-    if kind == "rzz":    # diag phases: e^{-it/2} on |00>,|11>; e^{+it/2} on |01>,|10>
+    if kind == "rzz":  # diag phases: e^{-it/2} on |00>,|11>; e^{+it/2} on |01>,|10>
         nr00, ni00 = c * r00 + s * i00, c * i00 - s * r00
         nr11, ni11 = c * r11 + s * i11, c * i11 - s * r11
         nr01, ni01 = c * r01 - s * i01, c * i01 + s * r01
@@ -116,8 +130,10 @@ def _rot2(re, im, qa, qb, n, c, s, kind):
         nr11, ni11 = c * r11 - s * i11, c * i11 + s * r11
     else:
         raise ValueError(kind)
-    return (_merge2(((nr00, nr01), (nr10, nr11)), qa, qb, n, tb),
-            _merge2(((ni00, ni01), (ni10, ni11)), qa, qb, n, tb))
+    return (
+        _merge2(((nr00, nr01), (nr10, nr11)), qa, qb, n, tb),
+        _merge2(((ni00, ni01), (ni10, ni11)), qa, qb, n, tb),
+    )
 
 
 def _h(re, im, q, n):
@@ -125,14 +141,17 @@ def _h(re, im, q, n):
     inv = 0.7071067811865476
     r0, r1 = _split1(re, q, n)
     i0, i1 = _split1(im, q, n)
-    return (_merge1((r0 + r1) * inv, (r0 - r1) * inv, q, n, tb),
-            _merge1((i0 + i1) * inv, (i0 - i1) * inv, q, n, tb))
+    return (
+        _merge1((r0 + r1) * inv, (r0 - r1) * inv, q, n, tb),
+        _merge1((i0 + i1) * inv, (i0 - i1) * inv, q, n, tb),
+    )
 
 
 def _split3(x, qa, qb, qc_, n):
     tb = x.shape[-1]
-    t = x.reshape(2 ** qa, 2, 2 ** (qb - qa - 1), 2, 2 ** (qc_ - qb - 1), 2,
-                  2 ** (n - qc_ - 1), tb)
+    t = x.reshape(
+        2**qa, 2, 2 ** (qb - qa - 1), 2, 2 ** (qc_ - qb - 1), 2, 2 ** (n - qc_ - 1), tb
+    )
     return t
 
 
@@ -146,7 +165,7 @@ def _cswap(re, im, qa, qb, qc_, n):
         a01 = t[:, 1, :, 0, :, 1]
         a10 = t[:, 1, :, 1, :, 0]
         t = t.at[:, 1, :, 0, :, 1].set(a10).at[:, 1, :, 1, :, 0].set(a01)
-        outs.append(t.reshape(2 ** n, tb))
+        outs.append(t.reshape(2**n, tb))
     return outs[0], outs[1]
 
 
@@ -164,16 +183,17 @@ def _op_angle(op, theta_blk, data_blk, delta: float = 0.0):
     return ang + delta if delta else ang
 
 
-def _apply_one(op, re, im, n, theta_blk, data_blk, delta: float = 0.0,
-               invert: bool = False):
+def _apply_one(
+    op, re, im, n, theta_blk, data_blk, delta: float = 0.0, invert: bool = False
+):
     """Apply one gate (optionally angle-shifted by ``delta`` or inverted)."""
     if op.gate == "h":
-        return _h(re, im, op.qubits[0], n)       # self-inverse
+        return _h(re, im, op.qubits[0], n)  # self-inverse
     if op.gate == "cswap":
         qa, qb, qc_ = op.qubits
-        return _cswap(re, im, qa, qb, qc_, n)    # self-inverse
+        return _cswap(re, im, qa, qb, qc_, n)  # self-inverse
     ang = _op_angle(op, theta_blk, data_blk, delta)
-    if invert:                                   # rotation: g(t)^dagger = g(-t)
+    if invert:  # rotation: g(t)^dagger = g(-t)
         ang = -ang
     c, s = jnp.cos(ang / 2), jnp.sin(ang / 2)
     if op.gate in ("rx", "ry", "rz"):
@@ -181,11 +201,12 @@ def _apply_one(op, re, im, n, theta_blk, data_blk, delta: float = 0.0,
     if op.gate in ("ryy", "rzz", "cry", "crz"):
         qa, qb = op.qubits
         if qa > qb:
-            if op.gate in ("ryy", "rzz"):        # symmetric under qubit swap
+            if op.gate in ("ryy", "rzz"):  # symmetric under qubit swap
                 qa, qb = qb, qa
             else:
                 raise NotImplementedError(
-                    f"{op.gate} requires ascending (control, target) qubits")
+                    f"{op.gate} requires ascending (control, target) qubits"
+                )
         return _rot2(re, im, qa, qb, n, c, s, op.gate)
     raise NotImplementedError(op.gate)
 
@@ -201,7 +222,7 @@ def _apply_ops(spec: CircuitSpec, re, im, theta_blk, data_blk):
 # ------------------------------------------------------------------ kernels
 def _fidelity_kernel(spec: CircuitSpec, theta_ref, data_ref, p0_ref):
     tb = theta_ref.shape[-1]
-    dim = 2 ** spec.n_qubits
+    dim = 2**spec.n_qubits
     # |0...0> batch, built in VREGs — never read from HBM.
     row = jax.lax.broadcasted_iota(jnp.int32, (dim, tb), 0)
     re = jnp.where(row == 0, 1.0, 0.0).astype(jnp.float32)
@@ -215,7 +236,7 @@ def _fidelity_kernel(spec: CircuitSpec, theta_ref, data_ref, p0_ref):
 
 def _state_kernel(spec: CircuitSpec, theta_ref, data_ref, re_ref, im_ref):
     tb = theta_ref.shape[-1]
-    dim = 2 ** spec.n_qubits
+    dim = 2**spec.n_qubits
     row = jax.lax.broadcasted_iota(jnp.int32, (dim, tb), 0)
     re = jnp.where(row == 0, 1.0, 0.0).astype(jnp.float32)
     im = jnp.zeros((dim, tb), jnp.float32)
@@ -224,12 +245,13 @@ def _state_kernel(spec: CircuitSpec, theta_ref, data_ref, re_ref, im_ref):
     im_ref[...] = im
 
 
-def _grid_call(spec: CircuitSpec, theta_t, data_t, tb: int, interpret: bool,
-               want_state: bool):
+def _grid_call(
+    spec: CircuitSpec, theta_t, data_t, tb: int, interpret: bool, want_state: bool
+):
     """theta_t: (P, C), data_t: (D, C) with C % tb == 0."""
     p, c = theta_t.shape
     d = data_t.shape[0]
-    dim = 2 ** spec.n_qubits
+    dim = 2**spec.n_qubits
     grid = (c // tb,)
     in_specs = [
         pl.BlockSpec((p, tb), lambda i: (0, i)),
@@ -244,18 +266,27 @@ def _grid_call(spec: CircuitSpec, theta_t, data_t, tb: int, interpret: bool,
         out_specs = pl.BlockSpec((1, tb), lambda i: (0, i))
         kern = functools.partial(_fidelity_kernel, spec)
     return pl.pallas_call(
-        kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
-        out_shape=out_shape, interpret=interpret,
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
     )(theta_t, data_t)
 
 
-def vqc_p0(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
-           tb: int = 4 * LANES, interpret: bool | None = None) -> jnp.ndarray:
+def vqc_p0(
+    spec: CircuitSpec,
+    theta: jnp.ndarray,
+    data: jnp.ndarray,
+    tb: int = 4 * LANES,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
     """Batched ancilla-P0 for a circuit bank. theta: (C,P), data: (C,D) -> (C,)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     c = theta.shape[0]
-    tb = min(tb, max(LANES, 1 << (c - 1).bit_length()))
+    tb = kernel_tb(c, tb)
     pad = (-c) % tb
     theta_t = jnp.pad(theta, ((0, pad), (0, 0))).T
     data_t = jnp.pad(data, ((0, pad), (0, 0))).T
@@ -263,13 +294,18 @@ def vqc_p0(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
     return p0[0, :c]
 
 
-def vqc_state(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
-              tb: int = LANES, interpret: bool | None = None):
+def vqc_state(
+    spec: CircuitSpec,
+    theta: jnp.ndarray,
+    data: jnp.ndarray,
+    tb: int = LANES,
+    interpret: bool | None = None,
+):
     """Batched final statevector (re, im), each (C, 2**n) — for kernel tests."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     c = theta.shape[0]
-    tb = min(tb, max(LANES, 1 << (c - 1).bit_length()))
+    tb = kernel_tb(c, tb)
     pad = (-c) % tb
     theta_t = jnp.pad(theta, ((0, pad), (0, 0))).T
     data_t = jnp.pad(data, ((0, pad), (0, 0))).T
@@ -331,6 +367,7 @@ class ShiftPlan:
     ``train_ops`` of parameter j's unique dependent gate, or -1 when the
     parameter drives no gate (its shifted fidelity is the base fidelity).
     """
+
     m: int
     data_ops: tuple
     train_ops: tuple
@@ -385,18 +422,19 @@ def build_shift_plan(spec: CircuitSpec) -> ShiftPlan | None:
             if is_theta:
                 j = op.param[1]
                 if j in theta_pos or op.gate not in ROT_GATES:
-                    return None       # multi-use params need full suffix replay
+                    return None  # multi-use params need full suffix replay
                 theta_pos[j] = len(train_ops)
             train_ops.append(_remap_op(op, train_map))
         else:
-            return None               # op straddles registers / touches ancilla
+            return None  # op straddles registers / touches ancilla
     # descending cry/crz would raise inside the kernel; reject here instead
     for op in data_ops + train_ops:
         if op.gate in ("cry", "crz") and op.qubits[0] > op.qubits[1]:
             return None
     pos = tuple(theta_pos.get(j, -1) for j in range(spec.n_theta))
-    return ShiftPlan(m=m, data_ops=tuple(data_ops), train_ops=tuple(train_ops),
-                     theta_pos=pos)
+    return ShiftPlan(
+        m=m, data_ops=tuple(data_ops), train_ops=tuple(train_ops), theta_pos=pos
+    )
 
 
 def _zero_tile(dim: int, tb: int):
@@ -415,25 +453,13 @@ def _inner_fidelity(chi, phi):
     return ip_re * ip_re + ip_im * ip_im
 
 
-def _shiftbank_kernel(plan: ShiftPlan, shifts, groups, n_params: int,
-                      theta_ref, data_ref, out_ref):
-    """Compute the requested shift groups for one sample tile.
+def _collect_variants(plan: ShiftPlan, shifts, groups, n_params: int):
+    """Static (trace-time) map: train-op position -> [(group, param, shift)].
 
-    Output rows follow ``groups``: group 0 is the base fidelity, group
-    1 + s*P + j is shift s of param j (bank order).
-    """
-    tb = theta_ref.shape[-1]
-    dim = 2 ** plan.m
-    theta_blk = theta_ref[...]
-    data_blk = data_ref[...]
-
-    # 1. data register: one theta-independent pass, shared by every variant.
-    d_re, d_im = _zero_tile(dim, tb)
-    for op in plan.data_ops:
-        d_re, d_im = _apply_one(op, d_re, d_im, plan.m, theta_blk, data_blk)
-
+    Position -1 collects groups whose parameter drives no gate (their
+    shifted fidelity is the base fidelity)."""
     wanted = set(groups)
-    variants = {}                       # op position -> [(group, param, shift)]
+    variants = {}
     for s_idx, s in enumerate(shifts):
         for j in range(n_params):
             g = 1 + s_idx * n_params + j
@@ -443,6 +469,29 @@ def _shiftbank_kernel(plan: ShiftPlan, shifts, groups, n_params: int,
                 variants.setdefault(-1, []).append((g, j, s))  # unused param
             else:
                 variants.setdefault(plan.theta_pos[j], []).append((g, j, s))
+    return variants
+
+
+def _shiftbank_kernel(
+    plan: ShiftPlan, shifts, groups, n_params: int, theta_ref, data_ref, out_ref
+):
+    """Compute the requested shift groups for one sample tile.
+
+    Output rows follow ``groups``: group 0 is the base fidelity, group
+    1 + s*P + j is shift s of param j (bank order).
+    """
+    tb = theta_ref.shape[-1]
+    dim = 2**plan.m
+    theta_blk = theta_ref[...]
+    data_blk = data_ref[...]
+
+    # 1. data register: one theta-independent pass, shared by every variant.
+    d_re, d_im = _zero_tile(dim, tb)
+    for op in plan.data_ops:
+        d_re, d_im = _apply_one(op, d_re, d_im, plan.m, theta_blk, data_blk)
+
+    wanted = set(groups)
+    variants = _collect_variants(plan, shifts, groups, n_params)
 
     # 2. forward pass with base angles, checkpointing each needed prefix.
     checkpoints = {}
@@ -456,7 +505,7 @@ def _shiftbank_kernel(plan: ShiftPlan, shifts, groups, n_params: int,
     f0 = _inner_fidelity((d_re, d_im), (t_re, t_im))
     if 0 in wanted:
         rows[0] = f0
-    for g, _, _ in variants.get(-1, ()):   # shifting an unused param is a no-op
+    for g, _, _ in variants.get(-1, ()):  # shifting an unused param is a no-op
         rows[g] = f0
 
     # 3. backward pass: chi = (suffix)^dagger psi_d; one gate + one inner
@@ -466,20 +515,295 @@ def _shiftbank_kernel(plan: ShiftPlan, shifts, groups, n_params: int,
         op = plan.train_ops[k]
         for g, j, s in variants.get(k, ()):
             p_re, p_im = checkpoints[k]
-            v_re, v_im = _apply_one(op, p_re, p_im, plan.m, theta_blk,
-                                    data_blk, delta=s)
+            v_re, v_im = _apply_one(
+                op, p_re, p_im, plan.m, theta_blk, data_blk, delta=s
+            )
             rows[g] = _inner_fidelity((c_re, c_im), (v_re, v_im))
-        if k > 0:                      # nothing consumes chi before op 0
-            c_re, c_im = _apply_one(op, c_re, c_im, plan.m, theta_blk,
-                                    data_blk, invert=True)
+        if k > 0:  # nothing consumes chi before op 0
+            c_re, c_im = _apply_one(
+                op, c_re, c_im, plan.m, theta_blk, data_blk, invert=True
+            )
     out_ref[...] = jnp.stack([rows[g] for g in groups], axis=0)
 
 
-def vqc_shift_fidelity(spec: CircuitSpec, theta: jnp.ndarray,
-                       data: jnp.ndarray, *, four_term: bool = False,
-                       groups: tuple[int, ...] | None = None,
-                       tb: int = 4 * LANES,
-                       interpret: bool | None = None) -> jnp.ndarray:
+# --------------------------------------- VMEM-aware checkpoint spilling
+#
+# The single-sweep kernel above holds EVERY needed prefix checkpoint live in
+# VMEM between the forward and backward passes: P states of 2*4*2**m*TB
+# bytes each.  For the paper's registers (m <= 3) that is kilobytes; for
+# wide registers (m > 6 at the production TB = 512) the checkpoint set
+# alone exceeds a TPU core's ~16 MB VMEM and the launch cannot lower.
+# Rather than ejecting those circuits to the (1+2P)x-slower materialized
+# path, the shift executor SPILLS: the train-op sequence is cut into depth
+# tiles of at most ``cap`` checkpointed positions, the forward launch
+# writes each tile's boundary prefix state to HBM (a pallas output), and
+# one backward launch per tile re-derives its <= cap checkpoints from the
+# spilled boundary in VMEM, consumes the reversed-suffix state chi handed
+# over from the previous tile, and emits its variants' fidelity rows.
+# Same op-application order per lane as the single sweep -> identical
+# results; cost is one extra in-register forward pass (the recompute) plus
+# 2 * (n_tiles + 1) register states of HBM spill traffic.
+
+#: default per-launch checkpoint VMEM budget: ~16 MB/core minus headroom
+#: for the angle blocks, the running states, and double buffering.
+VMEM_BUDGET_BYTES = 14 * 1024 * 1024
+
+#: live non-checkpoint states a tile launch holds (running state, chi,
+#: boundary, one shifted variant) — reserved out of the budget.
+_RESERVED_STATES = 4
+
+
+def _state_bytes(m: int, tb: int) -> int:
+    """Bytes of one (re, im) register state tile."""
+    return 2 * 4 * (2**m) * tb
+
+
+def checkpoint_vmem_bytes(plan: ShiftPlan, n_positions: int, tb: int) -> int:
+    """VMEM the single-sweep kernel needs for its live checkpoint set."""
+    return (n_positions + _RESERVED_STATES) * _state_bytes(plan.m, tb)
+
+
+def plan_depth_tiles(
+    plan: ShiftPlan, positions, tb: int, vmem_budget: int = VMEM_BUDGET_BYTES
+):
+    """Cut checkpointed positions into depth tiles that fit the budget.
+
+    ``positions``: ascending train-op indices needing a prefix checkpoint.
+    Returns None when every checkpoint fits in one sweep (no spilling),
+    else a tuple of (lo, hi) train-op ranges — tile t re-derives its
+    checkpoints from the spilled boundary state at op ``lo`` and walks chi
+    from op ``hi`` down to ``lo``.
+    """
+    positions = sorted(positions)
+    if not positions:
+        return None
+    cap = max(1, vmem_budget // _state_bytes(plan.m, tb) - _RESERVED_STATES)
+    if len(positions) <= cap:
+        return None
+    chunks = [positions[i : i + cap] for i in range(0, len(positions), cap)]
+    bounds = [c[0] for c in chunks] + [len(plan.train_ops)]
+    return tuple(zip(bounds[:-1], bounds[1:]))
+
+
+def shift_execution_info(
+    spec: CircuitSpec,
+    n_samples: int,
+    *,
+    four_term: bool = False,
+    groups: tuple[int, ...] | None = None,
+    tb: int = 4 * LANES,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> dict:
+    """Static execution-mode report: which path a shift bank takes and what
+    it costs.  ``mode`` is "materialize" (no product structure), "fused"
+    (single-sweep prefix-reuse launch) or "spill" (VMEM-tiled prefix reuse);
+    the dispatcher's worker-VMEM model and the benchmarks both read this."""
+    plan = build_shift_plan(spec)
+    n_shifts = 4 if four_term else 2
+    n_groups = 1 + n_shifts * spec.n_theta
+    if groups is None:
+        groups = tuple(range(n_groups))
+    tb_eff = kernel_tb(n_samples, tb)
+    if plan is None:
+        return {
+            "mode": "materialize",
+            "launches": 1,
+            "n_tiles": 0,
+            "vmem_bytes": _state_bytes(spec.n_qubits, tb_eff),
+            "vmem_budget": vmem_budget,
+        }
+    from repro.core.shift_rule import shift_values
+
+    variants = _collect_variants(plan, shift_values(four_term), groups, spec.n_theta)
+    positions = sorted(k for k in variants if k >= 0)
+    tiles = plan_depth_tiles(plan, positions, tb_eff, vmem_budget)
+    if tiles is None:
+        return {
+            "mode": "fused",
+            "launches": 1,
+            "n_tiles": 0,
+            "vmem_bytes": checkpoint_vmem_bytes(plan, len(positions), tb_eff),
+            "vmem_budget": vmem_budget,
+        }
+    cap = max(1, vmem_budget // _state_bytes(plan.m, tb_eff) - _RESERVED_STATES)
+    return {
+        "mode": "spill",
+        "launches": 1 + len(tiles),
+        "n_tiles": len(tiles),
+        "vmem_bytes": checkpoint_vmem_bytes(plan, cap, tb_eff),
+        "spilled_bytes": 2 * (len(tiles) + 1) * _state_bytes(plan.m, tb_eff),
+        "vmem_budget": vmem_budget,
+    }
+
+
+def _shift_forward_kernel(
+    plan: ShiftPlan, tile_los, theta_ref, data_ref, f0_ref, d_ref, bnd_ref
+):
+    """Spill-mode forward launch: data-register pass, base fidelity, and the
+    tile-boundary prefix states written to HBM (``bnd_ref`` rows are
+    [re; im] stacks, one 2*dim block per tile)."""
+    tb = theta_ref.shape[-1]
+    dim = 2**plan.m
+    theta_blk = theta_ref[...]
+    data_blk = data_ref[...]
+    d_re, d_im = _zero_tile(dim, tb)
+    for op in plan.data_ops:
+        d_re, d_im = _apply_one(op, d_re, d_im, plan.m, theta_blk, data_blk)
+    d_ref[...] = jnp.concatenate([d_re, d_im], axis=0)
+
+    los = {lo: t for t, lo in enumerate(tile_los)}
+    t_re, t_im = _zero_tile(dim, tb)
+    for k, op in enumerate(plan.train_ops):
+        if k in los:
+            t = los[k]
+            bnd_ref[2 * t * dim : (2 * t + 1) * dim, :] = t_re
+            bnd_ref[(2 * t + 1) * dim : (2 * t + 2) * dim, :] = t_im
+        t_re, t_im = _apply_one(op, t_re, t_im, plan.m, theta_blk, data_blk)
+    f0_ref[...] = _inner_fidelity((d_re, d_im), (t_re, t_im))[None, :]
+
+
+def _shift_tile_kernel(
+    plan: ShiftPlan,
+    lo: int,
+    hi: int,
+    tile_rows,
+    emit_chi: bool,
+    theta_ref,
+    data_ref,
+    bnd_ref,
+    chi_ref,
+    rows_ref,
+    chi_out_ref=None,
+):
+    """Spill-mode backward launch for one depth tile.
+
+    Re-derives the tile's prefix checkpoints from the spilled boundary
+    state (train-op ``lo``), walks chi down from ``hi`` applying the same
+    inverse-gate sequence as the single-sweep kernel, and emits one
+    fidelity row per ``tile_rows`` entry ((group, param, shift, pos),
+    descending pos).  ``chi_out_ref`` hands chi at ``lo`` to the next
+    (shallower) tile."""
+    tb = theta_ref.shape[-1]
+    dim = 2**plan.m
+    theta_blk = theta_ref[...]
+    data_blk = data_ref[...]
+    positions = {pos for (_, _, _, pos) in tile_rows}
+    last = max(positions)
+
+    re, im = bnd_ref[:dim, :], bnd_ref[dim:, :]
+    checkpoints = {}
+    for k in range(lo, last + 1):
+        if k in positions:
+            checkpoints[k] = (re, im)
+        if k < last:
+            re, im = _apply_one(
+                plan.train_ops[k], re, im, plan.m, theta_blk, data_blk
+            )
+
+    c_re, c_im = chi_ref[:dim, :], chi_ref[dim:, :]
+    rows = {}
+    for k in range(hi - 1, lo - 1, -1):
+        op = plan.train_ops[k]
+        for g, _, s, pos in tile_rows:
+            if pos != k:
+                continue
+            p_re, p_im = checkpoints[k]
+            v_re, v_im = _apply_one(
+                op, p_re, p_im, plan.m, theta_blk, data_blk, delta=s
+            )
+            rows[g] = _inner_fidelity((c_re, c_im), (v_re, v_im))
+        if k > lo or emit_chi:
+            c_re, c_im = _apply_one(
+                op, c_re, c_im, plan.m, theta_blk, data_blk, invert=True
+            )
+    rows_ref[...] = jnp.stack([rows[g] for g, _, _, _ in tile_rows], axis=0)
+    if emit_chi:
+        chi_out_ref[...] = jnp.concatenate([c_re, c_im], axis=0)
+
+
+def _shift_fidelity_spilled(
+    spec: CircuitSpec,
+    plan: ShiftPlan,
+    shifts,
+    groups,
+    tiles,
+    theta_t,
+    data_t,
+    tb: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """Orchestrate the spilled execution: 1 forward + ``len(tiles)``
+    backward launches; boundary/chi states round-trip HBM between them."""
+    p, lanes = theta_t.shape
+    d = data_t.shape[0]
+    dim = 2**plan.m
+    n_tiles = len(tiles)
+    grid = (lanes // tb,)
+    lane_spec = lambda rows: pl.BlockSpec((rows, tb), lambda i: (0, i))  # noqa: E731
+    in_specs = [lane_spec(p), lane_spec(d)]
+
+    variants = _collect_variants(plan, shifts, groups, spec.n_theta)
+    fwd = pl.pallas_call(
+        functools.partial(_shift_forward_kernel, plan, tuple(lo for lo, _ in tiles)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[lane_spec(1), lane_spec(2 * dim), lane_spec(2 * n_tiles * dim)],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, lanes), jnp.float32),
+            jax.ShapeDtypeStruct((2 * dim, lanes), jnp.float32),
+            jax.ShapeDtypeStruct((2 * n_tiles * dim, lanes), jnp.float32),
+        ],
+        interpret=interpret,
+    )(theta_t, data_t)
+    f0, d_state, boundaries = fwd
+
+    rows_by_group = {}
+    if 0 in groups:
+        rows_by_group[0] = f0[0]
+    for g, _, _ in variants.get(-1, ()):
+        rows_by_group[g] = f0[0]
+
+    chi = d_state
+    for t in range(n_tiles - 1, -1, -1):
+        lo, hi = tiles[t]
+        tile_rows = tuple(
+            (g, j, s, k)
+            for k in range(hi - 1, lo - 1, -1)
+            for (g, j, s) in variants.get(k, ())
+        )
+        emit_chi = t > 0
+        out_specs = [lane_spec(len(tile_rows))]
+        out_shape = [jax.ShapeDtypeStruct((len(tile_rows), lanes), jnp.float32)]
+        if emit_chi:
+            out_specs.append(lane_spec(2 * dim))
+            out_shape.append(jax.ShapeDtypeStruct((2 * dim, lanes), jnp.float32))
+        outs = pl.pallas_call(
+            functools.partial(_shift_tile_kernel, plan, lo, hi, tile_rows, emit_chi),
+            grid=grid,
+            in_specs=in_specs + [lane_spec(2 * dim), lane_spec(2 * dim)],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(theta_t, data_t, boundaries[2 * t * dim : 2 * (t + 1) * dim], chi)
+        rows_t = outs[0]
+        if emit_chi:
+            chi = outs[1]
+        for i, (g, _, _, _) in enumerate(tile_rows):
+            rows_by_group[g] = rows_t[i]
+    return jnp.stack([rows_by_group[g] for g in groups], axis=0)
+
+
+def vqc_shift_fidelity(
+    spec: CircuitSpec,
+    theta: jnp.ndarray,
+    data: jnp.ndarray,
+    *,
+    four_term: bool = False,
+    groups: tuple[int, ...] | None = None,
+    tb: int = 4 * LANES,
+    interpret: bool | None = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> jnp.ndarray:
     """Prefix-reuse shift-bank fidelities. theta: (B,P), data: (B,D).
 
     Returns (G, B) where G = len(groups) (default: every group of the bank,
@@ -487,14 +811,22 @@ def vqc_shift_fidelity(spec: CircuitSpec, theta: jnp.ndarray,
     (param, shift) applied.  Flattening in group-major order reproduces the
     materialized bank's fidelity vector exactly (same layout).
 
+    When the live checkpoint set exceeds ``vmem_budget`` (wide registers,
+    m > 6 at production tile sizes) execution is automatically split into
+    VMEM-sized depth tiles with boundary states spilled to HBM — same
+    results, 1 + n_tiles launches instead of 1 (``shift_execution_info``
+    reports the chosen mode).
+
     Raises ValueError when the spec doesn't match the SWAP-test product
     structure; call ``build_shift_plan`` first (or use ``kernels.ops``,
     which falls back to the materialized path).
     """
     plan = build_shift_plan(spec)
     if plan is None:
-        raise ValueError("circuit does not match the SWAP-test product "
-                         "structure; use the materialized-bank path")
+        raise ValueError(
+            "circuit does not match the SWAP-test product "
+            "structure; use the materialized-bank path"
+        )
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n_shifts = 4 if four_term else 2
@@ -505,22 +837,34 @@ def vqc_shift_fidelity(spec: CircuitSpec, theta: jnp.ndarray,
         raise ValueError(f"groups out of range for {n_groups}-group bank: {groups}")
 
     from repro.core.shift_rule import shift_values
+
     shifts = tuple(float(s) for s in shift_values(four_term))
 
     b = theta.shape[0]
     p, d = theta.shape[1], data.shape[1]
-    tb = min(tb, max(LANES, 1 << (b - 1).bit_length()))
+    tb = kernel_tb(b, tb)
     pad = (-b) % tb
     theta_t = jnp.pad(theta.astype(jnp.float32), ((0, pad), (0, 0))).T
     data_t = jnp.pad(data.astype(jnp.float32), ((0, pad), (0, 0))).T
+
+    variants = _collect_variants(plan, shifts, groups, spec.n_theta)
+    positions = sorted(k for k in variants if k >= 0)
+    tiles = plan_depth_tiles(plan, positions, tb, vmem_budget)
+    if tiles is not None:
+        out = _shift_fidelity_spilled(
+            spec, plan, shifts, groups, tiles, theta_t, data_t, tb, interpret
+        )
+        return out[:, :b]
+
     g = len(groups)
-    kern = functools.partial(_shiftbank_kernel, plan, shifts, groups,
-                             spec.n_theta)
+    kern = functools.partial(_shiftbank_kernel, plan, shifts, groups, spec.n_theta)
     out = pl.pallas_call(
         kern,
         grid=((b + pad) // tb,),
-        in_specs=[pl.BlockSpec((p, tb), lambda i: (0, i)),
-                  pl.BlockSpec((d, tb), lambda i: (0, i))],
+        in_specs=[
+            pl.BlockSpec((p, tb), lambda i: (0, i)),
+            pl.BlockSpec((d, tb), lambda i: (0, i)),
+        ],
         out_specs=pl.BlockSpec((g, tb), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((g, b + pad), jnp.float32),
         interpret=interpret,
@@ -529,8 +873,9 @@ def vqc_shift_fidelity(spec: CircuitSpec, theta: jnp.ndarray,
 
 
 # ------------------------------------------------------- analytic counters
-def shift_bank_stats(spec: CircuitSpec, n_samples: int,
-                     four_term: bool = False) -> dict:
+def shift_bank_stats(
+    spec: CircuitSpec, n_samples: int, four_term: bool = False
+) -> dict:
     """Analytic gate-application and angle-traffic counts, implicit vs
     materialized — the ratios the acceptance benchmark tracks."""
     p, d = spec.n_theta, spec.n_data
@@ -539,14 +884,16 @@ def shift_bank_stats(spec: CircuitSpec, n_samples: int,
     mat_gates = n_groups * g_full * n_samples
     mat_angle_floats = n_groups * n_samples * (p + d)
     plan = build_shift_plan(spec)
-    if plan is None:                        # fallback executes the same work
+    if plan is None:  # fallback executes the same work
         impl_gates = mat_gates
         impl_angle_floats = mat_angle_floats
     else:
-        n_variants = sum(1 for j in range(p) if plan.theta_pos[j] >= 0) * \
-            (4 if four_term else 2)
-        impl_gates = (len(plan.data_ops) + 2 * len(plan.train_ops)
-                      + n_variants) * n_samples
+        n_variants = sum(1 for j in range(p) if plan.theta_pos[j] >= 0) * (
+            4 if four_term else 2
+        )
+        impl_gates = (
+            len(plan.data_ops) + 2 * len(plan.train_ops) + n_variants
+        ) * n_samples
         impl_angle_floats = n_samples * (p + d)
     return {
         "n_groups": n_groups,
@@ -556,4 +903,44 @@ def shift_bank_stats(spec: CircuitSpec, n_samples: int,
         "angle_bytes_materialized": 4 * mat_angle_floats,
         "angle_bytes_implicit": 4 * impl_angle_floats,
         "angle_bytes_ratio": round(mat_angle_floats / impl_angle_floats, 1),
+    }
+
+
+def multibank_stats(
+    spec: CircuitSpec,
+    bank_sizes,
+    four_term: bool = False,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> dict:
+    """Analytic launch-count and lane accounting for a fused multi-bank
+    shift execution of K same-spec banks vs K per-bank launches.
+
+    ``bank_sizes``: per-bank sample counts B_k.  Per-bank execution costs
+    one prefix-reuse launch per bank (times any spill tiling); the fused
+    path packs every bank's LANES-padded lane segment into ONE launch and
+    computes the union of the requested groups for all lanes.  Lane fill is
+    identical by construction (per-bank segments pad independently in both
+    paths); the fused win is the launch count — the metric the regression
+    gate pins."""
+    k = len(bank_sizes)
+    occupied = sum(bank_sizes)
+    padded = sum(-(-b // LANES) * LANES for b in bank_sizes)
+    info = shift_execution_info(
+        spec, max(bank_sizes), four_term=four_term, vmem_budget=vmem_budget
+    )
+    per_bank_launches = k * info["launches"]
+    fused_info = shift_execution_info(
+        spec, padded, four_term=four_term, vmem_budget=vmem_budget
+    )
+    fused_launches = fused_info["launches"]
+    return {
+        "n_banks": k,
+        "bank_sizes": list(bank_sizes),
+        "mode": fused_info["mode"],
+        "launches_per_bank_path": per_bank_launches,
+        "launches_fused": fused_launches,
+        "launch_ratio": round(per_bank_launches / fused_launches, 2),
+        "occupied_lanes": occupied,
+        "padded_lanes": padded,
+        "lane_fill": round(occupied / padded, 4),
     }

@@ -11,15 +11,43 @@ See ``gateway`` (admission / priority tiers / SLOs / backpressure),
 """
 from repro.serve.async_dispatcher import AsyncDispatcher
 from repro.serve.coalescer import CoalescedBatch, Coalescer, PendingCircuit
-from repro.serve.dispatcher import (Dispatcher, GatewayRuntime, ShiftGroupKey,
-                                    batch_cost_units, execute_batch)
-from repro.serve.gateway import (Backpressure, CircuitFuture, Gateway,
-                                 SLO_FLUSH_FRACTION)
+from repro.serve.dispatcher import (
+    WORKER_VMEM_BYTES,
+    Dispatcher,
+    GatewayRuntime,
+    ShiftGroupKey,
+    bank_partition,
+    batch_cost_units,
+    batch_vmem_bytes,
+    execute_batch,
+)
+from repro.serve.gateway import (
+    SLO_FLUSH_FRACTION,
+    Backpressure,
+    CircuitFuture,
+    DeadlineExceeded,
+    Gateway,
+)
 from repro.serve.metrics import ServiceModel, Telemetry
 
 __all__ = [
-    "AsyncDispatcher", "Backpressure", "CircuitFuture", "CoalescedBatch",
-    "Coalescer", "Dispatcher", "Gateway", "GatewayRuntime", "PendingCircuit",
-    "ServiceModel", "ShiftGroupKey", "SLO_FLUSH_FRACTION", "Telemetry",
-    "batch_cost_units", "execute_batch",
+    "AsyncDispatcher",
+    "Backpressure",
+    "CircuitFuture",
+    "CoalescedBatch",
+    "Coalescer",
+    "DeadlineExceeded",
+    "Dispatcher",
+    "Gateway",
+    "GatewayRuntime",
+    "PendingCircuit",
+    "ServiceModel",
+    "ShiftGroupKey",
+    "SLO_FLUSH_FRACTION",
+    "Telemetry",
+    "WORKER_VMEM_BYTES",
+    "bank_partition",
+    "batch_cost_units",
+    "batch_vmem_bytes",
+    "execute_batch",
 ]

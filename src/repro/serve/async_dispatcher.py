@@ -37,9 +37,13 @@ from repro.comanager.manager import CoManager
 from repro.comanager.worker import CircuitTask, WorkerConfig
 from repro.serve.coalescer import CoalescedBatch
 from repro.serve.dispatcher import (
+    WORKER_VMEM_BYTES,
     Dispatcher,
     KernelFn,
+    MultiBankKernelFn,
     ShiftKernelFn,
+    batch_cost_units,
+    batch_family,
     execute_batch,
 )
 from repro.serve.gateway import Gateway
@@ -56,6 +60,11 @@ class AsyncDispatcher(Dispatcher):
         manager: CoManager | None = None,
         kernel: KernelFn | None = None,
         shift_kernel: ShiftKernelFn | None = None,
+        multibank_kernel: MultiBankKernelFn | None = None,
+        mesh_spill: bool = True,
+        spill_executor=None,
+        worker_vmem_bytes: int = WORKER_VMEM_BYTES,
+        evict_over_slo: bool = False,
         clock=time.perf_counter,
         slots_per_worker: int = 1,
     ):
@@ -65,14 +74,24 @@ class AsyncDispatcher(Dispatcher):
             manager=manager,
             kernel=kernel,
             shift_kernel=shift_kernel,
+            multibank_kernel=multibank_kernel,
+            mesh_spill=mesh_spill,
+            spill_executor=spill_executor,
+            worker_vmem_bytes=worker_vmem_bytes,
             clock=clock,
         )
         if slots_per_worker < 1:
             raise ValueError(f"slots_per_worker must be >= 1, got {slots_per_worker}")
         self.slots_per_worker = slots_per_worker
+        #: preemptively evict ready-queue batches whose every member's SLO
+        #: budget has fully elapsed (guaranteed misses): their futures
+        #: resolve with DeadlineExceeded and the capacity serves work that
+        #: can still make its deadline.  Off by default — eviction turns
+        #: late results into errors, which only SLO-strict serving wants.
+        self.evict_over_slo = evict_over_slo
         self._cv = threading.Condition()
         self._slot_free = {w.worker_id: slots_per_worker for w in workers}
-        self._max_width = max(w.max_qubits for w in workers)
+        self._spill_slot_free = True  # one whole-mesh batch at a time
         self._ready: list[CoalescedBatch] = []
         self._in_flight = 0
         self._pumping = False  # a _pump_once holds popped-but-unqueued batches
@@ -80,8 +99,9 @@ class AsyncDispatcher(Dispatcher):
         self._stop = False
         self._errors: list[BaseException] = []
         self._pump_errors: list[BaseException] = []
+        # +1 thread: the whole-mesh spill slot runs alongside full worker pools
         self._pool = ThreadPoolExecutor(
-            max_workers=len(workers) * slots_per_worker,
+            max_workers=len(workers) * slots_per_worker + 1,
             thread_name_prefix="serve-slot",
         )
         self._pump_thread: threading.Thread | None = None
@@ -169,18 +189,49 @@ class AsyncDispatcher(Dispatcher):
                 self._cv.notify_all()
         self._place_ready()
 
+    def _expired(self, batch: CoalescedBatch, now: float) -> bool:
+        """True when EVERY member's SLO budget has fully elapsed: the batch
+        is a guaranteed miss for all of them, so executing it can only
+        delay work that might still make its deadline.  A member without an
+        SLO (best-effort) keeps the batch alive — its result is still
+        wanted whenever it arrives."""
+        saw_slo = False
+        for m in batch.members:
+            st = self.gateway.tenants.get(m.client_id)
+            if st is None or st.slo_s is None:
+                return False
+            saw_slo = True
+            if now <= m.arrival + st.slo_s:
+                return False
+        return saw_slo
+
     def _place_ready(self) -> None:
         """Try to place every ready batch; no head-of-line blocking — a
         batch that fits no worker right now is skipped, later batches may
-        fit a different worker."""
+        fit a different worker.  Oversized batches (register width or VMEM
+        model above every worker) route to the whole-mesh spill slot;
+        fully-over-SLO batches are preemptively evicted when enabled."""
         while True:
             now = self.clock()
-            launch = None
+            launch = spill = evict = None
             with self._cv:
                 exclude = {w for w, free in self._slot_free.items() if free <= 0}
                 for i, batch in enumerate(self._ready):
+                    if self.evict_over_slo and self._expired(batch, now):
+                        evict = self._ready.pop(i)
+                        break
+                    if self.mesh_spill and self._oversized(batch):
+                        if not self._spill_slot_free:
+                            continue  # mesh busy; later batches may fit workers
+                        self._spill_slot_free = False
+                        self._in_flight += 1
+                        spill = self._ready.pop(i)
+                        break
                     width = self._width(batch)
-                    if width > self._max_width:
+                    if not self.mesh_spill and width > self._max_width:
+                        # spill disabled: the pre-spill contract — fail fast
+                        # on register width only (a VMEM-model-heavy batch
+                        # that fits a worker's register still executes there)
                         self._ready.pop(i)
                         err = RuntimeError(
                             f"no worker fits a {width}-qubit batch "
@@ -193,7 +244,7 @@ class AsyncDispatcher(Dispatcher):
                     task = CircuitTask(
                         task_id=next(self.task_ids),
                         client_id="gateway",
-                        demand=width,
+                        demand=self._width(batch),
                         service_time=est,
                     )
                     wid = self.manager.assign(task, now, exclude=exclude)
@@ -207,8 +258,44 @@ class AsyncDispatcher(Dispatcher):
                     break
                 else:
                     return  # nothing placeable right now
-            if launch is not None:
+            if evict is not None:
+                self.gateway.evict(evict, now)
+            elif spill is not None:
+                self._pool.submit(self._run_spill, spill)
+            elif launch is not None:
                 self._pool.submit(self._run, *launch)
+
+    def _run_spill(self, batch: CoalescedBatch) -> None:
+        """Spill-slot thread: execute one oversized batch on the whole
+        device mesh, resolve its futures, release the spill slot."""
+        t0 = self.clock()
+        err: BaseException | None = None
+        fids = None
+        try:
+            fids = execute_batch(batch, *self._spill_fns())
+        except BaseException as exc:
+            err = exc
+        dt = self.clock() - t0
+        now = self.clock()
+        if err is None:
+            self.gateway.telemetry.service.update(
+                ("spill", batch_family(batch)), batch_cost_units(batch), dt
+            )
+            self.gateway.telemetry.on_spill(batch.lane_count)
+            self._record(batch)
+            self.gateway.complete(batch, fids, now)
+        else:
+            self.gateway.fail(batch, err, now)
+        with self._cv:
+            self._spill_slot_free = True
+            self._in_flight -= 1
+            self.batch_log.append(
+                ("mesh", batch.n, tuple(sorted(batch.clients())))
+            )
+            if err is not None:
+                self._errors.append(err)
+            self._kicked = True
+            self._cv.notify_all()
 
     def _run(
         self, batch: CoalescedBatch, task: CircuitTask, wid: str, est: float
@@ -219,13 +306,16 @@ class AsyncDispatcher(Dispatcher):
         err: BaseException | None = None
         fids = None
         try:
-            fids = execute_batch(batch, self.kernel, self.shift_kernel)
+            fids = execute_batch(
+                batch, self.kernel, self.shift_kernel, self.multibank_kernel
+            )
         except BaseException as exc:
             err = exc
         dt = self.clock() - t0
         now = self.clock()
         if err is None:
             self._observe(batch, dt)
+            self._record(batch)
             self.gateway.complete(batch, fids, now)
         else:
             self.gateway.fail(batch, err, now)
@@ -263,8 +353,11 @@ class AsyncDispatcher(Dispatcher):
                 self._ready.extend(batches)
                 self._kicked = True
                 self._cv.notify_all()
-                quiesced = (not self._ready and self._in_flight == 0
-                            and not self._pumping)
+                quiesced = (
+                    not self._ready
+                    and self._in_flight == 0
+                    and not self._pumping
+                )
             if quiesced and self.gateway.idle:
                 break
             with self._cv:

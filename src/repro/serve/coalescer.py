@@ -82,25 +82,52 @@ class CoalescedBatch:
 
 
 class Coalescer:
-    def __init__(self, *, target: int = LANES, deadline: float = 1.0,
-                 lanes: int = LANES):
+    def __init__(
+        self,
+        *,
+        target: int = LANES,
+        deadline: float = 1.0,
+        lanes: int = LANES,
+        target_lanes: int | None = None,
+    ):
         if target % lanes:
             raise ValueError(f"target {target} must be a multiple of lanes {lanes}")
         self.target = target
         self.deadline = deadline
         self.lanes = lanes
+        #: optional LANE-weighted size trigger: a buffer whose members
+        #: occupy this many kernel lanes flushes even below ``target``
+        #: members.  Row circuits occupy one lane each, so member count is
+        #: the right measure for them — but a shift-group subtask occupies
+        #: its bank's B sample lanes, and a buffer of a few dozen such
+        #: members can already be a multi-thousand-lane fused launch.
+        self.target_lanes = target_lanes
         self._buffers: dict[Hashable, list[PendingCircuit]] = {}
 
     # ------------------------------------------------------------- intake
+    def _size_due(self, buf: list[PendingCircuit]) -> int:
+        """Members to emit for a size-triggered flush (0 = not due)."""
+        if len(buf) >= self.target:
+            return self.target
+        if self.target_lanes is not None:
+            filled = 0
+            for i, m in enumerate(buf):
+                filled += m.lanes
+                if filled >= self.target_lanes:
+                    return i + 1
+        return 0
+
     def add(self, item: PendingCircuit) -> list[CoalescedBatch]:
         """Buffer one circuit; returns any size-triggered full batches."""
         buf = self._buffers.setdefault(item.key, [])
         buf.append(item)
         out = []
-        while len(buf) >= self.target:
-            out.append(CoalescedBatch(item.key, buf[:self.target],
-                                      created=item.arrival))
-            del buf[:self.target]
+        while True:
+            n = self._size_due(buf)
+            if not n:
+                break
+            out.append(CoalescedBatch(item.key, buf[:n], created=item.arrival))
+            del buf[:n]
         return out
 
     def requeue(self, batch: CoalescedBatch) -> None:
@@ -114,8 +141,10 @@ class Coalescer:
     def _due_at(self, buf: list[PendingCircuit]) -> float:
         """Effective flush deadline of one buffer: min over members of their
         SLO-derived ``flush_by`` (falling back to arrival + deadline)."""
-        return min(m.arrival + self.deadline if m.flush_by is None
-                   else m.flush_by for m in buf)
+        return min(
+            m.arrival + self.deadline if m.flush_by is None else m.flush_by
+            for m in buf
+        )
 
     # -------------------------------------------------------------- flush
     def flush_due(self, now: float) -> list[CoalescedBatch]:
@@ -124,9 +153,12 @@ class Coalescer:
         out = []
         for key, buf in self._buffers.items():
             if buf and now + 1e-12 >= self._due_at(buf):
-                out.append(CoalescedBatch(key, buf[:self.target], created=now,
-                                          by_deadline=True))
-                del buf[:self.target]
+                out.append(
+                    CoalescedBatch(
+                        key, buf[: self.target], created=now, by_deadline=True
+                    )
+                )
+                del buf[: self.target]
         self._drop_empty()
         return out
 
@@ -135,9 +167,12 @@ class Coalescer:
         out = []
         for key, buf in self._buffers.items():
             while buf:
-                out.append(CoalescedBatch(key, buf[:self.target], created=now,
-                                          by_deadline=True))
-                del buf[:self.target]
+                out.append(
+                    CoalescedBatch(
+                        key, buf[: self.target], created=now, by_deadline=True
+                    )
+                )
+                del buf[: self.target]
         self._drop_empty()
         return out
 

@@ -25,7 +25,6 @@ counterpart lives in ``repro.comanager.simulation`` (``gateway=True``).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 import time
 from typing import Callable, Sequence
@@ -37,7 +36,12 @@ from repro.comanager.tenancy import TaskIdAllocator
 from repro.comanager.worker import CircuitTask, WorkerConfig
 from repro.core.sim import CircuitSpec
 from repro.kernels import ops as kops
-from repro.kernels.vqc_statevector import LANES, build_shift_plan
+from repro.kernels.vqc_statevector import (
+    LANES,
+    build_shift_plan,
+    kernel_tb,
+    shift_execution_info,
+)
 from repro.serve.coalescer import CoalescedBatch
 from repro.serve.gateway import Backpressure, Gateway
 from repro.serve.metrics import Telemetry
@@ -47,18 +51,27 @@ KernelFn = Callable[[CircuitSpec, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
 #: shift-group runner: (spec, theta (B,P), data (B,D), four_term, groups)
 #: -> per-group fidelities (len(groups), B)
-ShiftKernelFn = Callable[[CircuitSpec, jnp.ndarray, jnp.ndarray, bool,
-                          tuple], jnp.ndarray]
+ShiftKernelFn = Callable[
+    [CircuitSpec, jnp.ndarray, jnp.ndarray, bool, tuple], jnp.ndarray
+]
+
+#: fused multi-bank runner: (spec, thetas, datas, four_term, group_sets)
+#: -> per-bank (len(group_sets[k]), B_k) fidelity blocks
+MultiBankKernelFn = Callable[[CircuitSpec, tuple, tuple, bool, tuple], tuple]
+
 
 @dataclasses.dataclass(frozen=True)
 class ShiftGroupKey:
-    """Coalescing key for one implicit bank's (param, shift) group subtasks.
+    """Coalescing key for implicit-bank (param, shift) group subtasks.
 
-    All groups of one submitted ``ShiftBank`` share a key (they coalesce into
-    joint prefix-reuse kernel launches); ``bank_token`` keeps different banks
-    — different base angles — apart."""
+    Keyed by circuit STRUCTURE only: group subtasks of *different* banks —
+    different tenants, different base angles, different sample counts — of
+    the same ``CircuitSpec`` and shift rule share a key and coalesce into
+    joint multi-bank prefix-reuse launches (base angles are per-lane data
+    of the fused kernel, so they never had to keep banks apart)."""
+
     spec: CircuitSpec
-    bank_token: int
+    four_term: bool = False
 
 
 # --------------------------------------------------------- shared execution
@@ -68,12 +81,39 @@ def batch_spec(batch: CoalescedBatch) -> CircuitSpec:
         return key
     if isinstance(key, ShiftGroupKey):
         return key.spec
-    raise TypeError(f"dispatcher batches must be keyed by CircuitSpec or "
-                    f"ShiftGroupKey, got {type(key).__name__}")
+    raise TypeError(
+        f"dispatcher batches must be keyed by CircuitSpec or "
+        f"ShiftGroupKey, got {type(key).__name__}"
+    )
 
 
-def execute_batch(batch: CoalescedBatch, kernel: KernelFn,
-                  shift_kernel: ShiftKernelFn) -> list:
+def bank_partition(batch: CoalescedBatch):
+    """Split a shift-group batch's members into per-bank subtask lists.
+
+    Returns ``(banks, group_sets, slots)``: the distinct ``ShiftBank``s in
+    first-appearance order, each bank's requested group tuple, and for every
+    member its ``(bank_index, row_index)`` into the fused kernel's per-bank
+    output blocks."""
+    banks, group_sets, slots = [], [], []
+    index: dict[int, int] = {}
+    for m in batch.members:
+        bank, g = m.payload
+        k = index.get(id(bank))
+        if k is None:
+            k = index[id(bank)] = len(banks)
+            banks.append(bank)
+            group_sets.append([])
+        slots.append((k, len(group_sets[k])))
+        group_sets[k].append(int(g))
+    return banks, [tuple(gs) for gs in group_sets], slots
+
+
+def execute_batch(
+    batch: CoalescedBatch,
+    kernel: KernelFn,
+    shift_kernel: ShiftKernelFn,
+    multibank_kernel: MultiBankKernelFn | None = None,
+) -> list:
     """Run one coalesced batch on the local device; returns one fidelity
     entry per member, in member (submission) order.  Shared by the sync and
     async dispatchers — batch composition never changes per-lane math, so
@@ -86,15 +126,38 @@ def execute_batch(batch: CoalescedBatch, kernel: KernelFn,
     time.  The pad lanes are dead weight the launch already paid for
     (``CoalescedBatch.padded``) and are sliced off before scatter-back."""
     if isinstance(batch.key, ShiftGroupKey):
-        # one prefix-reuse kernel launch computes every coalesced
-        # (param, shift) group of this bank; member i gets its group's
-        # (B,) fidelity row.
+        # ONE prefix-reuse kernel launch computes every coalesced
+        # (param, shift) group of every bank in the batch; member i gets
+        # its group's (B,) fidelity row of its bank's block.
         spec = batch.key.spec
-        bank = batch.members[0].payload[0]
-        groups = tuple(int(m.payload[1]) for m in batch.members)
-        rows = shift_kernel(spec, bank.theta, bank.data,
-                            bank.four_term, groups)
-        return [rows[i] for i in range(len(batch.members))]
+        banks, group_sets, slots = bank_partition(batch)
+        if len(banks) == 1:
+            rows = shift_kernel(
+                spec,
+                banks[0].theta,
+                banks[0].data,
+                banks[0].four_term,
+                group_sets[0],
+            )
+            return [rows[i] for _, i in slots]
+        # per-bank lane bucketing BEFORE the jit boundary: deadline flushes
+        # mix arbitrary sample counts, and without rounding each bank to a
+        # LANES multiple every new (B_0, B_1, ...) combination would compile
+        # a fresh fused kernel — the same recompile storm shape bucketing
+        # fixed for row batches.  Pad lanes are per-lane-independent dead
+        # weight; slice each member's row back to its bank's true width.
+        def bucket(x):
+            pad = (-x.shape[0]) % LANES
+            return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+        outs = (multibank_kernel or kops.vqc_fidelity_shiftgroups_multibank)(
+            spec,
+            tuple(bucket(b.theta) for b in banks),
+            tuple(bucket(b.data) for b in banks),
+            batch.key.four_term,
+            tuple(group_sets),
+        )
+        return [outs[k][i][: banks[k].n_samples] for k, i in slots]
     spec: CircuitSpec = batch.key
     theta = jnp.stack([m.payload[0] for m in batch.members])
     data = jnp.stack([m.payload[1] for m in batch.members])
@@ -123,104 +186,230 @@ def batch_cost_units(batch: CoalescedBatch) -> float:
     """Analytic work units of one batch: gate applications x padded lanes.
 
     Row batches pay the full gate sequence over their padded lane tile.
-    Shift-group batches pay the prefix-reuse cost: the data-register pass,
-    the trainable-register forward pass, the backward pass down to the
-    DEEPEST suffix any coalesced group needs (a group shifting an early
-    parameter forces a longer reversed-suffix walk), and one gate + inner
-    product per shift variant — the "true cost" Algorithm 2 should charge a
-    group subtask, not one flat unit.
+    Shift-group batches pay the FUSED prefix-reuse cost: the data-register
+    pass, the trainable-register forward pass, the backward pass down to
+    the DEEPEST suffix any coalesced group (of any bank) needs, and one
+    gate + inner product per shift variant of the UNION group set — all of
+    it over the sum of the banks' padded lane segments, since the fused
+    launch computes the union groups for every lane.
     """
     spec = batch_spec(batch)
     if not isinstance(batch.key, ShiftGroupKey):
         pad = batch.padded(LANES)
         return float(len(spec.ops) * pad)
-    bank = batch.members[0].payload[0]
-    pad_b = math.ceil(bank.n_samples / LANES) * LANES
+    banks, group_sets, _ = bank_partition(batch)
+    pad_b = sum(math.ceil(b.n_samples / LANES) * LANES for b in banks)
     plan = build_shift_plan(spec)
-    groups = [int(m.payload[1]) for m in batch.members]
+    union = sorted({g for gs in group_sets for g in gs})
     if plan is None:
-        # fallback materializes each requested group through the full circuit
-        return float(len(spec.ops) * len(groups) * pad_b)
+        # fallback materializes each bank's requested groups separately
+        return float(
+            len(spec.ops)
+            * sum(
+                len(gs) * math.ceil(b.n_samples / LANES) * LANES
+                for b, gs in zip(banks, group_sets)
+            )
+        )
+    n_params = banks[0].n_params
     n_train = len(plan.train_ops)
     max_suffix = 0
     n_variants = 0
-    for g in groups:
+    for g in union:
         if g == 0:
             continue
-        j = (g - 1) % bank.n_params
+        j = (g - 1) % n_params
         pos = plan.theta_pos[j]
         if pos < 0:
-            continue              # parameter drives no gate: base fidelity
+            continue  # parameter drives no gate: base fidelity
         n_variants += 1
         max_suffix = max(max_suffix, n_train - pos)
-    gate_apps = (len(plan.data_ops) + n_train + max_suffix + n_variants)
+    gate_apps = len(plan.data_ops) + n_train + max_suffix + n_variants
     return float(gate_apps * pad_b)
 
 
+# ------------------------------------------------------- worker VMEM model
+#: modeled per-worker VMEM (one TPU core's worth): batches whose working
+#: set exceeds it cannot run on a single worker and spill to the mesh.
+WORKER_VMEM_BYTES = 16 * 1024 * 1024
+
+
+def batch_vmem_bytes(batch: CoalescedBatch) -> int:
+    """Modeled single-worker VMEM working set of one coalesced batch.
+
+    Row batches hold the full 2**n-dim statevector tile ((re, im) float32
+    at the kernel's lane-tile width).  Shift-group batches hold the
+    register-local checkpoint set — already bounded by the kernel's own
+    depth-tile spilling, so ``shift_execution_info`` reports the post-spill
+    footprint.  The dispatcher compares this against ``WORKER_VMEM_BYTES``
+    to decide mesh spill (the whole-mesh path shards lanes, shrinking the
+    per-device tile back under budget)."""
+    spec = batch_spec(batch)
+    if isinstance(batch.key, ShiftGroupKey):
+        banks, group_sets, _ = bank_partition(batch)
+        lanes = sum(math.ceil(b.n_samples / LANES) * LANES for b in banks)
+        union = tuple(sorted({g for gs in group_sets for g in gs}))
+        info = shift_execution_info(
+            spec, lanes, four_term=batch.key.four_term, groups=union
+        )
+        return info["vmem_bytes"]
+    tb = kernel_tb(batch.padded(LANES))
+    return 2 * 4 * (2**spec.n_qubits) * tb
+
+
 class Dispatcher:
-    def __init__(self, gateway: Gateway, workers: Sequence[WorkerConfig],
-                 *, manager: CoManager | None = None,
-                 kernel: KernelFn | None = None,
-                 shift_kernel: ShiftKernelFn | None = None,
-                 clock=time.perf_counter):
+    def __init__(
+        self,
+        gateway: Gateway,
+        workers: Sequence[WorkerConfig],
+        *,
+        manager: CoManager | None = None,
+        kernel: KernelFn | None = None,
+        shift_kernel: ShiftKernelFn | None = None,
+        multibank_kernel: MultiBankKernelFn | None = None,
+        mesh_spill: bool = True,
+        spill_executor=None,
+        worker_vmem_bytes: int = WORKER_VMEM_BYTES,
+        clock=time.perf_counter,
+    ):
         self.gateway = gateway
         self.manager = manager or CoManager(multi_tenant=True)
         self.kernel = kernel or kops.vqc_fidelity
         self.shift_kernel = shift_kernel or kops.vqc_fidelity_shiftgroups
-        # distinguishes shift-group submissions of different banks (different
-        # base angles can never share a kernel launch, so they must not
-        # coalesce); per-dispatcher so concurrent runtimes stay deterministic.
-        self.bank_tokens = itertools.count()
+        self.multibank_kernel = (
+            multibank_kernel or kops.vqc_fidelity_shiftgroups_multibank
+        )
+        #: route mega-batches that fit no single worker (register width or
+        #: VMEM model) through the whole-mesh sharded executor instead of
+        #: failing fast; disable to restore the strict fail-fast contract.
+        self.mesh_spill = mesh_spill
+        self.worker_vmem_bytes = worker_vmem_bytes
+        self._spill = spill_executor  # built lazily when None
         self.clock = clock
         self.task_ids = TaskIdAllocator()
         self.batch_log: list[tuple[str, int, tuple]] = []  # (worker, n, clients)
         self._base_cru: dict[str, float] = {}
         self._outstanding_s: dict[str, float] = {}  # predicted queued seconds
+        self._max_width = max(w.max_qubits for w in workers)
         for w in workers:
-            self.manager.register_worker(w.worker_id, w.max_qubits,
-                                         cru=w.base_load, t=self.clock(),
-                                         error_rate=w.error_rate)
+            self.manager.register_worker(
+                w.worker_id,
+                w.max_qubits,
+                cru=w.base_load,
+                t=self.clock(),
+                error_rate=w.error_rate,
+            )
             self._base_cru[w.worker_id] = w.base_load
             self._outstanding_s[w.worker_id] = 0.0
 
     # ------------------------------------------------------ CRU cost model
     def _estimate_s(self, batch: CoalescedBatch) -> float:
         return self.gateway.telemetry.service.estimate(
-            batch_family(batch), batch_cost_units(batch))
+            batch_family(batch), batch_cost_units(batch)
+        )
 
     def _charge(self, wid: str, seconds: float) -> None:
         """Add/remove predicted outstanding work from a worker's CRU: the
         EWMA service estimate is the co-Manager's view of classical load."""
         self._outstanding_s[wid] = max(
-            0.0, self._outstanding_s.get(wid, 0.0) + seconds)
+            0.0, self._outstanding_s.get(wid, 0.0) + seconds
+        )
         view = self.manager.workers.get(wid)
         if view is not None:
             view.cru = self._base_cru.get(wid, 0.0) + self._outstanding_s[wid]
 
     def _observe(self, batch: CoalescedBatch, seconds: float) -> None:
         self.gateway.telemetry.service.update(
-            batch_family(batch), batch_cost_units(batch), seconds)
+            batch_family(batch), batch_cost_units(batch), seconds
+        )
 
     # ----------------------------------------------------------- execution
     @staticmethod
     def _width(batch: CoalescedBatch) -> int:
         return batch_spec(batch).n_qubits
 
+    def _oversized(self, batch: CoalescedBatch) -> bool:
+        """No single worker can run this batch: register width above every
+        worker's capacity, or working set over the per-worker VMEM model.
+        Memoized on the batch — composition is immutable after coalescing,
+        and the async ready-queue scan re-asks on every placement pass
+        (often under its condition lock)."""
+        verdict = getattr(batch, "_oversized_verdict", None)
+        if verdict is None:
+            verdict = (
+                self._width(batch) > self._max_width
+                or batch_vmem_bytes(batch) > self.worker_vmem_bytes
+            )
+            batch._oversized_verdict = verdict
+        return verdict
+
+    def _spill_executor(self):
+        if self._spill is None:
+            from repro.comanager.dataplane import MeshSpillExecutor
+
+            self._spill = MeshSpillExecutor()
+        return self._spill
+
+    def _spill_fns(self):
+        """(kernel, shift_kernel, multibank_kernel) triple backed by the
+        whole-mesh spill executor, so ``execute_batch`` runs unchanged."""
+        ex = self._spill_executor()
+        return (
+            lambda spec, t, d: ex.rows(spec, t, d),
+            lambda spec, t, d, ft, gs: ex.banks(
+                spec, (t,), (d,), ft, (tuple(gs),)
+            )[0],
+            lambda spec, ts, ds, ft, gss: ex.banks(spec, ts, ds, ft, gss),
+        )
+
+    def _record(self, batch: CoalescedBatch) -> None:
+        """Per-launch telemetry shared by the sync and async paths."""
+        if isinstance(batch.key, ShiftGroupKey):
+            banks, _, _ = bank_partition(batch)
+            self.gateway.telemetry.on_fused_launch(len(banks))
+
+    def run_spilled(self, batch: CoalescedBatch) -> str:
+        """Execute one oversized batch on the whole device mesh (no single
+        worker is charged — the spill path is its own resource)."""
+        t0 = self.clock()
+        fids = execute_batch(batch, *self._spill_fns())
+        self.gateway.telemetry.service.update(
+            ("spill", batch_family(batch)),
+            batch_cost_units(batch),
+            self.clock() - t0,
+        )
+        self.gateway.telemetry.on_spill(batch.lane_count)
+        self._record(batch)
+        self.gateway.complete(batch, fids, self.clock())
+        self.batch_log.append(("mesh", batch.n, tuple(sorted(batch.clients()))))
+        return "mesh"
+
     def run_batch(self, batch: CoalescedBatch) -> str:
         """Place one batch via Algorithm 2 and execute it on the spot."""
         now = self.clock()
+        if self.mesh_spill and self._oversized(batch):
+            return self.run_spilled(batch)
         est = self._estimate_s(batch)
-        task = CircuitTask(task_id=next(self.task_ids), client_id="gateway",
-                           demand=self._width(batch), service_time=est)
+        task = CircuitTask(
+            task_id=next(self.task_ids),
+            client_id="gateway",
+            demand=self._width(batch),
+            service_time=est,
+        )
         wid = self.manager.assign(task, now)
         if wid is None:
+            if self.mesh_spill:
+                return self.run_spilled(batch)
+            caps = [v.max_qubits for v in self.manager.workers.values()]
             raise RuntimeError(
-                f"no worker fits a {task.demand}-qubit batch "
-                f"(capacities: {[v.max_qubits for v in self.manager.workers.values()]})")
+                f"no worker fits a {task.demand}-qubit batch (capacities: {caps})"
+            )
         self._charge(wid, est)
         t0 = self.clock()
-        fids = execute_batch(batch, self.kernel, self.shift_kernel)
+        fids = execute_batch(
+            batch, self.kernel, self.shift_kernel, self.multibank_kernel
+        )
         self._observe(batch, self.clock() - t0)
+        self._record(batch)
         self._charge(wid, -est)
         self.manager.complete(wid, task, self.clock())
         self.gateway.complete(batch, fids, self.clock())
@@ -274,30 +463,64 @@ class GatewayRuntime:
     and placement, and futures resolve out of order.
     """
 
-    def __init__(self, workers: Sequence[WorkerConfig] | None = None, *,
-                 target: int | None = None, deadline: float = 1.0,
-                 kernel: KernelFn | None = None,
-                 shift_kernel: ShiftKernelFn | None = None,
-                 clock=time.perf_counter, mode: str = "sync",
-                 slots_per_worker: int = 1, **gateway_opts):
+    def __init__(
+        self,
+        workers: Sequence[WorkerConfig] | None = None,
+        *,
+        target: int | None = None,
+        deadline: float = 1.0,
+        kernel: KernelFn | None = None,
+        shift_kernel: ShiftKernelFn | None = None,
+        multibank_kernel: MultiBankKernelFn | None = None,
+        mesh_spill: bool = True,
+        spill_executor=None,
+        worker_vmem_bytes: int = WORKER_VMEM_BYTES,
+        evict_over_slo: bool = False,
+        clock=time.perf_counter,
+        mode: str = "sync",
+        slots_per_worker: int = 1,
+        **gateway_opts,
+    ):
         if mode not in ("sync", "async"):
             raise ValueError(f"unknown mode {mode!r}")
         if workers is None:
-            workers = [WorkerConfig(f"w{i+1}", q)
-                       for i, q in enumerate((5, 10, 15, 20))]
+            workers = [
+                WorkerConfig(f"w{i + 1}", q) for i, q in enumerate((5, 10, 15, 20))
+            ]
         self.mode = mode
         self.telemetry = Telemetry()
-        self.gateway = Gateway(target=target, deadline=deadline,
-                               telemetry=self.telemetry, **gateway_opts)
+        self.gateway = Gateway(
+            target=target,
+            deadline=deadline,
+            telemetry=self.telemetry,
+            **gateway_opts,
+        )
+        common = dict(
+            kernel=kernel,
+            shift_kernel=shift_kernel,
+            multibank_kernel=multibank_kernel,
+            mesh_spill=mesh_spill,
+            spill_executor=spill_executor,
+            worker_vmem_bytes=worker_vmem_bytes,
+            clock=clock,
+        )
         if mode == "async":
             from repro.serve.async_dispatcher import AsyncDispatcher
+
             self.dispatcher = AsyncDispatcher(
-                self.gateway, workers, kernel=kernel,
-                shift_kernel=shift_kernel, clock=clock,
-                slots_per_worker=slots_per_worker)
+                self.gateway,
+                workers,
+                slots_per_worker=slots_per_worker,
+                evict_over_slo=evict_over_slo,
+                **common,
+            )
         else:
-            self.dispatcher = Dispatcher(self.gateway, workers, kernel=kernel,
-                                         shift_kernel=shift_kernel, clock=clock)
+            if evict_over_slo:
+                raise ValueError(
+                    "evict_over_slo requires mode='async' "
+                    "(the sync dispatcher has no ready queue)"
+                )
+            self.dispatcher = Dispatcher(self.gateway, workers, **common)
         self.dispatcher.start()
 
     def close(self) -> None:
@@ -310,9 +533,15 @@ class GatewayRuntime:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def executor(self, spec: CircuitSpec, client_id: str,
-                 *, weight: float = 1.0, priority: int = 1,
-                 slo_ms: float | None = None):
+    def executor(
+        self,
+        spec: CircuitSpec,
+        client_id: str,
+        *,
+        weight: float = 1.0,
+        priority: int = 1,
+        slo_ms: float | None = None,
+    ):
         """A ``shift_rule.Executor`` that routes a circuit bank through the
         gateway row by row and gathers fidelities in submission order —
         ``shift_rule.assemble_gradient`` consumes the result unchanged.
@@ -321,17 +550,23 @@ class GatewayRuntime:
         the pump loop as they are admitted, and the final gather blocks on
         the out-of-order futures."""
         if client_id not in self.gateway.tenants:
-            self.gateway.register_client(client_id, weight=weight,
-                                         priority=priority, slo_ms=slo_ms)
+            self.gateway.register_client(
+                client_id, weight=weight, priority=priority, slo_ms=slo_ms
+            )
 
         def run(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:
             futures = []
             for i in range(theta_bank.shape[0]):
                 while True:
                     try:
-                        futures.append(self.gateway.submit(
-                            client_id, spec, (theta_bank[i], data_bank[i]),
-                            now=self.dispatcher.clock()))
+                        futures.append(
+                            self.gateway.submit(
+                                client_id,
+                                spec,
+                                (theta_bank[i], data_bank[i]),
+                                now=self.dispatcher.clock(),
+                            )
+                        )
                         break
                     except Backpressure:
                         # sync: drain in-flight work; async: wait for a
@@ -343,34 +578,49 @@ class GatewayRuntime:
 
         return run
 
-    def shift_executor(self, spec: CircuitSpec, client_id: str,
-                       *, weight: float = 1.0, priority: int = 1,
-                       slo_ms: float | None = None):
+    def shift_executor(
+        self,
+        spec: CircuitSpec,
+        client_id: str,
+        *,
+        weight: float = 1.0,
+        priority: int = 1,
+        slo_ms: float | None = None,
+    ):
         """A shift-aware ``shift_rule.Executor``: an implicit ``ShiftBank``
         enters the gateway as per-(param, shift) GROUP subtasks — 1 + 2P
         admissions instead of (1 + 2P) * B — which the coalescer packs into
         joint prefix-reuse kernel launches and the co-Manager places as
-        whole-batch tasks.  Group fidelities come back in bank order, so
+        whole-batch tasks.  Batches are keyed by circuit STRUCTURE
+        (``ShiftGroupKey``), so concurrent tenants training the same spec
+        fuse their banks' subtasks into shared multi-bank launches.  Group
+        fidelities come back in bank order, so
         ``shift_rule.assemble_gradient`` consumes them unchanged.
 
         Plain ``(theta_bank, data_bank)`` calls are also accepted and fall
         back to per-row submission, so the executor composes with every bank
         mode."""
-        row_run = self.executor(spec, client_id, weight=weight,
-                                priority=priority, slo_ms=slo_ms)
+        row_run = self.executor(
+            spec, client_id, weight=weight, priority=priority, slo_ms=slo_ms
+        )
 
         def run(bank, data_bank=None) -> jnp.ndarray:
             if data_bank is not None:
                 return row_run(bank, data_bank)
-            key = ShiftGroupKey(spec, next(self.dispatcher.bank_tokens))
+            key = ShiftGroupKey(spec, bank.four_term)
             futures = []
             for g in range(bank.n_groups):
                 while True:
                     try:
-                        futures.append(self.gateway.submit(
-                            client_id, key, (bank, g),
-                            now=self.dispatcher.clock(),
-                            lanes=bank.n_samples))
+                        futures.append(
+                            self.gateway.submit(
+                                client_id,
+                                key,
+                                (bank, g),
+                                now=self.dispatcher.clock(),
+                                lanes=bank.n_samples,
+                            )
+                        )
                         break
                     except Backpressure:
                         self.dispatcher.absorb_backpressure()

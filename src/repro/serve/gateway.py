@@ -55,6 +55,12 @@ class Backpressure(RuntimeError):
     """Raised when a tenant's admission queue is full."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """A circuit's full SLO budget elapsed before execution and it was
+    preemptively evicted from the ready queue (load shedding: finishing it
+    could only produce an already-missed result while delaying others)."""
+
+
 class CircuitFuture:
     """Single-assignment result slot for one submitted circuit.
 
@@ -65,8 +71,15 @@ class CircuitFuture:
     re-raises the execution error in the waiting thread.
     """
 
-    __slots__ = ("client_id", "seq", "submit_time", "_value", "_error",
-                 "done", "_event")
+    __slots__ = (
+        "client_id",
+        "seq",
+        "submit_time",
+        "_value",
+        "_error",
+        "done",
+        "_event",
+    )
 
     def __init__(self, client_id: str, seq: int, submit_time: float):
         self.client_id = client_id
@@ -101,8 +114,9 @@ class CircuitFuture:
         """Block until resolved; returns the value or re-raises the batch's
         execution error."""
         if not self._event.wait(timeout):
-            raise TimeoutError(f"circuit {self.seq} not completed "
-                               f"within {timeout}s")
+            raise TimeoutError(
+                f"circuit {self.seq} not completed within {timeout}s"
+            )
         return self.value
 
 
@@ -119,17 +133,27 @@ class TenantState:
 
 
 class Gateway:
-    def __init__(self, *, target: int | None = None, deadline: float = 1.0,
-                 lanes: int | None = None, max_pending: int = 100_000,
-                 max_in_flight: int = 100_000,
-                 telemetry: Telemetry | None = None):
+    def __init__(
+        self,
+        *,
+        target: int | None = None,
+        deadline: float = 1.0,
+        lanes: int | None = None,
+        target_lanes: int | None = None,
+        max_pending: int = 100_000,
+        max_in_flight: int = 100_000,
+        telemetry: Telemetry | None = None,
+    ):
         from repro.kernels.vqc_statevector import LANES
         lanes = lanes or LANES
-        self.coalescer = Coalescer(target=target or lanes, deadline=deadline,
-                                   lanes=lanes)
+        self.coalescer = Coalescer(
+            target=target or lanes,
+            deadline=deadline,
+            lanes=lanes,
+            target_lanes=target_lanes,
+        )
         self.telemetry = telemetry or Telemetry(lanes=lanes)
-        self._defaults = dict(max_pending=max_pending,
-                              max_in_flight=max_in_flight)
+        self._defaults = dict(max_pending=max_pending, max_in_flight=max_in_flight)
         self.tenants: dict[str, TenantState] = {}
         self._seq = 0
         # serializes queue/coalescer/telemetry mutation against the async
@@ -138,10 +162,16 @@ class Gateway:
         self._lock = threading.RLock()
 
     # ---------------------------------------------------------- admission
-    def register_client(self, client_id: str, *, weight: float = 1.0,
-                        priority: int = 1, slo_ms: float | None = None,
-                        max_pending: int | None = None,
-                        max_in_flight: int | None = None) -> TenantState:
+    def register_client(
+        self,
+        client_id: str,
+        *,
+        weight: float = 1.0,
+        priority: int = 1,
+        slo_ms: float | None = None,
+        max_pending: int | None = None,
+        max_in_flight: int | None = None,
+    ) -> TenantState:
         """``priority``: strict scheduling tier (lower = first).  ``slo_ms``:
         end-to-end latency SLO; shortens the coalescer flush deadline for
         this tenant's circuits and arms deadline-miss accounting."""
@@ -151,12 +181,15 @@ class Gateway:
                 priority=priority,
                 slo_s=None if slo_ms is None else slo_ms / 1e3,
                 max_pending=max_pending or self._defaults["max_pending"],
-                max_in_flight=max_in_flight or self._defaults["max_in_flight"])
+                max_in_flight=max_in_flight or self._defaults["max_in_flight"],
+            )
             # a late joiner starts at the current minimum virtual pass OF ITS
             # TIER — not 0, which would hand it absolute priority within the
             # tier until it "caught up" with tenants served for a while.
-            st.vpass = min((t.vpass for t in self.tenants.values()
-                            if t.priority == priority), default=0.0)
+            st.vpass = min(
+                (t.vpass for t in self.tenants.values() if t.priority == priority),
+                default=0.0,
+            )
             self.tenants[client_id] = st
             self.telemetry.set_slo(client_id, st.slo_s)
             return st
@@ -167,8 +200,9 @@ class Gateway:
             st = self.register_client(client_id)
         return st
 
-    def submit(self, client_id: str, key: Hashable, payload: Any,
-               now: float, lanes: int = 1) -> CircuitFuture:
+    def submit(
+        self, client_id: str, key: Hashable, payload: Any, now: float, lanes: int = 1
+    ) -> CircuitFuture:
         """Admit one circuit.  Raises ``Backpressure`` at the queue bound.
 
         ``lanes``: kernel lanes the item occupies (1 for a row circuit; a
@@ -179,15 +213,27 @@ class Gateway:
             if len(st.queue) >= st.max_pending:
                 self.telemetry.on_reject(client_id)
                 raise Backpressure(
-                    f"{client_id}: {len(st.queue)} pending >= {st.max_pending}")
+                    f"{client_id}: {len(st.queue)} pending >= {st.max_pending}"
+                )
             fut = CircuitFuture(client_id, self._seq, now)
-            flush_by = (None if st.slo_s is None
-                        else now + min(self.coalescer.deadline,
-                                       SLO_FLUSH_FRACTION * st.slo_s))
-            st.queue.append(PendingCircuit(key=key, client_id=client_id,
-                                           seq=self._seq, arrival=now,
-                                           payload=payload, future=fut,
-                                           lanes=lanes, flush_by=flush_by))
+            flush_by = (
+                None
+                if st.slo_s is None
+                else now
+                + min(self.coalescer.deadline, SLO_FLUSH_FRACTION * st.slo_s)
+            )
+            st.queue.append(
+                PendingCircuit(
+                    key=key,
+                    client_id=client_id,
+                    seq=self._seq,
+                    arrival=now,
+                    payload=payload,
+                    future=fut,
+                    lanes=lanes,
+                    flush_by=flush_by,
+                )
+            )
             self._seq += 1
             self.telemetry.on_submit(client_id, now)
             return fut
@@ -221,9 +267,11 @@ class Gateway:
                 batches.extend(self.coalescer.add(item))
             batches.extend(self.coalescer.flush_due(now))
             for b in batches:
-                self.telemetry.on_batch(b.lane_count,
-                                        padded=b.padded(self.coalescer.lanes),
-                                        by_deadline=b.by_deadline)
+                self.telemetry.on_batch(
+                    b.lane_count,
+                    padded=b.padded(self.coalescer.lanes),
+                    by_deadline=b.by_deadline,
+                )
             return batches
 
     def flush(self, now: float) -> list[CoalescedBatch]:
@@ -232,9 +280,11 @@ class Gateway:
             batches = self.pump(now)
             forced = self.coalescer.flush_all(now)
             for b in forced:
-                self.telemetry.on_batch(b.lane_count,
-                                        padded=b.padded(self.coalescer.lanes),
-                                        by_deadline=b.by_deadline)
+                self.telemetry.on_batch(
+                    b.lane_count,
+                    padded=b.padded(self.coalescer.lanes),
+                    by_deadline=b.by_deadline,
+                )
             return batches + forced
 
     # ------------------------------------------------------------ results
@@ -250,8 +300,7 @@ class Gateway:
                     m.future.set(values[i] if values is not None else None)
                 self.telemetry.on_complete(m.client_id, m.arrival, now)
 
-    def fail(self, batch: CoalescedBatch, exc: BaseException,
-             now: float) -> None:
+    def fail(self, batch: CoalescedBatch, exc: BaseException, now: float) -> None:
         """Resolve a batch whose execution errored: every member future
         re-raises ``exc``; tenant in-flight accounting is released so the
         scheduler is not wedged by a poisoned batch."""
@@ -261,6 +310,25 @@ class Gateway:
                 st.in_flight = max(0, st.in_flight - 1)
                 if m.future is not None:
                     m.future.set_error(exc)
+
+    def evict(self, batch: CoalescedBatch, now: float) -> None:
+        """Preemptively shed a batch whose members' SLO budgets fully
+        elapsed before placement: every future resolves with
+        ``DeadlineExceeded`` (already a guaranteed miss) and the misses are
+        accounted per tenant, freeing the ready queue for work that can
+        still make its deadline."""
+        with self._lock:
+            for m in batch.members:
+                st = self.tenants[m.client_id]
+                st.in_flight = max(0, st.in_flight - 1)
+                if m.future is not None:
+                    m.future.set_error(
+                        DeadlineExceeded(
+                            f"circuit {m.seq} ({m.client_id}): SLO budget "
+                            f"elapsed after {now - m.arrival:.3f}s in queue"
+                        )
+                    )
+                self.telemetry.on_evict(m.client_id)
 
     def requeue(self, batch: CoalescedBatch) -> None:
         """Return a failed (evicted-worker) batch for re-coalescing; the
@@ -279,5 +347,6 @@ class Gateway:
     def idle(self) -> bool:
         """True when nothing is queued or buffered (in-flight may remain)."""
         with self._lock:
-            return (self.coalescer.buffered == 0
-                    and all(not st.queue for st in self.tenants.values()))
+            return self.coalescer.buffered == 0 and all(
+                not st.queue for st in self.tenants.values()
+            )

@@ -36,8 +36,7 @@ def _percentile(sorted_xs: list[float], q: float) -> float:
     on the hot path)."""
     if not sorted_xs:
         return float("nan")
-    k = max(0, min(len(sorted_xs) - 1,
-                   math.ceil(q / 100.0 * len(sorted_xs)) - 1))
+    k = max(0, min(len(sorted_xs) - 1, math.ceil(q / 100.0 * len(sorted_xs)) - 1))
     return sorted_xs[k]
 
 
@@ -46,6 +45,9 @@ class TenantStats:
     submitted: int = 0
     completed: int = 0
     rejected: int = 0
+    #: circuits preemptively evicted after their SLO budget fully elapsed
+    #: while waiting for placement (each also counts as an SLO miss).
+    evicted: int = 0
     first_submit: float = float("inf")
     last_complete: float = 0.0
     latencies: list = dataclasses.field(default_factory=list)
@@ -60,10 +62,12 @@ class TenantStats:
 
     @property
     def slo_attainment(self) -> float | None:
-        """Fraction of completions delivered within the SLO (None: no SLO)."""
+        """Fraction of resolved circuits delivered within the SLO (None: no
+        SLO).  Evicted circuits resolved with an error still count against
+        attainment — they were admitted and missed."""
         if self.slo_s is None:
             return None
-        return 1.0 - self.slo_misses / max(self.completed, 1)
+        return 1.0 - self.slo_misses / max(self.completed + self.evicted, 1)
 
     def latency_percentile(self, q: float) -> float:
         return _percentile(sorted(self.latencies), q)
@@ -88,12 +92,16 @@ class ServiceModel:
         per_unit = seconds / units
         with self._lock:
             old = self._per_key.get(key)
-            self._per_key[key] = (per_unit if old is None
-                                  else self.alpha * per_unit
-                                  + (1 - self.alpha) * old)
-            self._global = (per_unit if self._global is None
-                            else self.alpha * per_unit
-                            + (1 - self.alpha) * self._global)
+            self._per_key[key] = (
+                per_unit
+                if old is None
+                else self.alpha * per_unit + (1 - self.alpha) * old
+            )
+            self._global = (
+                per_unit
+                if self._global is None
+                else self.alpha * per_unit + (1 - self.alpha) * self._global
+            )
 
     def estimate(self, key: Hashable, units: float) -> float:
         with self._lock:
@@ -112,6 +120,18 @@ class Telemetry:
         self.padded_lanes = 0
         self.deadline_flushes = 0
         self.size_flushes = 0
+        # fused shift-group launches: every executed ShiftGroupKey batch is
+        # ONE prefix-reuse kernel launch; ``fused_banks`` counts the implicit
+        # banks it covered (> batches when cross-bank fusion is happening —
+        # the K x (1+2P) -> (1+2P) launch collapse the multi-bank path buys).
+        self.fused_launches = 0
+        self.fused_banks = 0
+        self.multibank_launches = 0      # fused launches covering >= 2 banks
+        # mesh spill: mega-batches too wide/deep for any single worker that
+        # were routed through the sharded whole-mesh executor instead of
+        # failing fast.
+        self.mesh_spills = 0
+        self.spilled_lanes = 0
         self.service = ServiceModel()
 
     def _tenant(self, client_id: str) -> TenantStats:
@@ -129,8 +149,9 @@ class Telemetry:
     def on_reject(self, client_id: str) -> None:
         self._tenant(client_id).rejected += 1
 
-    def on_batch(self, n_lanes: int, *, padded: int | None = None,
-                 by_deadline: bool) -> None:
+    def on_batch(
+        self, n_lanes: int, *, padded: int | None = None, by_deadline: bool
+    ) -> None:
         """``n_lanes``: kernel lanes the batch's members occupy — member
         count for row circuits, sum of bank sample widths for shift-group
         subtasks (``CoalescedBatch.lane_count``).  ``padded``: lanes the
@@ -145,6 +166,26 @@ class Telemetry:
             self.deadline_flushes += 1
         else:
             self.size_flushes += 1
+
+    def on_fused_launch(self, n_banks: int) -> None:
+        """One executed shift-group mega-batch = one fused kernel launch
+        covering ``n_banks`` implicit banks' (param, shift) subtasks."""
+        self.fused_launches += 1
+        self.fused_banks += n_banks
+        if n_banks > 1:
+            self.multibank_launches += 1
+
+    def on_spill(self, lanes: int) -> None:
+        """One mega-batch routed through the whole-mesh spill executor."""
+        self.mesh_spills += 1
+        self.spilled_lanes += lanes
+
+    def on_evict(self, client_id: str) -> None:
+        """One circuit preemptively evicted past its SLO budget: counts as
+        an SLO miss without a completion."""
+        s = self._tenant(client_id)
+        s.evicted += 1
+        s.slo_misses += 1
 
     def on_complete(self, client_id: str, submit_time: float, now: float) -> None:
         s = self._tenant(client_id)
@@ -175,6 +216,8 @@ class Telemetry:
             "p99_latency_s": round(s.latency_percentile(99), 4),
             "circuits_per_second": round(s.circuits_per_second, 2),
         }
+        if s.evicted:
+            out["evicted"] = s.evicted
         if s.slo_s is not None:
             out["slo_s"] = s.slo_s
             out["slo_misses"] = s.slo_misses
@@ -183,13 +226,15 @@ class Telemetry:
 
     def summary(self) -> dict:
         done = sum(s.completed for s in self.tenants.values())
-        t0 = min((s.first_submit for s in self.tenants.values()),
-                 default=0.0)
-        t1 = max((s.last_complete for s in self.tenants.values()),
-                 default=0.0)
-        slo_done = sum(s.completed for s in self.tenants.values()
-                       if s.slo_s is not None)
+        t0 = min((s.first_submit for s in self.tenants.values()), default=0.0)
+        t1 = max((s.last_complete for s in self.tenants.values()), default=0.0)
+        slo_done = sum(
+            s.completed + s.evicted
+            for s in self.tenants.values()
+            if s.slo_s is not None
+        )
         slo_misses = sum(s.slo_misses for s in self.tenants.values())
+        evicted = sum(s.evicted for s in self.tenants.values())
         out = {
             "tenants": [self.tenant_summary(c) for c in sorted(self.tenants)],
             "total_completed": done,
@@ -200,6 +245,18 @@ class Telemetry:
             "size_flushes": self.size_flushes,
             "deadline_flushes": self.deadline_flushes,
         }
+        if self.fused_launches:
+            out["fused_launches"] = self.fused_launches
+            out["fused_banks"] = self.fused_banks
+            out["multibank_launches"] = self.multibank_launches
+            out["banks_per_launch"] = round(
+                self.fused_banks / self.fused_launches, 2
+            )
+        if self.mesh_spills:
+            out["mesh_spills"] = self.mesh_spills
+            out["spilled_lanes"] = self.spilled_lanes
+        if evicted:
+            out["evicted"] = evicted
         if slo_done:
             out["slo_misses"] = slo_misses
             out["slo_attainment"] = round(1.0 - slo_misses / slo_done, 4)

@@ -436,9 +436,10 @@ def test_worker_pool_executor_matches_sequential(specs):
     assert np.array_equal(np.asarray(g_seq), np.asarray(g_pool))
 
 
-def test_oversized_batch_fails_futures_instead_of_wedging(specs):
-    """A batch wider than every worker resolves its futures with the
-    placement error instead of deadlocking the pump."""
+def test_oversized_batch_spills_to_mesh(specs):
+    """A batch wider than every worker no longer fails fast: it routes
+    through the whole-mesh sharded executor, completes with correct
+    fidelities, and the spill is visible in telemetry."""
     _, cfg7 = specs
     rt = GatewayRuntime(
         workers=[WorkerConfig("w1", 5)],
@@ -448,6 +449,38 @@ def test_oversized_batch_fails_futures_instead_of_wedging(specs):
         mode="async",
     )
     try:
+        theta, data = rows_for(cfg7, 2)
+        futs = [
+            rt.gateway.submit(
+                "c", cfg7.spec, (theta[i], data[i]), rt.dispatcher.clock()
+            )
+            for i in range(2)
+        ]
+        rt.dispatcher.kick()
+        got = np.asarray([np.asarray(f.result(timeout=60.0)) for f in futs])
+        ref = np.asarray(kops.vqc_fidelity(cfg7.spec, theta, data))
+        np.testing.assert_allclose(got, ref, atol=1e-6)
+        assert rt.telemetry.mesh_spills >= 1
+        assert rt.telemetry.spilled_lanes >= 2
+        assert any(wid == "mesh" for wid, _, _ in rt.dispatcher.batch_log)
+        assert not rt.dispatcher.errors
+    finally:
+        rt.close()
+
+
+def test_oversized_batch_fails_fast_when_spill_disabled(specs):
+    """mesh_spill=False restores the strict contract: futures resolve with
+    the placement error instead of deadlocking the pump."""
+    _, cfg7 = specs
+    rt = GatewayRuntime(
+        workers=[WorkerConfig("w1", 5)],
+        target=4,
+        lanes=4,
+        deadline=0.01,
+        mode="async",
+        mesh_spill=False,
+    )
+    try:
         theta, data = rows_for(cfg7, 1)
         fut = rt.gateway.submit(
             "c", cfg7.spec, (theta[0], data[0]), rt.dispatcher.clock()
@@ -455,5 +488,195 @@ def test_oversized_batch_fails_futures_instead_of_wedging(specs):
         rt.dispatcher.kick()
         with pytest.raises(RuntimeError, match="no worker fits"):
             fut.result(timeout=10.0)
+    finally:
+        rt.close()
+
+
+def test_sync_dispatcher_spills_oversized_batches(specs):
+    """The sync dispatcher spills too: an over-width bank executes on the
+    mesh inline with bit-correct results."""
+    from repro.core import shift_rule
+
+    _, cfg7 = specs
+    rt = GatewayRuntime(workers=[WorkerConfig("w1", 5)], deadline=0.01)
+    try:
+        theta, data = rows_for(cfg7, 3)
+        bank = shift_rule.build_shift_bank(theta[0], data)
+        got = rt.shift_executor(cfg7.spec, "c")(bank)
+        want = kops.vqc_fidelity_shiftbank(cfg7.spec, bank.theta, bank.data)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+        assert rt.telemetry.mesh_spills >= 1
+        assert rt.dispatcher.batch_log[0][0] == "mesh"
+    finally:
+        rt.close()
+
+
+def test_vmem_model_flags_deep_row_batches():
+    """batch_vmem_bytes: a 17-qubit row batch's statevector tile blows the
+    16 MB per-worker model (spill), a 7-qubit one does not."""
+    from repro.core import circuits
+    from repro.serve import WORKER_VMEM_BYTES, batch_vmem_bytes
+
+    def row_batch(spec, n):
+        members = [
+            PendingCircuit(key=spec, client_id="c", seq=i, arrival=0.0, payload=None)
+            for i in range(n)
+        ]
+        return CoalescedBatch(key=spec, members=members, created=0.0)
+
+    wide = circuits.build_quclassi_circuit(17, 1)
+    assert batch_vmem_bytes(row_batch(wide, 8)) > WORKER_VMEM_BYTES
+    narrow = circuits.build_quclassi_circuit(7, 1)
+    assert batch_vmem_bytes(row_batch(narrow, 8)) <= WORKER_VMEM_BYTES
+
+
+# ------------------------------------------------- preemptive SLO eviction
+def test_over_slo_batches_preemptively_evicted(specs):
+    """With evict_over_slo on, a ready batch whose members' SLO budgets
+    fully elapsed behind a stalled worker resolves with DeadlineExceeded
+    and is accounted (evicted + slo miss), instead of burning a slot on a
+    guaranteed miss."""
+    from repro.serve import DeadlineExceeded
+
+    cfg5, _ = specs
+    gate = threading.Event()
+    rt = GatewayRuntime(
+        workers=[WorkerConfig("w1", 5)],
+        target=2,
+        lanes=2,
+        deadline=0.01,
+        mode="async",
+        evict_over_slo=True,
+        kernel=gated_kernel({5}, gate),
+    )
+    try:
+        rt.gateway.register_client("t", slo_ms=150.0)
+        theta, data = rows_for(cfg5, 4)
+        now = rt.dispatcher.clock
+        first = [
+            rt.gateway.submit("t", cfg5.spec, (theta[i], data[i]), now())
+            for i in range(2)
+        ]
+        rt.dispatcher.kick()
+        assert wait_until(lambda: rt.dispatcher.in_flight_batches == 1)
+        # second batch can only wait in the ready queue (slot is stalled);
+        # its 150 ms SLO budget fully elapses -> preemptive eviction
+        second = [
+            rt.gateway.submit("t", cfg5.spec, (theta[i], data[i]), now())
+            for i in range(2, 4)
+        ]
+        rt.dispatcher.kick()
+        assert wait_until(
+            lambda: rt.telemetry.tenants["t"].evicted == 2, timeout=30.0
+        )
+        for f in second:
+            with pytest.raises(DeadlineExceeded):
+                f.result(timeout=10.0)
+        gate.set()
+        rt.dispatcher.drain()
+        stats = rt.telemetry.tenants["t"]
+        assert stats.evicted == 2
+        assert stats.slo_misses >= 2          # evictions count as misses
+        assert stats.completed == 2           # first batch still completed
+        assert stats.slo_attainment <= 0.5
+        assert rt.telemetry.summary()["evicted"] == 2
+        assert all(f.done for f in first)
+    finally:
+        gate.set()
+        rt.close()
+
+
+def test_eviction_spares_batches_with_best_effort_members():
+    """A mixed batch containing a best-effort member is never evicted —
+    that member's result is still wanted whenever it arrives."""
+    from repro.serve.async_dispatcher import AsyncDispatcher
+    from repro.serve.coalescer import CoalescedBatch as CB
+
+    g = Gateway(target=4, lanes=4, deadline=10.0)
+    g.register_client("slo", slo_ms=10.0)
+    g.register_client("be")
+    d = AsyncDispatcher(g, [WorkerConfig("w1", 5)], evict_over_slo=True)
+    try:
+        g.submit("slo", "k", None, now=0.0)
+        g.submit("be", "k", None, now=0.0)
+        (batch,) = g.flush(now=0.0)
+        assert not d._expired(batch, now=100.0)        # best-effort member
+        slo_m = next(m for m in batch.members if m.client_id == "slo")
+        slo_only = CB(key="k", members=[slo_m], created=0.0)
+        assert d._expired(slo_only, now=100.0)
+        assert not d._expired(slo_only, now=0.005)     # within budget
+    finally:
+        d.close()
+
+
+# ------------------------------------- mixed-bank SLO-aware deadline flush
+def test_mixed_slo_bank_buffer_flushes_at_min_member_budget(specs):
+    """Deterministic (virtual-clock) half: a shared ShiftGroupKey buffer
+    holding group subtasks of banks with DIFFERENT slo_ms flushes at the
+    MIN member budget — the tight tenant pulls the loose tenant's bank
+    forward with it."""
+    from repro.core import shift_rule
+    from repro.serve import ShiftGroupKey
+
+    cfg5, _ = specs
+    g = Gateway(target=128, lanes=128, deadline=10.0)
+    g.register_client("tight", slo_ms=500.0)
+    g.register_client("loose", slo_ms=60_000.0)
+    theta, data = rows_for(cfg5, 8)
+    bank_a = shift_rule.build_shift_bank(theta[0], data[:4])
+    bank_b = shift_rule.build_shift_bank(theta[1], data[4:])
+    key = ShiftGroupKey(cfg5.spec, False)
+    for grp in range(bank_b.n_groups):
+        g.submit("loose", key, (bank_b, grp), now=0.0, lanes=4)
+    assert g.pump(now=0.0) == []
+    # loose alone: flush at min(deadline, 0.5 * 60 s) = the 10 s deadline
+    assert g.next_deadline() == pytest.approx(10.0)
+    for grp in range(bank_a.n_groups):
+        g.submit("tight", key, (bank_a, grp), now=0.0, lanes=4)
+    assert g.pump(now=0.0) == []
+    # tight joins the SAME buffer: min member budget = 0.5 * 0.5 s
+    assert g.next_deadline() == pytest.approx(0.25)
+    assert g.pump(now=0.2) == []
+    (batch,) = g.pump(now=0.25)
+    assert batch.by_deadline
+    assert batch.n == bank_a.n_groups + bank_b.n_groups
+    assert {m.client_id for m in batch.members} == {"tight", "loose"}
+
+
+def test_mixed_slo_banks_stay_bit_exact_after_fusion(specs):
+    """Real-execution half: the mixed-SLO shared buffer fuses into
+    multi-bank launches through the async runtime and every fidelity is
+    bit-identical to the per-bank implicit path."""
+    from repro.core import shift_rule
+    from repro.serve import ShiftGroupKey
+
+    cfg5, _ = specs
+    spec = cfg5.spec
+    rt = GatewayRuntime(deadline=0.2, mode="async")
+    try:
+        rt.gateway.register_client("tight", slo_ms=500.0)
+        rt.gateway.register_client("loose", slo_ms=60_000.0)
+        theta, data = rows_for(cfg5, 8)
+        bank_a = shift_rule.build_shift_bank(theta[0], data[:4])
+        bank_b = shift_rule.build_shift_bank(theta[1], data[4:])
+        key = ShiftGroupKey(spec, False)
+        now = rt.dispatcher.clock
+        futs_a = [
+            rt.gateway.submit("tight", key, (bank_a, g), now(), lanes=4)
+            for g in range(bank_a.n_groups)
+        ]
+        futs_b = [
+            rt.gateway.submit("loose", key, (bank_b, g), now(), lanes=4)
+            for g in range(bank_b.n_groups)
+        ]
+        rt.dispatcher.kick()
+        got_a = jnp.concatenate([f.result(timeout=30.0) for f in futs_a])
+        got_b = jnp.concatenate([f.result(timeout=30.0) for f in futs_b])
+        want_a = kops.vqc_fidelity_shiftbank(spec, bank_a.theta, bank_a.data)
+        want_b = kops.vqc_fidelity_shiftbank(spec, bank_b.theta, bank_b.data)
+        assert np.array_equal(np.asarray(got_a), np.asarray(want_a))
+        assert np.array_equal(np.asarray(got_b), np.asarray(want_b))
+        assert rt.telemetry.fused_launches >= 1
+        assert rt.telemetry.fused_banks >= 2
     finally:
         rt.close()

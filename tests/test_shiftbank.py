@@ -304,14 +304,67 @@ def test_shift_executors_accept_materialized_banks():
         np.asarray(shift_rule.run_bank(run, mat)), want, atol=1e-5)
 
 
-def test_gateway_shift_groups_coalesce_within_bank_only():
-    """Different banks (different base angles) never share a kernel launch."""
+def test_gateway_shift_groups_coalesce_across_same_spec_banks():
+    """Keys are structural: group subtasks of DIFFERENT banks of the same
+    spec + shift rule share a key (they fuse into one multi-bank launch);
+    different specs or shift rules never share one."""
     from repro.serve import ShiftGroupKey
     spec, theta, data = _setup(5, 1, b=2)
-    k1 = ShiftGroupKey(spec, 1)
-    k2 = ShiftGroupKey(spec, 2)
-    assert k1 != k2 and hash(k1) != hash(k2)
-    assert k1 == ShiftGroupKey(spec, 1)
+    other = circuits.build_quclassi_circuit(5, 2)
+    assert ShiftGroupKey(spec, False) == ShiftGroupKey(spec, False)
+    assert ShiftGroupKey(spec, False) != ShiftGroupKey(spec, True)
+    assert ShiftGroupKey(spec, False) != ShiftGroupKey(other, False)
+
+
+def test_gateway_fuses_same_spec_banks_into_one_launch():
+    """Two tenants' banks of one spec coalesce into multi-bank launches:
+    fewer kernel launches than banks, results bit-identical to the per-bank
+    implicit path."""
+    from repro.serve import GatewayRuntime
+    spec, theta_a, data = _setup(5, 2, b=4)
+    theta_b = theta_a + 0.3
+    bank_a = shift_rule.build_shift_bank(theta_a, data)
+    bank_b = shift_rule.build_shift_bank(theta_b, data)
+    rt = GatewayRuntime(deadline=30.0)
+    rt.gateway.register_client("tenant-a")
+    rt.gateway.register_client("tenant-b")
+    # submit both banks' group subtasks before any drain: one shared buffer
+    from repro.serve import ShiftGroupKey
+    key = ShiftGroupKey(spec, False)
+    futs = []
+    for bank in (bank_a, bank_b):
+        for g in range(bank.n_groups):
+            futs.append(rt.gateway.submit(
+                "tenant-a" if bank is bank_a else "tenant-b", key, (bank, g),
+                now=rt.dispatcher.clock(), lanes=bank.n_samples))
+    rt.dispatcher.drain()
+    n = bank_a.n_groups
+    got_a = jnp.concatenate([f.value for f in futs[:n]])
+    got_b = jnp.concatenate([f.value for f in futs[n:]])
+    want_a = kops.vqc_fidelity_shiftbank(spec, bank_a.theta, bank_a.data)
+    want_b = kops.vqc_fidelity_shiftbank(spec, bank_b.theta, bank_b.data)
+    assert np.array_equal(np.asarray(got_a), np.asarray(want_a))
+    assert np.array_equal(np.asarray(got_b), np.asarray(want_b))
+    # both banks rode ONE fused launch (2 banks, 1 kernel call)
+    assert rt.telemetry.fused_launches == 1
+    assert rt.telemetry.fused_banks == 2
+    assert rt.telemetry.multibank_launches == 1
+    assert len(rt.dispatcher.batch_log) == 1
+
+
+def test_coalescer_lane_target_flushes_multilane_buffers():
+    """target_lanes: a buffer of few multi-lane members (shift-group
+    subtasks) size-flushes once its occupied kernel lanes hit the target,
+    without waiting for `target` members or the deadline."""
+    from repro.serve.coalescer import Coalescer, PendingCircuit
+    co = Coalescer(target=128, lanes=128, deadline=100.0, target_lanes=256)
+    out = []
+    for i in range(5):
+        out += co.add(PendingCircuit(key="k", client_id="c", seq=i,
+                                     arrival=0.0, payload=None, lanes=64))
+    # members 1-4 reach 256 lanes -> one size-triggered batch of 4
+    assert len(out) == 1 and out[0].n == 4
+    assert co.buffered == 1
 
 
 def test_grad_shift_through_gateway_shift_executor():
@@ -365,6 +418,224 @@ def test_dispatcher_shift_kernel_injectable():
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(kops.vqc_fidelity(spec, mat.theta,
                                                       mat.data)), atol=1e-5)
+
+
+# -------------------------------------------------- fused multi-bank kernel
+def _banks(spec, k, b=3, seed=0, four_term=False):
+    key = jax.random.PRNGKey(seed)
+    banks = []
+    for i in range(k):
+        theta = jax.random.uniform(jax.random.fold_in(key, i),
+                                   (spec.n_theta,), jnp.float32,
+                                   minval=0.0, maxval=np.pi)
+        data = jax.random.uniform(jax.random.fold_in(key, 100 + i),
+                                  (b + i, spec.n_data), jnp.float32,
+                                  minval=0.0, maxval=np.pi)
+        banks.append(shift_rule.build_shift_bank(theta, data,
+                                                 four_term=four_term))
+    return banks
+
+
+@pytest.mark.parametrize("qc,nl", [(5, 1), (7, 3)])
+def test_multibank_kernel_bit_identical_to_per_bank(qc, nl):
+    """K same-spec banks fused into one launch: per-bank blocks are
+    BIT-identical to K separate prefix-reuse launches (per-lane math is
+    untouched by lane packing)."""
+    spec = circuits.build_quclassi_circuit(qc, nl)
+    banks = _banks(spec, 3, seed=qc)
+    outs = kops.vqc_fidelity_shiftgroups_multibank(
+        spec, tuple(b.theta for b in banks), tuple(b.data for b in banks),
+        False, tuple(tuple(range(b.n_groups)) for b in banks))
+    for bank, out in zip(banks, outs):
+        ref = kops.vqc_fidelity_shiftgroups(spec, bank.theta, bank.data)
+        assert out.shape == ref.shape
+        assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_multibank_kernel_partial_group_sets():
+    """Banks may request different group subsets; each gets exactly its
+    rows, pulled from the union-group fused launch."""
+    spec = circuits.build_quclassi_circuit(5, 2)
+    banks = _banks(spec, 2)
+    gs = ((0, 2, 5), (1, 2, spec.n_theta * 2))
+    outs = kops.vqc_fidelity_shiftgroups_multibank(
+        spec, tuple(b.theta for b in banks), tuple(b.data for b in banks),
+        False, gs)
+    for bank, got, groups in zip(banks, outs, gs):
+        want = kops.vqc_fidelity_shiftgroups(spec, bank.theta, bank.data,
+                                             False, groups)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6)
+
+
+def test_multibank_fallback_for_unstructured_spec():
+    """No SWAP-test product structure -> per-bank materialized fallback,
+    same results (not fused, still correct)."""
+    spec = CircuitSpec(n_qubits=2, ops=(Op("ry", (0,), ("theta", 0)),
+                                        Op("ry", (1,), ("data", 0))),
+                       n_theta=1, n_data=1)
+    t1 = jnp.asarray([[0.3], [0.9]], jnp.float32)
+    t2 = jnp.asarray([[1.1]], jnp.float32)
+    d1 = jnp.asarray([[0.1], [0.4]], jnp.float32)
+    d2 = jnp.asarray([[0.8]], jnp.float32)
+    outs = kops.vqc_fidelity_shiftgroups_multibank(
+        spec, (t1, t2), (d1, d2), False, ((0, 1, 2), (0, 1)))
+    np.testing.assert_allclose(
+        np.asarray(outs[0]),
+        np.asarray(kops.vqc_fidelity_shiftgroups(spec, t1, d1, False,
+                                                 (0, 1, 2))), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(outs[1]),
+        np.asarray(kops.vqc_fidelity_shiftgroups(spec, t2, d2, False,
+                                                 (0, 1))), atol=1e-6)
+
+
+def test_group_bank_sets_and_run_bank_set():
+    spec5 = circuits.build_quclassi_circuit(5, 1)
+    spec7 = circuits.build_quclassi_circuit(7, 1)
+    b5 = _banks(spec5, 2)
+    b7 = _banks(spec7, 1)
+    sets = shift_rule.group_bank_sets(
+        [(spec5, b5[0]), (spec7, b7[0]), (spec5, b5[1])])
+    assert set(sets) == {(spec5, False), (spec7, False)}
+    assert sets[(spec5, False)] == b5
+    # fused bank-set executor vs per-bank run_bank
+    ex = kops.multibank_executor(spec5)
+    assert ex.accepts_bankset
+    fused = shift_rule.run_bank_set(ex, b5)
+    plain = shift_rule.run_bank_set(kops.shiftbank_executor(spec5), b5)
+    for f, p in zip(fused, plain):
+        assert np.array_equal(np.asarray(f), np.asarray(p))
+
+
+def test_worker_multibank_executor_matches_per_bank():
+    """Fused multi-bank scheduling across workers: per-bank flat results
+    match the materialized oracle for every bank in the set."""
+    from repro.comanager import dataplane
+    spec = circuits.build_quclassi_circuit(5, 2)
+    banks = _banks(spec, 3)
+    n_sub = sum(b.n_groups for b in banks)
+    assignment = dataplane.round_robin_assignment(n_sub, 2)
+    run = dataplane.worker_multibank_executor(spec, assignment, 2)
+    assert run.accepts_bankset
+    for bank, flat in zip(banks, run(banks)):
+        mat = bank.materialize()
+        want = kops.vqc_fidelity(spec, mat.theta, mat.data)
+        np.testing.assert_allclose(np.asarray(flat), np.asarray(want),
+                                   atol=1e-5)
+
+
+def test_worker_multibank_executor_validates():
+    from repro.comanager import dataplane
+    spec = circuits.build_quclassi_circuit(5, 1)
+    banks = _banks(spec, 2)
+    run = dataplane.worker_multibank_executor(spec, [0, 1], 2)
+    with pytest.raises(ValueError, match="subtasks"):
+        run(banks)
+
+
+def test_sharded_executor_run_banks():
+    """The mesh-sharded fused multi-bank path (the dispatcher's spill
+    executor) agrees with the local fused kernel."""
+    from repro.comanager import dataplane
+    from repro.launch.mesh import make_host_mesh
+    spec = circuits.build_quclassi_circuit(5, 2)
+    banks = _banks(spec, 2)
+    gs = tuple(tuple(range(b.n_groups)) for b in banks)
+    args = (tuple(b.theta for b in banks), tuple(b.data for b in banks))
+    run = dataplane.sharded_executor(spec, make_host_mesh())
+    got = run.run_banks(*args, False, gs)
+    want = kops.vqc_fidelity_shiftgroups_multibank(spec, *args, False, gs)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+
+
+# ------------------------------------------- VMEM-aware checkpoint spilling
+def test_wide_register_selects_spill_fast_path():
+    """m = 8 at the production tile (TB = 512): the checkpoint set exceeds
+    the VMEM budget and the planner selects depth-tiled spilling — the
+    prefix-reuse fast path, NOT materialize()."""
+    spec = circuits.build_quclassi_circuit(17, 3)     # m = 8
+    assert K.build_shift_plan(spec) is not None       # fast path applies
+    info = K.shift_execution_info(spec, 512)
+    assert info["mode"] == "spill"
+    assert info["n_tiles"] > 1
+    assert info["launches"] == info["n_tiles"] + 1
+    assert info["vmem_bytes"] <= info["vmem_budget"]
+    # the paper's narrow registers stay on the single-sweep path
+    narrow = K.shift_execution_info(circuits.build_quclassi_circuit(7, 3),
+                                    512)
+    assert narrow["mode"] == "fused" and narrow["launches"] == 1
+
+
+def test_spilled_execution_matches_single_sweep_m8():
+    """Numeric agreement of the spilled path on a genuinely wide register
+    (m = 8, register-local states only — cheap): forced tiny budget vs the
+    unconstrained single sweep."""
+    spec = circuits.build_quclassi_circuit(17, 1)
+    theta = jax.random.uniform(jax.random.PRNGKey(2), (spec.n_theta,),
+                               jnp.float32, minval=0.0, maxval=np.pi)
+    data = jax.random.uniform(jax.random.PRNGKey(3), (2, spec.n_data),
+                              jnp.float32, minval=0.0, maxval=np.pi)
+    bank = shift_rule.build_shift_bank(theta, data)
+    plan = K.build_shift_plan(spec)
+    budget = K.checkpoint_vmem_bytes(plan, 4, 128)    # fits ~4 checkpoints
+    spilled = K.vqc_shift_fidelity(spec, bank.theta, bank.data,
+                                   vmem_budget=budget)
+    full = K.vqc_shift_fidelity(spec, bank.theta, bank.data)
+    np.testing.assert_allclose(np.asarray(spilled), np.asarray(full),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("four_term", [False, True])
+def test_spilled_execution_matches_materialized(four_term):
+    """Spill tiling vs the dense materialized oracle at a testable width."""
+    spec = circuits.build_quclassi_circuit(7, 3)
+    theta = jax.random.uniform(jax.random.PRNGKey(5), (spec.n_theta,),
+                               jnp.float32, minval=0.0, maxval=np.pi)
+    data = jax.random.uniform(jax.random.PRNGKey(6), (3, spec.n_data),
+                              jnp.float32, minval=0.0, maxval=np.pi)
+    bank = shift_rule.build_shift_bank(theta, data, four_term=four_term)
+    plan = K.build_shift_plan(spec)
+    budget = K.checkpoint_vmem_bytes(plan, 3, 128)
+    tiles = K.plan_depth_tiles(plan, range(spec.n_theta), 128, budget)
+    assert tiles is not None and len(tiles) > 1
+    got = K.vqc_shift_fidelity(spec, bank.theta, bank.data,
+                               four_term=four_term, vmem_budget=budget)
+    mat = bank.materialize()
+    want = ref.vqc_fidelity_ref(spec, mat.theta, mat.data).reshape(
+        bank.n_groups, bank.n_samples)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_spilled_group_subset():
+    """Spilling composes with partial group requests (serving-path shape)."""
+    spec = circuits.build_quclassi_circuit(5, 3)
+    theta = jax.random.uniform(jax.random.PRNGKey(7), (spec.n_theta,),
+                               jnp.float32, minval=0.0, maxval=np.pi)
+    data = jax.random.uniform(jax.random.PRNGKey(8), (2, spec.n_data),
+                              jnp.float32, minval=0.0, maxval=np.pi)
+    groups = (0, 1, 4, 9, spec.n_theta * 2)
+    plan = K.build_shift_plan(spec)
+    budget = K.checkpoint_vmem_bytes(plan, 2, 128)
+    got = K.vqc_shift_fidelity(spec, theta[None].repeat(2, 0), data,
+                               groups=groups, vmem_budget=budget)
+    want = K.vqc_shift_fidelity(spec, theta[None].repeat(2, 0), data,
+                                groups=groups)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_plan_depth_tiles_boundaries():
+    spec = circuits.build_quclassi_circuit(7, 3)
+    plan = K.build_shift_plan(spec)
+    assert K.plan_depth_tiles(plan, range(spec.n_theta), 128,
+                              K.VMEM_BUDGET_BYTES) is None   # narrow: fits
+    budget = K.checkpoint_vmem_bytes(plan, 3, 128)
+    tiles = K.plan_depth_tiles(plan, range(spec.n_theta), 128, budget)
+    # tiles partition [first_pos, n_train) contiguously, ascending
+    assert tiles[0][0] == 0 and tiles[-1][1] == len(plan.train_ops)
+    for (a, b), (c, d) in zip(tiles, tiles[1:]):
+        assert b == c and a < b
 
 
 def test_trainer_bank_mode_validation():
