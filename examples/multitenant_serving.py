@@ -1,14 +1,16 @@
 """Multi-tenant system demo: four concurrent clients with heterogeneous
 circuit widths share four heterogeneous quantum workers (5/10/15/20 qubits)
 under the co-Manager (Algorithm 2) — including a mid-run worker failure and
-its 3-missed-heartbeats eviction + requeue recovery.
+its 3-missed-heartbeats eviction + requeue recovery.  Driven through the
+typed ``repro.api`` facade (``ClusterConfig`` + ``QuantumCluster.simulate``
+replacing the loose ``SystemSimulation`` kwarg pile).
 
 Run:  PYTHONPATH=src python examples/multitenant_serving.py
 """
 from collections import Counter
 
+from repro.api import ClusterConfig, QuantumCluster, SimulationConfig
 from repro.comanager import tenancy
-from repro.comanager.simulation import SystemSimulation
 from repro.comanager.worker import WorkerConfig
 
 
@@ -19,13 +21,14 @@ def run(tenancy_mode: str, failures=None):
         tenancy.JobSpec("carol-7q1l", 7, 1, 240, service_override=0.33),
         tenancy.JobSpec("dave-7q2l", 7, 2, 240, service_override=0.42),
     ]
-    workers = [WorkerConfig(f"w{i+1}", q, contention=0.5)
-               for i, q in enumerate((5, 10, 15, 20))]
-    sim = SystemSimulation(workers, jobs, tenancy=tenancy_mode,
-                           fair_queue=True, classical_overhead=0.01,
-                           worker_failures=failures or {})
-    rep = sim.run()
-    return sim, rep
+    cluster = QuantumCluster(ClusterConfig(
+        workers=tuple(WorkerConfig(f"w{i+1}", q, contention=0.5)
+                      for i, q in enumerate((5, 10, 15, 20))),
+        simulation=SimulationConfig(tenancy=tenancy_mode, fair_queue=True,
+                                    classical_overhead=0.01),
+    ))
+    rep = cluster.simulate(jobs, worker_failures=failures or {})
+    return cluster, rep
 
 
 def main():

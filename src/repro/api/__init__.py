@@ -1,0 +1,71 @@
+"""``repro.api`` — the public surface of the co-managed quantum system.
+
+Two layers:
+
+* ``ExecutionBackend`` protocol (``backend``): one capability-declaring
+  contract over all five executor families (per-worker batched, pooled,
+  multi-bank, mesh-sharded, whole-mesh spill), with adapters that remain
+  drop-in legacy ``shift_rule.Executor`` callables.
+* ``QuantumCluster`` / ``Session`` facade (``cluster``): typed configs
+  (``ClusterConfig``, ``TenantPolicy``, ``ServingConfig``,
+  ``SimulationConfig``) and per-tenant session handles that front the
+  trainer, the sync/async serving gateways, and the virtual-clock
+  simulation through one object.
+
+Heavy submodules load lazily (PEP 562): ``repro.core.shift_rule`` imports
+``repro.api.capabilities`` at module scope, while ``repro.api.backend``
+imports ``repro.core.shift_rule`` — eager package imports here would turn
+that into a partially-initialized-module crash for anyone importing
+``repro.core.shift_rule`` first.
+"""
+
+from repro.api.capabilities import (
+    MATERIALIZED_ONLY,
+    Capabilities,
+    capabilities_of,
+    declare,
+)
+
+_LAZY = {
+    "BACKEND_KINDS": "repro.api.backend",
+    "BatchedWorkerBackend": "repro.api.backend",
+    "CallableBackend": "repro.api.backend",
+    "CostModel": "repro.api.backend",
+    "ExecutionBackend": "repro.api.backend",
+    "MeshSpillBackend": "repro.api.backend",
+    "MultibankWorkerBackend": "repro.api.backend",
+    "PooledWorkerBackend": "repro.api.backend",
+    "ShardedBackend": "repro.api.backend",
+    "as_backend": "repro.api.backend",
+    "make_backend": "repro.api.backend",
+    "ClusterConfig": "repro.api.config",
+    "ServingConfig": "repro.api.config",
+    "SimulationConfig": "repro.api.config",
+    "TenantPolicy": "repro.api.config",
+    "default_workers": "repro.api.config",
+    "QuantumCluster": "repro.api.cluster",
+    "Session": "repro.api.cluster",
+}
+
+__all__ = sorted(
+    [
+        "Capabilities",
+        "MATERIALIZED_ONLY",
+        "capabilities_of",
+        "declare",
+        *_LAZY,
+    ]
+)
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(target), name)
+
+
+def __dir__():
+    return __all__

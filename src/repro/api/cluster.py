@@ -1,0 +1,255 @@
+"""``QuantumCluster`` / ``Session``: the one tenant-facing entry point.
+
+The paper's co-management story is ONE control plane placing any client's
+circuits on any worker; this facade is its API counterpart — one object
+(``QuantumCluster``) that owns the worker fleet, the serving gateway, the
+execution backends, and the virtual-clock simulation, and one per-tenant
+handle (``Session``) through which a client submits circuits, trains, and
+reads its telemetry.  The same session object rides the synchronous
+dispatcher, the async worker-pool runtime, and the virtual-clock
+simulation, because all three consume the ``ExecutionBackend`` protocol
+and the gateway's tenant registry underneath.
+
+    cluster = QuantumCluster(ClusterConfig(serving=ServingConfig(mode="async")))
+    sess = cluster.session("alice", TenantPolicy(priority=0, slo_ms=500.0))
+    fut = sess.submit(spec, theta, data)          # one circuit
+    report = sess.train(qcfg, train_set, test_set)  # Algorithm 1, served
+    print(sess.telemetry())
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.api.backend import ExecutionBackend, make_backend
+from repro.api.config import ClusterConfig, TenantPolicy
+from repro.core.sim import CircuitSpec
+
+
+class QuantumCluster:
+    """Facade over the co-managed multi-tenant system.
+
+    Lazily materializes a ``serve.GatewayRuntime`` (per its
+    ``ServingConfig``) the first time real execution is needed, so
+    simulation-only and backend-only uses never spin up serving threads.
+    Context-manage it (or call ``close()``) to stop async runtimes.
+    """
+
+    def __init__(self, config: ClusterConfig | None = None, **overrides):
+        if config is None:
+            config = ClusterConfig(**overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        self.config = config
+        self._runtime = None
+        self._sessions: dict[str, "Session"] = {}
+
+    # ------------------------------------------------------------ runtime
+    @property
+    def runtime(self):
+        """The real-execution serving runtime (built on first use)."""
+        if self._runtime is None:
+            from repro.serve.dispatcher import GatewayRuntime
+
+            self._runtime = GatewayRuntime(
+                list(self.config.workers),
+                **self.config.serving.runtime_kwargs(),
+            )
+        return self._runtime
+
+    @property
+    def telemetry(self):
+        return self.runtime.telemetry
+
+    def close(self) -> None:
+        if self._runtime is not None:
+            self._runtime.close()
+            self._runtime = None
+        # a rebuilt runtime starts with an empty tenant registry: existing
+        # handles must re-register (with their full policy) on next use, and
+        # the session table resets so tenants can be reconfigured.
+        for sess in self._sessions.values():
+            sess._registered = False
+        self._sessions.clear()
+
+    def __enter__(self) -> "QuantumCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------- sessions
+    def session(
+        self,
+        tenant: str,
+        policy: TenantPolicy | None = None,
+        *,
+        bank_mode: str | None = None,
+    ) -> "Session":
+        """Open (or retrieve) the tenant's session handle.
+
+        Omitted arguments mean "whatever the session already has" (new
+        sessions default to ``TenantPolicy()`` and ``bank_mode='auto'``);
+        re-opening an existing session with a DIFFERENT explicit policy or
+        bank mode is an error — the gateway's scheduler state is
+        per-tenant, not per-handle.  ``close()`` resets the table so
+        tenants can be reconfigured."""
+        if bank_mode not in (None, "auto", "implicit", "materialized"):
+            raise ValueError(f"unknown bank_mode {bank_mode!r}")
+        existing = self._sessions.get(tenant)
+        if existing is not None:
+            if (policy is not None and existing.policy != policy) or (
+                bank_mode is not None and existing.bank_mode != bank_mode
+            ):
+                raise ValueError(
+                    f"session {tenant!r} already open with a different "
+                    f"policy/bank_mode; close the cluster to reconfigure"
+                )
+            return existing
+        sess = Session(self, tenant, policy or TenantPolicy(), bank_mode or "auto")
+        self._sessions[tenant] = sess
+        return sess
+
+    @property
+    def policies(self) -> dict[str, TenantPolicy]:
+        return {t: s.policy for t, s in self._sessions.items()}
+
+    # ----------------------------------------------------------- backends
+    def backend(self, kind: str, spec: CircuitSpec, **kw) -> ExecutionBackend:
+        """Build one of the five executor-family adapters against this
+        cluster's fleet (worker count defaults to the configured fleet)."""
+        if kind in ("batched", "pooled", "multibank"):
+            kw.setdefault("n_workers", len(self.config.workers))
+        return make_backend(kind, spec, **kw)
+
+    # --------------------------------------------------------- simulation
+    def simulate(
+        self,
+        jobs,
+        *,
+        worker_failures: dict | None = None,
+        arrivals: dict | None = None,
+        simulation=None,
+    ):
+        """Run the virtual-clock system simulation for ``jobs`` under this
+        cluster's fleet and ``SimulationConfig``, with every open session's
+        ``TenantPolicy`` forwarded to the gateway (weights, priorities,
+        SLOs).  Returns the ``SimulationReport``."""
+        from repro.comanager.simulation import SystemSimulation
+
+        sim_cfg = simulation or self.config.simulation
+        policies = self.policies
+        kw = sim_cfg.simulation_kwargs()
+        if policies and kw.get("gateway"):
+            # forward UNFILTERED: a session tenant absent from the submitted
+            # jobs hits SystemSimulation's unknown-id validation instead of
+            # silently losing its policy (the typo class this PR eliminates).
+            kw["tenant_weights"] = {t: p.weight for t, p in policies.items()}
+            kw["tenant_priorities"] = {t: p.priority for t, p in policies.items()}
+            kw["tenant_slos_ms"] = {
+                t: p.slo_ms for t, p in policies.items() if p.slo_ms is not None
+            }
+        sim = SystemSimulation(
+            list(self.config.workers),
+            list(jobs),
+            worker_failures=worker_failures,
+            arrivals=arrivals,
+            **kw,
+        )
+        return sim.run()
+
+
+class Session:
+    """One tenant's handle on the cluster: submit, train, observe.
+
+    Created via ``QuantumCluster.session`` — constructing it registers the
+    tenant (with its full ``TenantPolicy``) in the serving gateway the
+    first time real execution is touched."""
+
+    def __init__(
+        self,
+        cluster: QuantumCluster,
+        tenant: str,
+        policy: TenantPolicy,
+        bank_mode: str,
+    ):
+        self.cluster = cluster
+        self.tenant = tenant
+        self.policy = policy
+        self.bank_mode = bank_mode
+        self._registered = False
+
+    # ---------------------------------------------------------- plumbing
+    def _gateway(self):
+        gw = self.cluster.runtime.gateway
+        if not self._registered:
+            if self.tenant not in gw.tenants:
+                gw.register_client(self.tenant, **self.policy.register_kwargs())
+            self._registered = True
+        return gw
+
+    def executor(self, spec: CircuitSpec):
+        """The gateway-backed ``shift_rule.Executor`` for this tenant.
+
+        ``bank_mode='implicit'`` (or 'auto') returns the shift-aware
+        executor: implicit banks enter as (param, shift) group subtasks
+        and coalesce across tenants into fused multi-bank launches;
+        'materialized' returns the per-row executor."""
+        self._gateway()
+        rt = self.cluster.runtime
+        kw = dict(
+            weight=self.policy.weight,
+            priority=self.policy.priority,
+            slo_ms=self.policy.slo_ms,
+        )
+        if self.bank_mode == "materialized":
+            return rt.executor(spec, self.tenant, **kw)
+        return rt.shift_executor(spec, self.tenant, **kw)
+
+    # ----------------------------------------------------------- serving
+    def submit(self, spec: CircuitSpec, theta, data):
+        """Admit one circuit; returns its ``CircuitFuture``.  Call
+        ``drain()`` (or keep submitting) to force partial batches out."""
+        gw = self._gateway()
+        rt = self.cluster.runtime
+        fut = gw.submit(self.tenant, spec, (theta, data), now=rt.dispatcher.clock())
+        rt.dispatcher.kick()
+        return fut
+
+    def drain(self) -> int:
+        """Flush partial coalescer buffers and run everything pending."""
+        return self.cluster.runtime.dispatcher.drain()
+
+    # ---------------------------------------------------------- training
+    def train(self, qcfg, train_set, test_set, **train_kwargs):
+        """Run Algorithm-1 training for this tenant through the cluster's
+        serving runtime (``core.trainer.train`` with this session's policy
+        and bank mode pre-wired)."""
+        from repro.core import trainer
+
+        self._gateway()
+        return trainer.train(
+            qcfg,
+            train_set,
+            test_set,
+            gateway=self.cluster.runtime,
+            client_id=self.tenant,
+            bank_mode=self.bank_mode,
+            policy=self.policy,
+            **train_kwargs,
+        )
+
+    # --------------------------------------------------------- telemetry
+    def telemetry(self) -> Optional[dict]:
+        """This tenant's slice of the gateway telemetry summary (latency
+        percentiles, throughput, SLO attainment), or None before any
+        completed work."""
+        summary = self.cluster.runtime.telemetry.summary()
+        for row in summary.get("tenants", []):
+            if row.get("client") == self.tenant:
+                return row
+        return None
+
+
+__all__ = ["QuantumCluster", "Session"]

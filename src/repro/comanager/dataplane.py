@@ -20,7 +20,12 @@ Both executors also accept IMPLICIT ``shift_rule.ShiftBank``s (call
 ``run(bank)``): the schedulable unit then becomes the (param, shift) group
 and execution goes through the prefix-reuse kernel — same bank-order
 results, a fraction of the gate applications and angle traffic.
+
+Every factory here returns a ``declare``-d executor; the
+``repro.api.backend`` adapters lift them into the ``ExecutionBackend``
+protocol.
 """
+
 from __future__ import annotations
 
 from typing import Callable, Sequence
@@ -41,15 +46,18 @@ import inspect as _inspect
 _SM_SKIP_CHECKS = (
     {"check_vma": False}
     if "check_vma" in _inspect.signature(_shard_map).parameters
-    else {"check_rep": False})
+    else {"check_rep": False}
+)
 
+from repro.api.capabilities import declare
 from repro.core import shift_rule
 from repro.core.sim import CircuitSpec
 from repro.kernels import ops as kops
 
 
-def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
-                            n_workers: int):
+def worker_batched_executor(
+    spec: CircuitSpec, assignment: Sequence[int], n_workers: int
+):
     """Executor that mimics per-worker execution.
 
     Materialized banks: ``assignment[i] = worker index for bank row i``.
@@ -65,6 +73,7 @@ def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
     distributes suffix-replay subtasks instead of materialized rows.
     """
     import numpy as np
+
     assignment = np.asarray(assignment)
     # stable grouping permutation: rows sorted by worker, ties in bank order,
     # so each worker's group preserves its clients' submission order.
@@ -76,11 +85,10 @@ def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
     def _run_rows(theta_bank: jnp.ndarray, data_bank: jnp.ndarray) -> jnp.ndarray:
         groups = []
         for w in range(n_workers):
-            rows = order[bounds[w]:bounds[w + 1]]
+            rows = order[bounds[w] : bounds[w + 1]]
             if rows.size == 0:
                 continue
-            groups.append(kops.vqc_fidelity(spec, theta_bank[rows],
-                                            data_bank[rows]))
+            groups.append(kops.vqc_fidelity(spec, theta_bank[rows], data_bank[rows]))
         return jnp.concatenate(groups)[inverse_j]
 
     def _run_shiftbank(bank: shift_rule.ShiftBank) -> jnp.ndarray:
@@ -92,16 +100,23 @@ def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
                 return _run_rows(mat.theta, mat.data)
             raise ValueError(
                 f"assignment must cover the bank's {bank.n_groups} groups or "
-                f"{bank.n_circuits} rows, got {len(assignment)} entries")
+                f"{bank.n_circuits} rows, got {len(assignment)} entries"
+            )
         outs = []
         for w in range(n_workers):
-            grp = order[bounds[w]:bounds[w + 1]]
+            grp = order[bounds[w] : bounds[w + 1]]
             if grp.size == 0:
                 continue
-            outs.append(kops.vqc_fidelity_shiftgroups(
-                spec, bank.theta, bank.data, bank.four_term,
-                tuple(int(g) for g in grp)))
-        stacked = jnp.concatenate(outs, 0)[inverse_j]    # (n_groups, B)
+            outs.append(
+                kops.vqc_fidelity_shiftgroups(
+                    spec,
+                    bank.theta,
+                    bank.data,
+                    bank.four_term,
+                    tuple(int(g) for g in grp),
+                )
+            )
+        stacked = jnp.concatenate(outs, 0)[inverse_j]  # (n_groups, B)
         return stacked.reshape(-1)
 
     def run(theta_bank, data_bank=None):
@@ -109,8 +124,7 @@ def worker_batched_executor(spec: CircuitSpec, assignment: Sequence[int],
             return _run_shiftbank(theta_bank)
         return _run_rows(theta_bank, data_bank)
 
-    run.accepts_shiftbank = True
-    return run
+    return declare(run, shiftbank=True)
 
 
 def round_robin_assignment(n_circuits: int, n_workers: int):
@@ -121,8 +135,12 @@ def round_robin_assignment(n_circuits: int, n_workers: int):
     return [i % n_workers for i in range(n_circuits)]
 
 
-def worker_pool_executor(spec: CircuitSpec, assignment: Sequence[int],
-                         n_workers: int, max_threads: int | None = None):
+def worker_pool_executor(
+    spec: CircuitSpec,
+    assignment: Sequence[int],
+    n_workers: int,
+    max_threads: int | None = None,
+):
     """``worker_batched_executor`` with OVERLAPPING per-worker execution.
 
     The sequential executor runs each worker's group one after another on
@@ -144,12 +162,13 @@ def worker_pool_executor(spec: CircuitSpec, assignment: Sequence[int],
     inverse = np.argsort(order, kind="stable")
     bounds = np.searchsorted(assignment[order], np.arange(n_workers + 1))
     inverse_j = jnp.asarray(inverse)
-    pool = ThreadPoolExecutor(max_workers=max_threads or n_workers,
-                              thread_name_prefix="dataplane-worker")
+    pool = ThreadPoolExecutor(
+        max_workers=max_threads or n_workers, thread_name_prefix="dataplane-worker"
+    )
 
     def _groups():
         for w in range(n_workers):
-            rows = order[bounds[w]:bounds[w + 1]]
+            rows = order[bounds[w] : bounds[w + 1]]
             if rows.size:
                 yield w, rows
 
@@ -165,25 +184,34 @@ def worker_pool_executor(spec: CircuitSpec, assignment: Sequence[int],
                 raise ValueError(
                     f"assignment must cover the bank's {bank.n_groups} "
                     f"groups or {bank.n_circuits} rows, got "
-                    f"{len(assignment)} entries")
-            futs = [pool.submit(kops.vqc_fidelity_shiftgroups, spec,
-                                bank.theta, bank.data, bank.four_term,
-                                tuple(int(g) for g in rows))
-                    for _, rows in _groups()]
+                    f"{len(assignment)} entries"
+                )
+            futs = [
+                pool.submit(
+                    kops.vqc_fidelity_shiftgroups,
+                    spec,
+                    bank.theta,
+                    bank.data,
+                    bank.four_term,
+                    tuple(int(g) for g in rows),
+                )
+                for _, rows in _groups()
+            ]
             stacked = jnp.concatenate([f.result() for f in futs], 0)
             return stacked[inverse_j].reshape(-1)
-        futs = [pool.submit(kops.vqc_fidelity, spec, theta_bank[rows],
-                            data_bank[rows])
-                for _, rows in _groups()]
+        futs = [
+            pool.submit(kops.vqc_fidelity, spec, theta_bank[rows], data_bank[rows])
+            for _, rows in _groups()
+        ]
         return jnp.concatenate([f.result() for f in futs])[inverse_j]
 
-    run.accepts_shiftbank = True
     run.close = lambda: pool.shutdown(wait=True)
-    return run
+    return declare(run, shiftbank=True)
 
 
-def worker_multibank_executor(spec: CircuitSpec, assignment: Sequence[int],
-                              n_workers: int):
+def worker_multibank_executor(
+    spec: CircuitSpec, assignment: Sequence[int], n_workers: int
+):
     """Multi-bank scheduling: the schedulable unit is the (bank, group)
     subtask of a same-spec BANK SET.
 
@@ -197,17 +225,18 @@ def worker_multibank_executor(spec: CircuitSpec, assignment: Sequence[int],
     ``shift_rule.assemble_gradient`` consumes each unchanged.
     """
     import numpy as np
+
     assignment = np.asarray(assignment)
 
     def run(banks: Sequence[shift_rule.ShiftBank]) -> list:
         if len({b.four_term for b in banks}) > 1:
             raise ValueError("banks in one fused set must share four_term")
-        flat = [(bi, g) for bi, b in enumerate(banks)
-                for g in range(b.n_groups)]
+        flat = [(bi, g) for bi, b in enumerate(banks) for g in range(b.n_groups)]
         if len(assignment) != len(flat):
             raise ValueError(
                 f"assignment must cover the bank set's {len(flat)} "
-                f"(bank, group) subtasks, got {len(assignment)} entries")
+                f"(bank, group) subtasks, got {len(assignment)} entries"
+            )
         grids = [[None] * b.n_groups for b in banks]
         for w in range(n_workers):
             subtasks = [flat[i] for i in np.flatnonzero(assignment == w)]
@@ -224,15 +253,17 @@ def worker_multibank_executor(spec: CircuitSpec, assignment: Sequence[int],
                 slots.append((k, len(group_sets[k])))
                 group_sets[k].append(g)
             outs = kops.vqc_fidelity_shiftgroups_multibank(
-                spec, tuple(banks[bi].theta for bi in w_banks),
+                spec,
+                tuple(banks[bi].theta for bi in w_banks),
                 tuple(banks[bi].data for bi in w_banks),
-                banks[0].four_term, tuple(tuple(gs) for gs in group_sets))
+                banks[0].four_term,
+                tuple(tuple(gs) for gs in group_sets),
+            )
             for (bi, g), (k, i) in zip(subtasks, slots):
                 grids[bi][g] = outs[k][i]
         return [jnp.stack(rows, 0).reshape(-1) for rows in grids]
 
-    run.accepts_bankset = True
-    return run
+    return declare(run, multibank=True)
 
 
 def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
@@ -253,7 +284,8 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
         return kops.vqc_fidelity(spec, theta, data)
 
     shard_fn = _shard_map(
-        _local, mesh=mesh,
+        _local,
+        mesh=mesh,
         in_specs=(P(axis, None), P(axis, None)),
         out_specs=P(axis),
         # the Pallas interpret-mode call inside produces ShapeDtypeStructs
@@ -265,11 +297,13 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
 
     def _shift_fn(four_term: bool):
         if four_term not in shift_fns:
+
             def _local_shift(theta, data):
-                return kops.vqc_fidelity_shiftgroups(spec, theta, data,
-                                                     four_term)
+                return kops.vqc_fidelity_shiftgroups(spec, theta, data, four_term)
+
             shift_fns[four_term] = _shard_map(
-                _local_shift, mesh=mesh,
+                _local_shift,
+                mesh=mesh,
                 in_specs=(P(axis, None), P(axis, None)),
                 out_specs=P(None, axis),
                 **_SM_SKIP_CHECKS,
@@ -281,11 +315,15 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
     def _group_fn(four_term: bool, groups: tuple):
         key = (four_term, groups)
         if key not in group_fns:
+
             def _local_groups(theta, data):
-                return kops.vqc_fidelity_shiftgroups(spec, theta, data,
-                                                     four_term, groups)
+                return kops.vqc_fidelity_shiftgroups(
+                    spec, theta, data, four_term, groups
+                )
+
             group_fns[key] = _shard_map(
-                _local_groups, mesh=mesh,
+                _local_groups,
+                mesh=mesh,
                 in_specs=(P(axis, None), P(axis, None)),
                 out_specs=P(None, axis),
                 **_SM_SKIP_CHECKS,
@@ -299,7 +337,7 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
             pad = (-b) % n_shards
             t = jnp.pad(bank.theta, ((0, pad), (0, 0)))
             d = jnp.pad(bank.data, ((0, pad), (0, 0)))
-            out = _shift_fn(bank.four_term)(t, d)        # (n_groups, B+pad)
+            out = _shift_fn(bank.four_term)(t, d)  # (n_groups, B+pad)
             return out[:, :b].reshape(-1)
         c = theta_bank.shape[0]
         pad = (-c) % n_shards
@@ -320,16 +358,15 @@ def sharded_executor(spec: CircuitSpec, mesh: Mesh, axis: str = "data"):
         pad = (-lanes) % n_shards
         theta_cat = jnp.pad(theta_cat, ((0, pad), (0, 0)))
         data_cat = jnp.pad(data_cat, ((0, pad), (0, 0)))
-        out = jnp.clip(_group_fn(four_term, union)(theta_cat, data_cat),
-                       0.0, 1.0)
+        out = jnp.clip(_group_fn(four_term, union)(theta_cat, data_cat), 0.0, 1.0)
         row = {g: i for i, g in enumerate(union)}
         return tuple(
-            jnp.stack([out[row[g], off:off + b] for g in gs], axis=0)
-            for (off, b), gs in zip(segments, group_sets))
+            jnp.stack([out[row[g], off : off + b] for g in gs], axis=0)
+            for (off, b), gs in zip(segments, group_sets)
+        )
 
-    run.accepts_shiftbank = True
     run.run_banks = run_banks
-    return run
+    return declare(run, shiftbank=True, sharded=True)
 
 
 class MeshSpillExecutor:
@@ -347,6 +384,7 @@ class MeshSpillExecutor:
     def __init__(self, mesh: Mesh | None = None, axis: str = "data"):
         if mesh is None:
             from repro.launch.mesh import make_host_mesh
+
             mesh = make_host_mesh()
         self.mesh = mesh
         self.axis = axis
@@ -354,19 +392,23 @@ class MeshSpillExecutor:
 
     def _executor(self, spec: CircuitSpec):
         if spec not in self._per_spec:
-            self._per_spec[spec] = sharded_executor(spec, self.mesh,
-                                                    self.axis)
+            self._per_spec[spec] = sharded_executor(spec, self.mesh, self.axis)
         return self._per_spec[spec]
 
     def rows(self, spec: CircuitSpec, theta_bank, data_bank):
         """(C, P), (C, D) -> (C,) fidelities, lanes sharded over the mesh."""
         return self._executor(spec)(theta_bank, data_bank)
 
-    def banks(self, spec: CircuitSpec, thetas, datas, four_term: bool,
-              group_sets: tuple):
+    def banks(
+        self,
+        spec: CircuitSpec,
+        thetas,
+        datas,
+        four_term: bool,
+        group_sets: tuple,
+    ):
         """Fused multi-bank bank-set execution sharded over the mesh."""
-        return self._executor(spec).run_banks(thetas, datas, four_term,
-                                              group_sets)
+        return self._executor(spec).run_banks(thetas, datas, four_term, group_sets)
 
 
 def bank_shardings(mesh: Mesh, axis: str = "data"):

@@ -20,6 +20,7 @@ Faithfulness notes:
   eagerly (result return == completion, like the paper's RPC loop-back) or
   only at the next heartbeat (``eager_completion=False``).
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -31,23 +32,24 @@ from repro.comanager.worker import CircuitTask
 @dataclasses.dataclass
 class WorkerView:
     """The co-Manager's bookkeeping for one registered worker."""
+
     worker_id: str
-    max_qubits: int                       # MR_w
-    reported_or: int = 0                  # OR_w from last heartbeat
+    max_qubits: int  # MR_w
+    reported_or: int = 0  # OR_w from last heartbeat
     reported_active: set = dataclasses.field(default_factory=set)
-    cru: float = 0.0                      # CRU_w(t) from last heartbeat
+    cru: float = 0.0  # CRU_w(t) from last heartbeat
     last_heartbeat: float = 0.0
     missed_heartbeats: int = 0
     in_flight: dict = dataclasses.field(default_factory=dict)  # tid -> demand
     client_affinity: Optional[str] = None  # single-tenant mode ownership
-    error_rate: float = 0.0               # beyond paper: reported gate error
+    error_rate: float = 0.0  # beyond paper: reported gate error
 
     @property
     def occupied_qubits(self) -> int:
         return self.reported_or + sum(self.in_flight.values())
 
     @property
-    def available_qubits(self) -> int:    # AR_w (line 10)
+    def available_qubits(self) -> int:  # AR_w (line 10)
         return self.max_qubits - self.occupied_qubits
 
 
@@ -64,13 +66,19 @@ class CoManager:
                          exclusivity).
     """
 
-    def __init__(self, *, eager_completion: bool = True,
-                 miss_limit: int = 3, multi_tenant: bool = True,
-                 tenancy: str | None = None, policy: str = "cru",
-                 fidelity_floor: float = 0.0):
+    def __init__(
+        self,
+        *,
+        eager_completion: bool = True,
+        miss_limit: int = 3,
+        multi_tenant: bool = True,
+        tenancy: str | None = None,
+        policy: str = "cru",
+        fidelity_floor: float = 0.0,
+    ):
         # (1) co-Manager Initialization (line 1)
-        self.workers: dict[str, WorkerView] = {}      # W + MR dictionary
-        self.pending: list[CircuitTask] = []          # client-submitted circuits
+        self.workers: dict[str, WorkerView] = {}  # W + MR dictionary
+        self.pending: list[CircuitTask] = []  # client-submitted circuits
         self.miss_limit = miss_limit
         self.eager_completion = eager_completion
         if tenancy is None:
@@ -87,17 +95,28 @@ class CoManager:
         # for a given circuit DEPTH are not candidates (the circuit queues
         # for a cleaner machine instead) — runtime/fidelity trade-off knob.
         self.fidelity_floor = fidelity_floor
-        self.assignments: list[tuple[float, int, str]] = []  # (t, task, worker) log
+        self.assignments: list[tuple[float, int, str]] = []  # (t, task, worker)
         self.evictions: list[tuple[float, str]] = []
         self.task_registry: dict[int, CircuitTask] = {}
         self.completed_ids: set[int] = set()
 
     # ------------------------------------------------- (2) registration
-    def register_worker(self, worker_id: str, max_qubits: int, cru: float,
-                        t: float, error_rate: float = 0.0) -> WorkerView:
+    def register_worker(
+        self,
+        worker_id: str,
+        max_qubits: int,
+        cru: float,
+        t: float,
+        error_rate: float = 0.0,
+    ) -> WorkerView:
         """Lines 2-6: join W; OR=0; AR=MR; record CRU."""
-        v = WorkerView(worker_id=worker_id, max_qubits=max_qubits,
-                       cru=cru, last_heartbeat=t, error_rate=error_rate)
+        v = WorkerView(
+            worker_id=worker_id,
+            max_qubits=max_qubits,
+            cru=cru,
+            last_heartbeat=t,
+            error_rate=error_rate,
+        )
         self.workers[worker_id] = v
         return v
 
@@ -109,13 +128,16 @@ class CoManager:
             return  # stale heartbeat from an evicted worker
         active = payload["active"]
         completed = payload.get("completed", set())
-        v.reported_or = sum(active.values())          # lines 8-9
+        v.reported_or = sum(active.values())  # lines 8-9
         v.reported_active = set(active)
         # in-flight entries the worker now reports active (counted in OR) or
         # has finished are settled out of the optimistic ledger.
-        v.in_flight = {tid: d for tid, d in v.in_flight.items()
-                       if tid not in active and tid not in completed}
-        v.cru = payload["cru"]                        # line 11
+        v.in_flight = {
+            tid: d
+            for tid, d in v.in_flight.items()
+            if tid not in active and tid not in completed
+        }
+        v.cru = payload["cru"]  # line 11
         v.error_rate = payload.get("error_rate", v.error_rate)
         v.last_heartbeat = t
         v.missed_heartbeats = 0
@@ -126,7 +148,8 @@ class CoManager:
         if self.multi_tenant or v.client_affinity is None:
             return
         if v.occupied_qubits == 0 and not any(
-                task.client_id == v.client_affinity for task in self.pending):
+            task.client_id == v.client_affinity for task in self.pending
+        ):
             v.client_affinity = None
 
     def liveness_check(self, t: float, period: float) -> list[str]:
@@ -149,8 +172,9 @@ class CoManager:
         return dead
 
     # ------------------------------------------------- (4) workload assign
-    def assign(self, task: CircuitTask, t: float,
-               exclude: set | None = None) -> Optional[str]:
+    def assign(
+        self, task: CircuitTask, t: float, exclude: set | None = None
+    ) -> Optional[str]:
         """Lines 14-20.  Returns the chosen worker id, or None (stays pending).
 
         ``exclude``: workers to skip for this call — used by the lockstep
@@ -169,33 +193,41 @@ class CoManager:
         """
         held = None
         if self.tenancy == "user_exclusive":
-            held = next((v for v in self.workers.values()
-                         if v.client_affinity == task.client_id), None)
+            held = next(
+                (
+                    v
+                    for v in self.workers.values()
+                    if v.client_affinity == task.client_id
+                ),
+                None,
+            )
         candidates = []
-        for wid, v in self.workers.items():           # line 15
+        for wid, v in self.workers.items():  # line 15
             if exclude and wid in exclude:
                 continue
-            if v.available_qubits >= task.demand:     # line 16 (see note)
-                if (self.policy == "noise_aware" and self.fidelity_floor
-                        and task.depth
-                        and (1.0 - v.error_rate) ** task.depth
-                        < self.fidelity_floor):
-                    continue                          # too noisy for this depth
+            if v.available_qubits >= task.demand:  # line 16 (see note)
+                if (
+                    self.policy == "noise_aware"
+                    and self.fidelity_floor
+                    and task.depth
+                    and (1.0 - v.error_rate) ** task.depth < self.fidelity_floor
+                ):
+                    continue  # too noisy for this depth
                 if not self.multi_tenant and v.occupied_qubits > 0:
-                    continue                          # machine fully occupied
+                    continue  # machine fully occupied
                 if self.tenancy == "user_exclusive":
                     if held is not None and v is not held:
-                        continue                      # one machine per client
+                        continue  # one machine per client
                     if v.client_affinity not in (None, task.client_id):
-                        continue                      # others wait in queue
-                candidates.append(v)                  # line 17
+                        continue  # others wait in queue
+                candidates.append(v)  # line 17
         if not candidates:
             return None
         if self.policy == "noise_aware":
             candidates.sort(key=lambda v: (v.error_rate, v.cru, v.worker_id))
         else:
             candidates.sort(key=lambda v: (v.cru, v.worker_id))  # lines 18-19
-        best = candidates[0]                          # line 20
+        best = candidates[0]  # line 20
         best.in_flight[task.task_id] = task.demand
         if self.tenancy == "user_exclusive":
             best.client_affinity = task.client_id

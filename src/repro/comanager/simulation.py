@@ -9,7 +9,12 @@ Wires the paper's full runtime together on the virtual clock:
 
 This is the engine behind every runtime figure reproduction
 (benchmarks/: Fig 3, 4, 5, 6).
+
+The typed front door is ``repro.api``: ``SimulationConfig`` carries this
+constructor's kwarg pile and ``QuantumCluster.simulate`` forwards open
+sessions' ``TenantPolicy``s into the per-tenant override maps below.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -40,23 +45,57 @@ class SimulationReport:
         return self.total_circuits / max(self.makespan, 1e-9)
 
 
+def _validate_tenant_maps(jobs, *, worker_ids, worker_failures=None, **maps):
+    """Reject per-tenant override maps that name unknown client ids.
+
+    ``tenant_weights`` / ``tenant_priorities`` / ``tenant_slos_ms`` /
+    ``arrivals`` keys must each be a submitted job's client id (a typo'd
+    key used to pass silently — the override simply never applied);
+    ``worker_failures`` keys must name configured workers."""
+    known = {j.client_id for j in jobs}
+    for name, mapping in maps.items():
+        unknown = sorted(set(mapping or ()) - known)
+        if unknown:
+            raise ValueError(
+                f"{name} refers to unknown client id(s) {unknown}; "
+                f"known clients: {sorted(known)}"
+            )
+    bad_workers = sorted(set(worker_failures or ()) - worker_ids)
+    if bad_workers:
+        raise ValueError(
+            f"worker_failures refers to unknown worker id(s) {bad_workers}; "
+            f"known workers: {sorted(worker_ids)}"
+        )
+
+
 class SystemSimulation:
-    def __init__(self, worker_cfgs: list[WorkerConfig], jobs: list[JobSpec],
-                 *, env: str = "ibmq", multi_tenant: bool = True,
-                 tenancy: str | None = None, policy: str = "cru",
-                 fidelity_floor: float = 0.0,
-                 eager_completion: bool = True, heartbeat_period: float = 5.0,
-                 assign_latency: float = 0.01, classical_overhead: float = 0.0,
-                 lockstep: bool = False, fair_queue: bool = False,
-                 run_until: float = 1e7,
-                 worker_failures: dict[str, float] | None = None,
-                 gateway: bool = False, gateway_target: int | None = None,
-                 gateway_deadline: float = 1.0,
-                 gateway_async: bool = False,
-                 tenant_weights: dict[str, float] | None = None,
-                 tenant_priorities: dict[str, int] | None = None,
-                 tenant_slos_ms: dict[str, float] | None = None,
-                 arrivals: dict[str, list[float]] | None = None):
+    def __init__(
+        self,
+        worker_cfgs: list[WorkerConfig],
+        jobs: list[JobSpec],
+        *,
+        env: str = "ibmq",
+        multi_tenant: bool = True,
+        tenancy: str | None = None,
+        policy: str = "cru",
+        fidelity_floor: float = 0.0,
+        eager_completion: bool = True,
+        heartbeat_period: float = 5.0,
+        assign_latency: float = 0.01,
+        classical_overhead: float = 0.0,
+        lockstep: bool = False,
+        fair_queue: bool = False,
+        run_until: float = 1e7,
+        worker_failures: dict[str, float] | None = None,
+        gateway: bool = False,
+        gateway_target: int | None = None,
+        gateway_deadline: float = 1.0,
+        gateway_async: bool = False,
+        tenant_weights: dict[str, float] | None = None,
+        tenant_priorities: dict[str, int] | None = None,
+        tenant_slos_ms: dict[str, float] | None = None,
+        arrivals: dict[str, list[float]] | None = None,
+    ):
         """``assign_latency``: manager->worker dispatch cost per circuit.
 
         ``classical_overhead``: SERIAL per-circuit time on the classical
@@ -109,11 +148,28 @@ class SystemSimulation:
         offsets (relative to the job's submit_time); circuits then stream in
         open-loop instead of arriving as one epoch-sized burst — the
         high-traffic serving stand-in used by benchmarks/gateway_throughput.
+
+        Every per-tenant override map is validated against the submitted
+        jobs' client ids (and ``worker_failures`` against the worker fleet):
+        unknown keys raise ``ValueError`` instead of silently never applying.
         """
+        _validate_tenant_maps(
+            jobs,
+            tenant_weights=tenant_weights,
+            tenant_priorities=tenant_priorities,
+            tenant_slos_ms=tenant_slos_ms,
+            arrivals=arrivals,
+            worker_failures=worker_failures,
+            worker_ids={c.worker_id for c in worker_cfgs},
+        )
         self.loop = EventLoop()
-        self.manager = CoManager(multi_tenant=multi_tenant, tenancy=tenancy,
-                                 eager_completion=eager_completion,
-                                 policy=policy, fidelity_floor=fidelity_floor)
+        self.manager = CoManager(
+            multi_tenant=multi_tenant,
+            tenancy=tenancy,
+            eager_completion=eager_completion,
+            policy=policy,
+            fidelity_floor=fidelity_floor,
+        )
         self.workers = {c.worker_id: QuantumWorker(c) for c in worker_cfgs}
         self.jobs = {j.client_id: j for j in jobs}
         self.env = env
@@ -123,7 +179,7 @@ class SystemSimulation:
         self.lockstep = lockstep
         self.fair_queue = fair_queue  # round-robin across clients in the queue
         self._client_free: dict[str, float] = {}  # per-client serial CPU
-        self._in_flight: dict[str, int] = {}      # per-client outstanding
+        self._in_flight: dict[str, int] = {}  # per-client outstanding
         self.run_until = run_until
         self.failures = worker_failures or {}
 
@@ -138,17 +194,22 @@ class SystemSimulation:
         if gateway:
             from repro.kernels.vqc_statevector import LANES
             from repro.serve.gateway import Gateway
+
             self.gw_lanes = LANES
-            self.gateway = Gateway(target=gateway_target or LANES,
-                                   deadline=gateway_deadline, lanes=LANES)
+            self.gateway = Gateway(
+                target=gateway_target or LANES,
+                deadline=gateway_deadline,
+                lanes=LANES,
+            )
             for j in jobs:
                 self.gateway.register_client(
                     j.client_id,
                     weight=(tenant_weights or {}).get(j.client_id, 1.0),
                     priority=(tenant_priorities or {}).get(j.client_id, 1),
-                    slo_ms=(tenant_slos_ms or {}).get(j.client_id))
-            self._gw_batches: dict[int, object] = {}   # batch task_id -> batch
-            self._gw_dispatched: set[int] = set()      # handed to a worker
+                    slo_ms=(tenant_slos_ms or {}).get(j.client_id),
+                )
+            self._gw_batches: dict[int, object] = {}  # batch task_id -> batch
+            self._gw_dispatched: set[int] = set()  # handed to a worker
             self._gw_flush_at: float | None = None
 
         lp = self.loop
@@ -164,8 +225,9 @@ class SystemSimulation:
     # ------------------------------------------------------------ handlers
     def _on_register(self, t: float, wid: str) -> None:
         w = self.workers[wid]
-        self.manager.register_worker(wid, w.max_qubits, w.cru(t), t,
-                                     error_rate=w.cfg.error_rate)
+        self.manager.register_worker(
+            wid, w.max_qubits, w.cru(t), t, error_rate=w.cfg.error_rate
+        )
         self.loop.schedule(t + self.heartbeat_period, "heartbeat", wid)
 
     def _on_heartbeat(self, t: float, wid: str) -> None:
@@ -183,12 +245,17 @@ class SystemSimulation:
         if self.gateway is not None:
             # batches requeued off an evicted worker go back through the
             # coalescer (re-coalesced), not straight back to Algorithm 2
-            lost = [task for task in self.manager.pending
-                    if task.task_id in self._gw_dispatched]
+            lost = [
+                task
+                for task in self.manager.pending
+                if task.task_id in self._gw_dispatched
+            ]
             if lost:
                 self.manager.pending = [
-                    task for task in self.manager.pending
-                    if task.task_id not in self._gw_dispatched]
+                    task
+                    for task in self.manager.pending
+                    if task.task_id not in self._gw_dispatched
+                ]
                 for task in lost:
                     self._gw_requeue(t, task)
         self._drain(t)
@@ -197,8 +264,11 @@ class SystemSimulation:
 
     def _all_done(self) -> bool:
         jobs_submitted = len(self._remaining) == len(self.jobs)
-        done = (jobs_submitted and not any(self._remaining.values())
-                and not self.manager.pending)
+        done = (
+            jobs_submitted
+            and not any(self._remaining.values())
+            and not self.manager.pending
+        )
         if done and self.gateway is not None:
             done = self.gateway.idle and not self._gw_batches
         return done
@@ -238,9 +308,11 @@ class SystemSimulation:
         for batch in self.gateway.pump(t):
             self._gw_dispatch(t, batch)
         nd = self.gateway.next_deadline()
-        if nd is not None and (self._gw_flush_at is None
-                               or nd < self._gw_flush_at - 1e-12
-                               or self._gw_flush_at <= t):
+        if nd is not None and (
+            self._gw_flush_at is None
+            or nd < self._gw_flush_at - 1e-12
+            or self._gw_flush_at <= t
+        ):
             self._gw_flush_at = max(nd, t)
             self.loop.schedule(self._gw_flush_at, "gw_flush", None)
         self._drain(t)
@@ -255,10 +327,13 @@ class SystemSimulation:
         ceil(n / LANES) * per-circuit time (lanes run in parallel)."""
         proto: CircuitTask = batch.members[0].payload
         n_passes = -(-batch.n // self.gw_lanes)
-        bt = CircuitTask(task_id=next(self.task_ids), client_id="__gw__",
-                         demand=proto.demand,
-                         service_time=n_passes * proto.service_time,
-                         depth=proto.depth)
+        bt = CircuitTask(
+            task_id=next(self.task_ids),
+            client_id="__gw__",
+            demand=proto.demand,
+            service_time=n_passes * proto.service_time,
+            depth=proto.depth,
+        )
         self._gw_batches[bt.task_id] = batch
         self.manager.submit(bt)
 
@@ -322,8 +397,11 @@ class SystemSimulation:
             # on one worker no longer head-of-line-blocks the others.
             cid = task.client_id
             ledger = cid
-            if (self.gateway_async and self.gateway is not None
-                    and task.task_id in self._gw_batches):
+            if (
+                self.gateway_async
+                and self.gateway is not None
+                and task.task_id in self._gw_batches
+            ):
                 ledger = f"{cid}/{wid}"
             free = max(self._client_free.get(ledger, 0.0), t) + self.classical_overhead
             self._client_free[ledger] = free
@@ -368,7 +446,7 @@ class SystemSimulation:
         makespan = max((r.finish_time for r in self._results.values()), default=end)
         # noise ledger: retention of each completed circuit on its worker
         rets, reg = [], self.manager.task_registry
-        for (_, tid, wid) in self.manager.assignments:
+        for _, tid, wid in self.manager.assignments:
             task, w = reg.get(tid), self.workers.get(wid)
             if task is not None and w is not None and tid in self.manager.completed_ids:
                 rets.append((1.0 - w.cfg.error_rate) ** task.depth)
@@ -380,8 +458,9 @@ class SystemSimulation:
             evictions=list(self.manager.evictions),
             worker_busy_time={wid: w.busy_time for wid, w in self.workers.items()},
             fidelity_retention=(sum(rets) / len(rets)) if rets else 1.0,
-            gateway_summary=(self.gateway.telemetry.summary()
-                             if self.gateway is not None else None),
+            gateway_summary=(
+                self.gateway.telemetry.summary() if self.gateway is not None else None
+            ),
         )
 
 
@@ -405,5 +484,7 @@ def _round_robin(tasks):
 
 
 def homogeneous_workers(n: int, max_qubits: int, **kw) -> list[WorkerConfig]:
-    return [WorkerConfig(worker_id=f"w{i+1}", max_qubits=max_qubits, **kw)
-            for i in range(n)]
+    return [
+        WorkerConfig(worker_id=f"w{i + 1}", max_qubits=max_qubits, **kw)
+        for i in range(n)
+    ]

@@ -6,6 +6,7 @@ multi-tenant evaluation (Fig 6) runs four concurrent clients
 (5Q/1L, 5Q/2L, 7Q/1L, 7Q/2L) against four heterogeneous workers
 (5/10/15/20 qubits).
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -37,12 +38,13 @@ class TaskIdAllocator:
 @dataclasses.dataclass(frozen=True)
 class JobSpec:
     """One client's training job for runtime experiments."""
+
     client_id: str
-    qc: int                 # circuit width (5 or 7)
-    n_layers: int           # 1..3
-    n_circuits: int         # bank size for the epoch
+    qc: int  # circuit width (5 or 7)
+    n_layers: int  # 1..3
+    n_circuits: int  # bank size for the epoch
     submit_time: float = 0.0
-    service_override: float | None = None   # quantum-side seconds/circuit
+    service_override: float | None = None  # quantum-side seconds/circuit
 
     def service_time(self, env: str = "ibmq") -> float:
         """Per-circuit 1-worker service time calibrated from the paper."""
@@ -51,31 +53,49 @@ class JobSpec:
         rates = PAPER_RATES_IBMQ if env == "ibmq" else PAPER_RATES_GCP
         return 1.0 / rates[(self.qc, self.n_layers)]
 
-    def circuits(self, env: str = "ibmq",
-                 ids: Iterator[int] | None = None) -> list[CircuitTask]:
+    def circuits(
+        self, env: str = "ibmq", ids: Iterator[int] | None = None
+    ) -> list[CircuitTask]:
         """Expand into the epoch's circuit bank.  ``ids`` is the owning
         runtime's task-id allocator (defaults to a fresh one, for callers
         that only ever build a single job)."""
         st = self.service_time(env)
         ids = ids if ids is not None else TaskIdAllocator()
         from repro.core import circuits as qcirc
+
         depth = len(qcirc.build_quclassi_circuit(self.qc, self.n_layers).ops)
-        return [CircuitTask(task_id=next(ids), client_id=self.client_id,
-                            demand=self.qc, service_time=st, payload=i,
-                            depth=depth)
-                for i in range(self.n_circuits)]
+        return [
+            CircuitTask(
+                task_id=next(ids),
+                client_id=self.client_id,
+                demand=self.qc,
+                service_time=st,
+                payload=i,
+                depth=depth,
+            )
+            for i in range(self.n_circuits)
+        ]
 
 
 #: paper's per-epoch circuit counts (§IV-C): 5q -> 1440/2880/4320,
 #: 7q -> 2016/4032/6048 for 1/2/3 layers.
 PAPER_CIRCUIT_COUNTS = {
-    (5, 1): 1440, (5, 2): 2880, (5, 3): 4320,
-    (7, 1): 2016, (7, 2): 4032, (7, 3): 6048,
+    (5, 1): 1440,
+    (5, 2): 2880,
+    (5, 3): 4320,
+    (7, 1): 2016,
+    (7, 2): 4032,
+    (7, 3): 6048,
 }
 
 
-def paper_job(client_id: str, qc: int, n_layers: int, submit_time: float = 0.0,
-              scale: float = 1.0) -> JobSpec:
+def paper_job(
+    client_id: str,
+    qc: int,
+    n_layers: int,
+    submit_time: float = 0.0,
+    scale: float = 1.0,
+) -> JobSpec:
     n = int(PAPER_CIRCUIT_COUNTS[(qc, n_layers)] * scale)
     return JobSpec(client_id, qc, n_layers, n, submit_time)
 

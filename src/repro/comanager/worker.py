@@ -13,32 +13,40 @@ qubits truly concurrently, while the paper's *simulator* workers are
 CPU-bound.  ``contention`` interpolates: the service time of a circuit that
 starts with k other active circuits is scaled by (1 + contention * k).
 """
+
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 #: paper-calibrated 1-worker processing speeds (circuits/sec) from Figs 3b/4b,
 #: IBM-Q backends: (qc, n_layers) -> circuits per second.
 PAPER_RATES_IBMQ = {
-    (5, 1): 15.2, (5, 2): 6.2, (5, 3): 5.9,
-    (7, 1): 12.4, (7, 2): 7.1, (7, 3): 4.4,
+    (5, 1): 15.2,
+    (5, 2): 6.2,
+    (5, 3): 5.9,
+    (7, 1): 12.4,
+    (7, 2): 7.1,
+    (7, 3): 4.4,
 }
 #: controlled-environment (GCP e2-medium) rates from Fig 5b.
 PAPER_RATES_GCP = {
-    (5, 1): 3.8, (5, 2): 3.0, (5, 3): 2.4,
-    (7, 1): 3.0, (7, 2): 2.4, (7, 3): 1.9,
+    (5, 1): 3.8,
+    (5, 2): 3.0,
+    (5, 3): 2.4,
+    (7, 1): 3.0,
+    (7, 2): 2.4,
+    (7, 3): 1.9,
 }
 
 
 @dataclasses.dataclass(frozen=True)
 class WorkerConfig:
     worker_id: str
-    max_qubits: int                    # MR_w
-    speed: float = 1.0                 # relative service-rate multiplier
-    heartbeat_period: float = 5.0      # paper: "every 5 seconds"
-    contention: float = 0.15           # co-residency slowdown factor
-    base_load: float = 0.0             # external classical load (uncontrolled env)
+    max_qubits: int  # MR_w
+    speed: float = 1.0  # relative service-rate multiplier
+    heartbeat_period: float = 5.0  # paper: "every 5 seconds"
+    contention: float = 0.15  # co-residency slowdown factor
+    base_load: float = 0.0  # external classical load (uncontrolled env)
     # BEYOND PAPER (their §V limitation #2): per-gate depolarizing error of
     # this machine.  A depth-g circuit's state is fully depolarized with
     # probability 1-(1-error_rate)**g, pulling the observed SWAP-test
@@ -61,12 +69,13 @@ class CircuitTask:
     1x-speed, zero-contention execution time; ``payload`` indexes the client
     job's (theta, data) bank row for real execution.
     """
+
     task_id: int
     client_id: str
     demand: int
     service_time: float
     payload: int = -1
-    depth: int = 0          # gate count (noise-aware scheduling extension)
+    depth: int = 0  # gate count (noise-aware scheduling extension)
 
     def __post_init__(self):
         assert self.demand >= 1 and self.service_time > 0
@@ -77,22 +86,22 @@ class QuantumWorker:
 
     def __init__(self, cfg: WorkerConfig):
         self.cfg = cfg
-        self.active: dict[int, ActiveCircuit] = {}   # AC_w
+        self.active: dict[int, ActiveCircuit] = {}  # AC_w
         self.completed: list[int] = []
-        self.busy_time = 0.0                          # integral of n_active dt
+        self.busy_time = 0.0  # integral of n_active dt
         self._last_t = 0.0
 
     # ----------------------------------------------------------- resources
     @property
-    def max_qubits(self) -> int:                      # MR_w
+    def max_qubits(self) -> int:  # MR_w
         return self.cfg.max_qubits
 
     @property
-    def occupied_qubits(self) -> int:                 # OR_w = sum of D_c
+    def occupied_qubits(self) -> int:  # OR_w = sum of D_c
         return sum(a.task.demand for a in self.active.values())
 
     @property
-    def available_qubits(self) -> int:                # AR_w = MR_w - OR_w
+    def available_qubits(self) -> int:  # AR_w = MR_w - OR_w
         return self.max_qubits - self.occupied_qubits
 
     def cru(self, t: float) -> float:
@@ -115,7 +124,9 @@ class QuantumWorker:
         """Begin executing; returns the finish time to schedule."""
         if task.demand > self.available_qubits:
             raise RuntimeError(
-                f"{self.cfg.worker_id}: demand {task.demand} > AR {self.available_qubits}")
+                f"{self.cfg.worker_id}: demand {task.demand} > AR "
+                f"{self.available_qubits}"
+            )
         self._accumulate(now)
         finish = now + self.exec_time(task)
         self.active[task.task_id] = ActiveCircuit(task, now, finish)
@@ -131,7 +142,6 @@ class QuantumWorker:
         self.busy_time += len(self.active) * (now - self._last_t)
         self._last_t = now
 
-    # ------------------------------------------------------------ heartbeat
     # --------------------------------------------------------------- noise
     def depolarization(self, depth: int) -> float:
         """lambda = P(state fully depolarized) for a depth-``depth`` circuit."""
@@ -142,6 +152,7 @@ class QuantumWorker:
         lam = self.depolarization(depth)
         return (1.0 - lam) * ideal_p0 + lam * 0.5
 
+    # ------------------------------------------------------------ heartbeat
     def heartbeat_payload(self, t: float) -> dict:
         """What w_i reports to the co-Manager every heartbeat period."""
         return {

@@ -23,6 +23,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.api.capabilities import capabilities_of
 from repro.core import circuits, fidelity as fid, segmentation, shift_rule
 from repro.core.sim import CircuitSpec
 
@@ -128,8 +129,8 @@ def build_class_banks(cfg: QuClassiConfig, params: dict, images: jnp.ndarray,
     circuit for class c.  Total circuits = C * (B*Np) * (2*P + 1).
 
     ``implicit=True`` builds ``ShiftBank``s — base angles + shift descriptors
-    only, never the (C, P) theta matrix; shift-aware executors run them with
-    the prefix-reuse kernel, everything else via ``materialize()``.
+    only, never the (C, P) theta matrix; ``shiftbank``-capable executors run
+    them with the prefix-reuse kernel, everything else via ``materialize()``.
     """
     patches = segmentation.segment(images, cfg.seg)
     angles = encode_patches(cfg, params, patches).reshape(-1, cfg.n_angles)
@@ -145,7 +146,7 @@ def grad_shift(cfg: QuClassiConfig, params: dict, images, labels,
     (optionally through the co-Manager) and assemble theta gradients.
 
     ``implicit``: route through implicit ``ShiftBank``s (None = auto: exactly
-    when the executor advertises ``accepts_shiftbank``).
+    when the executor declares the ``shiftbank`` capability).
 
     Dense-layer params, when present, are trained with exact chain-rule
     gradients holding theta fixed (autodiff through the data-encoding path) —
@@ -154,7 +155,7 @@ def grad_shift(cfg: QuClassiConfig, params: dict, images, labels,
     spec = cfg.spec
     run = executor or shift_rule.default_executor(spec)
     if implicit is None:
-        implicit = getattr(run, "accepts_shiftbank", False)
+        implicit = capabilities_of(run).shiftbank
     banks, _ = build_class_banks(cfg, params, images, implicit=implicit)
     onehot = jax.nn.one_hot(labels, cfg.n_classes)
     b, np_ = images.shape[0], cfg.n_patches

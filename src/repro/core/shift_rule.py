@@ -25,6 +25,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.api.capabilities import capabilities_of
 from repro.core import fidelity as fid
 from repro.core.sim import CircuitSpec
 
@@ -208,11 +209,12 @@ def group_bank_sets(items):
 def run_bank_set(executor, banks) -> list:
     """Execute several same-spec implicit banks through ``executor``.
 
-    Executors that fuse whole bank-sets advertise ``accepts_bankset`` and
-    receive the list itself (one multi-bank launch); everything else falls
-    back to per-bank ``run_bank`` calls — same results, K launches."""
+    Executors that fuse whole bank-sets declare the ``multibank``
+    capability (``repro.api.capabilities``) and receive the list itself
+    (one multi-bank launch); everything else falls back to per-bank
+    ``run_bank`` calls — same results, K launches."""
     banks = list(banks)
-    if getattr(executor, "accepts_bankset", False):
+    if capabilities_of(executor).multibank:
         return list(executor(banks))
     return [run_bank(executor, bank) for bank in banks]
 
@@ -224,14 +226,16 @@ def default_executor(spec: CircuitSpec) -> Executor:
 def run_bank(executor: Executor, bank) -> jnp.ndarray:
     """Execute a bank (implicit or materialized) through ``executor``.
 
-    Executors that understand implicit banks advertise it with an
-    ``accepts_shiftbank`` attribute and are called with the ``ShiftBank``
+    Executors that understand implicit banks declare the ``shiftbank``
+    capability (``repro.api.capabilities.declare``; legacy duck-typed
+    ``accepts_shiftbank`` callables still resolve through the deprecation
+    shim in ``capabilities_of``) and are called with the ``ShiftBank``
     itself; every other executor keeps its ``(theta, data)`` signature and
     receives the materialized bank — the escape hatch that keeps the whole
     existing executor zoo working.
     """
     if isinstance(bank, ShiftBank):
-        if getattr(executor, "accepts_shiftbank", False):
+        if capabilities_of(executor).shiftbank:
             return executor(bank)
         mat = bank.materialize()
         return executor(mat.theta, mat.data)
@@ -272,13 +276,13 @@ def parameter_shift_grad(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarra
 
     ``implicit``: build a ``ShiftBank`` (never materializing the (C, P) theta
     matrix) instead of the explicit bank.  ``None`` = auto: implicit exactly
-    when the executor advertises ``accepts_shiftbank``.  Shift-unaware
+    when the executor declares the ``shiftbank`` capability.  Shift-unaware
     executors still work under ``implicit=True`` via ``materialize()``.
     """
     four = exact_controlled and bool(controlled_param_indices(spec))
     run = executor or default_executor(spec)
     if implicit is None:
-        implicit = getattr(run, "accepts_shiftbank", False)
+        implicit = capabilities_of(run).shiftbank
     build = build_shift_bank if implicit else build_bank
     bank = build(theta, data, four_term=four)
     fids = run_bank(run, bank)

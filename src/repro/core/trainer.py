@@ -45,7 +45,7 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
           epochs: int = 10, batch_size: int = 8, lr: float = 1e-3,
           grad_mode: str = "shift", executor=None, optimizer: str = "sgd",
           gateway=None, client_id: str = "trainer", bank_mode: str = "auto",
-          priority: int = 1, slo_ms: Optional[float] = None,
+          priority: int = 1, slo_ms: Optional[float] = None, policy=None,
           seed: int = 0, log: Optional[Callable[[str], None]] = None) -> TrainReport:
     """Train QuClassi per Algorithm 1.
 
@@ -72,15 +72,24 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
     'implicit' (``ShiftBank``s — shift-aware executors run them through the
     prefix-reuse kernel; a gateway then carries per-(param, shift) group
     subtasks instead of per-row circuits), or 'auto' (implicit exactly when
-    the executor advertises ``accepts_shiftbank``).
+    the executor declares the ``shiftbank`` capability — see
+    ``repro.api.capabilities``).
+
+    ``policy``: a ``repro.api.TenantPolicy``; when given it supersedes the
+    loose ``priority`` / ``slo_ms`` kwargs (the preferred way to carry a
+    tenant's scheduling contract — ``repro.api.Session.train`` wires it).
     """
     if bank_mode not in ("auto", "implicit", "materialized"):
         raise ValueError(f"unknown bank_mode {bank_mode!r}")
+    if policy is not None:
+        priority, slo_ms = policy.priority, policy.slo_ms
     implicit = {"auto": None, "implicit": True, "materialized": False}[bank_mode]
     if gateway is not None:
         if executor is not None:
             raise ValueError("pass either executor or gateway, not both")
         gw_opts = dict(priority=priority, slo_ms=slo_ms)
+        if policy is not None:
+            gw_opts["weight"] = policy.weight
         executor = (gateway.shift_executor(cfg.spec, client_id, **gw_opts)
                     if bank_mode == "implicit"
                     else gateway.executor(cfg.spec, client_id, **gw_opts))

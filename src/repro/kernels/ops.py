@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.api.capabilities import declare
 from repro.core.sim import CircuitSpec
 from repro.kernels import vqc_statevector as K
 
@@ -156,9 +157,9 @@ def vqc_fidelity_shiftgroups_multibank(
 
 
 def multibank_executor(spec: CircuitSpec):
-    """A bank-set executor (``accepts_bankset``): runs a sequence of
-    same-spec ``ShiftBank``s as one fused multi-bank launch and returns the
-    per-bank flat fidelity vectors in bank order."""
+    """A bank-set executor (declared ``multibank`` capability): runs a
+    sequence of same-spec ``ShiftBank``s as one fused multi-bank launch and
+    returns the per-bank flat fidelity vectors in bank order."""
 
     def run(banks):
         four = {b.four_term for b in banks}
@@ -173,21 +174,19 @@ def multibank_executor(spec: CircuitSpec):
         )
         return [o.reshape(-1) for o in outs]
 
-    run.accepts_bankset = True
-    return run
+    return declare(run, multibank=True)
 
 
 def shiftbank_executor(spec: CircuitSpec):
     """A ``shift_rule.Executor`` that consumes implicit ``ShiftBank``s
-    directly (``accepts_shiftbank``) via the prefix-reuse kernel.  Also
-    accepts plain ``(theta_bank, data_bank)`` calls — materialized banks run
-    through the standard fused kernel, so the executor composes with every
-    bank mode."""
+    directly (declared ``shiftbank`` capability) via the prefix-reuse
+    kernel.  Also accepts plain ``(theta_bank, data_bank)`` calls —
+    materialized banks run through the standard fused kernel, so the
+    executor composes with every bank mode."""
 
     def run(bank, data_bank=None):
         if data_bank is not None:
             return vqc_fidelity(spec, bank, data_bank)
         return vqc_fidelity_shiftbank(spec, bank.theta, bank.data, bank.four_term)
 
-    run.accepts_shiftbank = True
-    return run
+    return declare(run, shiftbank=True)

@@ -32,3 +32,12 @@ def data_axis_size(mesh) -> int:
 def make_host_mesh():
     """Degenerate 1x1 mesh on the real local device (CPU smoke tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_shards: int | None = None):
+    """All (or ``n_shards``) local devices on the ``data`` axis — the shape
+    the ``repro.api`` sharded backends consume: circuit-bank lanes shard
+    over ``data``, so a multi-device host parallelizes by default while the
+    single-CPU container degenerates to ``make_host_mesh()``."""
+    n = n_shards or len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

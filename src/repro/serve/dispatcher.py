@@ -31,6 +31,7 @@ from typing import Callable, Sequence
 
 import jax.numpy as jnp
 
+from repro.api.capabilities import declare
 from repro.comanager.manager import CoManager
 from repro.comanager.tenancy import TaskIdAllocator
 from repro.comanager.worker import CircuitTask, WorkerConfig
@@ -628,5 +629,4 @@ class GatewayRuntime:
             self.dispatcher.drain()
             return jnp.concatenate([f.value for f in futures])
 
-        run.accepts_shiftbank = True
-        return run
+        return declare(run, shiftbank=True)

@@ -1,0 +1,260 @@
+"""Tests for the ``repro.api`` tenant-session facade: typed configs,
+``QuantumCluster`` / ``Session`` wiring into the serving gateway, the
+virtual-clock simulation bridge, and the ``SystemSimulation`` kwarg
+validation it rides on."""
+
+import jax
+
+jax.config.update("jax_platforms", "cpu")
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.api import (
+    ClusterConfig,
+    QuantumCluster,
+    ServingConfig,
+    SimulationConfig,
+    TenantPolicy,
+)
+from repro.comanager import tenancy
+from repro.comanager.simulation import SystemSimulation
+from repro.comanager.worker import WorkerConfig
+from repro.core import quclassi
+from repro.core.quclassi import QuClassiConfig
+
+
+@pytest.fixture(scope="module")
+def qcfg():
+    return QuClassiConfig(qc=5, n_layers=1)
+
+
+# ------------------------------------------------------------- typed configs
+def test_serving_config_validation():
+    with pytest.raises(ValueError, match="sync"):
+        ServingConfig(mode="bogus")
+    with pytest.raises(ValueError, match="async"):
+        ServingConfig(evict_over_slo=True)  # sync default has no ready queue
+    with pytest.raises(ValueError, match="slots_per_worker"):
+        ServingConfig(slots_per_worker=0)
+    # lane-width typos fail at construction, not at lazy runtime build
+    with pytest.raises(ValueError, match="lane width"):
+        ServingConfig(target=8)
+    ServingConfig(target=256)  # multiples are fine
+
+
+def test_tenant_policy_validation():
+    with pytest.raises(ValueError, match="weight"):
+        TenantPolicy(weight=0.0)
+    with pytest.raises(ValueError, match="slo_ms"):
+        TenantPolicy(slo_ms=-5.0)
+    # 0 would silently become the gateway default; negatives wedge admission
+    with pytest.raises(ValueError, match="max_pending"):
+        TenantPolicy(max_pending=0)
+    with pytest.raises(ValueError, match="max_in_flight"):
+        TenantPolicy(max_in_flight=-1)
+    kw = TenantPolicy(priority=0, slo_ms=250.0, weight=2.0).register_kwargs()
+    assert kw == {"weight": 2.0, "priority": 0, "slo_ms": 250.0}
+
+
+def test_cluster_config_validation():
+    with pytest.raises(ValueError, match="at least one worker"):
+        ClusterConfig(workers=())
+    with pytest.raises(ValueError, match="duplicate"):
+        ClusterConfig(workers=(WorkerConfig("w1", 5), WorkerConfig("w1", 7)))
+    cfg = ClusterConfig.homogeneous(3, 10)
+    assert [w.worker_id for w in cfg.workers] == ["w1", "w2", "w3"]
+    with pytest.raises(ValueError, match="tenancy"):
+        SimulationConfig(tenancy="shared_nothing")
+    with pytest.raises(ValueError, match="lane width"):
+        SimulationConfig(gateway=True, gateway_target=8)
+
+
+# --------------------------------------------------------- session -> gateway
+def test_session_registers_policy_in_gateway(qcfg):
+    with QuantumCluster() as cluster:
+        sess = cluster.session(
+            "alice", TenantPolicy(priority=0, slo_ms=500.0, weight=2.0)
+        )
+        sess.executor(qcfg.spec)  # touches the runtime -> registers
+        st = cluster.runtime.gateway.tenants["alice"]
+        assert st.priority == 0
+        assert st.weight == 2.0
+        assert st.slo_s == pytest.approx(0.5)
+        # same handle back (explicit same policy OR omitted args);
+        # conflicting explicit reopen rejected
+        same = TenantPolicy(priority=0, slo_ms=500.0, weight=2.0)
+        assert cluster.session("alice", same) is sess
+        assert cluster.session("alice") is sess
+        with pytest.raises(ValueError, match="already open"):
+            cluster.session("alice", TenantPolicy(priority=1))
+
+
+def test_close_resets_sessions_and_reregisters_policy(qcfg):
+    """After close(), a retained session handle re-registers with its FULL
+    policy on the rebuilt runtime (not gateway defaults), and the tenant
+    can be reconfigured via a fresh session()."""
+    cluster = QuantumCluster()
+    sess = cluster.session("alice", TenantPolicy(priority=0, slo_ms=100.0, weight=3.0))
+    sess.executor(qcfg.spec)
+    cluster.close()
+    sess.executor(qcfg.spec)  # old handle, new runtime
+    st = cluster.runtime.gateway.tenants["alice"]
+    assert (st.priority, st.weight) == (0, 3.0)
+    assert st.slo_s == pytest.approx(0.1)
+    cluster.close()
+    redone = cluster.session("alice", TenantPolicy(priority=5))  # reconfigure
+    assert redone.policy.priority == 5
+    cluster.close()
+
+
+def test_session_submit_and_drain(qcfg):
+    rng = np.random.default_rng(3)
+    with QuantumCluster(
+        ClusterConfig(serving=ServingConfig(target=128, deadline=0.25))
+    ) as cluster:
+        sess = cluster.session("streamer")
+        futs = [
+            sess.submit(
+                qcfg.spec,
+                jnp.asarray(rng.uniform(0, np.pi, qcfg.n_theta), jnp.float32),
+                jnp.asarray(rng.uniform(0, np.pi, qcfg.n_angles), jnp.float32),
+            )
+            for _ in range(9)
+        ]
+        sess.drain()
+        assert all(f.done for f in futs)
+        tel = sess.telemetry()
+        assert tel is not None and tel["completed"] == 9
+
+
+def test_session_executor_bit_identical_to_pre_redesign_path(qcfg):
+    """The facade is a front, not a fork: a materialized-mode session's
+    executor IS the old ``GatewayRuntime.executor`` path, so gradients are
+    bit-identical; implicit mode matches to kernel tolerance."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.uniform(0, 1, (2, 8, 8)), jnp.float32)
+    y = jnp.asarray([0, 1])
+    params = quclassi.init_params(qcfg, jax.random.PRNGKey(0))
+    with QuantumCluster() as cluster:
+        sess = cluster.session("trainer", bank_mode="materialized")
+        l_new, g_new, _ = quclassi.grad_shift(
+            qcfg, params, x, y, executor=sess.executor(qcfg.spec)
+        )
+        old = cluster.runtime.executor(qcfg.spec, "legacy-tenant")
+        l_old, g_old, _ = quclassi.grad_shift(qcfg, params, x, y, executor=old)
+        assert float(l_new) == float(l_old)
+        np.testing.assert_array_equal(
+            np.asarray(g_new["theta"]), np.asarray(g_old["theta"])
+        )
+        imp = cluster.session("trainer-imp", bank_mode="implicit")
+        _, g_imp, _ = quclassi.grad_shift(
+            qcfg, params, x, y, executor=imp.executor(qcfg.spec)
+        )
+        np.testing.assert_allclose(
+            np.asarray(g_imp["theta"]), np.asarray(g_old["theta"]), atol=1e-5
+        )
+
+
+def test_cluster_backend_factory_uses_fleet_size(qcfg):
+    cluster = QuantumCluster(ClusterConfig.homogeneous(3, 10))
+    be = cluster.backend("batched", qcfg.spec)
+    assert be.n_workers == 3
+    assert cluster.backend("sharded", qcfg.spec).capabilities().sharded
+
+
+# ------------------------------------------------------- virtual-clock bridge
+def _jobs():
+    return [
+        tenancy.JobSpec("a", 5, 1, 48, service_override=0.3),
+        tenancy.JobSpec("b", 7, 1, 48, service_override=0.3),
+    ]
+
+
+def test_simulate_forwards_session_policies():
+    cfg = ClusterConfig(
+        simulation=SimulationConfig(gateway=True, classical_overhead=0.01)
+    )
+    cluster = QuantumCluster(cfg)
+    cluster.session("a", TenantPolicy(priority=0, slo_ms=2000.0, weight=2.0))
+    cluster.session("b", TenantPolicy(weight=0.5))
+    rep = cluster.simulate(_jobs())
+    assert rep.total_circuits == 96
+    assert rep.gateway_summary is not None
+    slos = {t["client"]: t.get("slo_s") for t in rep.gateway_summary["tenants"]}
+    assert slos.get("a") == pytest.approx(2.0)
+    # identical to driving SystemSimulation by hand with the same kwargs
+    legacy = SystemSimulation(
+        list(cfg.workers),
+        _jobs(),
+        gateway=True,
+        classical_overhead=0.01,
+        tenant_weights={"a": 2.0, "b": 0.5},
+        tenant_priorities={"a": 0, "b": 1},
+        tenant_slos_ms={"a": 2000.0},
+    ).run()
+    assert rep.makespan == pytest.approx(legacy.makespan)
+    assert rep.circuits_per_second == pytest.approx(legacy.circuits_per_second)
+
+
+def test_simulate_rejects_sessions_not_in_jobs():
+    """A misspelled session tenant must hit SystemSimulation's unknown-id
+    validation, not silently lose its policy."""
+    cfg = ClusterConfig(simulation=SimulationConfig(gateway=True))
+    cluster = QuantumCluster(cfg)
+    cluster.session("alicee", TenantPolicy(priority=0))  # typo'd tenant
+    with pytest.raises(ValueError, match="alicee"):
+        cluster.simulate([tenancy.JobSpec("alice", 5, 1, 8)])
+
+
+def test_simulate_without_gateway_matches_legacy():
+    cfg = ClusterConfig(
+        workers=(WorkerConfig("w1", 5), WorkerConfig("w2", 10)),
+        simulation=SimulationConfig(classical_overhead=0.02, fair_queue=True),
+    )
+    rep = QuantumCluster(cfg).simulate(_jobs()[:1])
+    legacy = SystemSimulation(
+        [WorkerConfig("w1", 5), WorkerConfig("w2", 10)],
+        _jobs()[:1],
+        classical_overhead=0.02,
+        fair_queue=True,
+    ).run()
+    assert rep.makespan == pytest.approx(legacy.makespan)
+
+
+# --------------------------------------------- SystemSimulation kwarg checks
+@pytest.mark.parametrize(
+    "kwarg",
+    ["tenant_weights", "tenant_priorities", "tenant_slos_ms", "arrivals"],
+)
+def test_simulation_rejects_unknown_tenant_ids(kwarg):
+    value = {"nobody": [0.0]} if kwarg == "arrivals" else {"nobody": 1}
+    with pytest.raises(ValueError, match=rf"{kwarg}.*nobody"):
+        SystemSimulation(
+            [WorkerConfig("w1", 5)],
+            [tenancy.JobSpec("a", 5, 1, 4)],
+            gateway=True,
+            **{kwarg: value},
+        )
+
+
+def test_simulation_rejects_unknown_worker_failures():
+    with pytest.raises(ValueError, match=r"worker_failures.*w9"):
+        SystemSimulation(
+            [WorkerConfig("w1", 5)],
+            [tenancy.JobSpec("a", 5, 1, 4)],
+            worker_failures={"w9": 10.0},
+        )
+
+
+def test_simulation_accepts_known_overrides():
+    sim = SystemSimulation(
+        [WorkerConfig("w1", 5)],
+        [tenancy.JobSpec("a", 5, 1, 4)],
+        gateway=True,
+        tenant_weights={"a": 2.0},
+        tenant_priorities={"a": 0},
+        tenant_slos_ms={"a": 1000.0},
+    )
+    assert sim.gateway.tenants["a"].weight == 2.0

@@ -1,0 +1,240 @@
+"""Shared contract suite for every ``ExecutionBackend`` adapter.
+
+One parametrized module runs all five executor families through identical
+checks: bank identity against the ``materialize()`` reference, capability
+honesty (a declared ``shiftbank`` backend must never materialize; a
+declared ``multibank`` backend must fuse bank sets through the multi-bank
+kernel), cost-model sanity, and legacy ``shift_rule.Executor``
+interoperability.  Adding a sixth executor family means adding one factory
+line here — the contract is the test."""
+
+import jax
+
+jax.config.update("jax_platforms", "cpu")
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import api
+from repro.api.backend import (
+    BACKEND_KINDS,
+    CallableBackend,
+    ExecutionBackend,
+    as_backend,
+    make_backend,
+)
+from repro.core import circuits, shift_rule
+from repro.kernels import ops as kops
+
+KINDS = sorted(BACKEND_KINDS)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = circuits.build_quclassi_circuit(5, 1)
+    rng = np.random.default_rng(7)
+    theta = jnp.asarray(rng.uniform(0, np.pi, spec.n_theta), jnp.float32)
+    # odd sample count exercises lane / shard padding in every adapter
+    data = jnp.asarray(rng.uniform(0, np.pi, (3, spec.n_data)), jnp.float32)
+    bank = shift_rule.build_shift_bank(theta, data)
+    mat = bank.materialize()
+    ref = np.asarray(kops.vqc_fidelity(spec, mat.theta, mat.data))
+    return spec, bank, mat, ref
+
+
+def _backend(kind, spec):
+    kw = {"n_workers": 3} if kind in ("batched", "pooled", "multibank") else {}
+    return make_backend(kind, spec, **kw)
+
+
+@pytest.fixture(params=KINDS)
+def backend(request, setup):
+    spec = setup[0]
+    be = _backend(request.param, spec)
+    yield be
+    be.close()
+
+
+# ------------------------------------------------------------ bank identity
+def test_run_bank_matches_materialized_reference(backend, setup):
+    _, bank, _, ref = setup
+    got = np.asarray(backend.run_bank(bank))
+    assert got.shape == (bank.n_circuits,)
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_run_rows_matches_reference(backend, setup):
+    _, _, mat, ref = setup
+    got = np.asarray(backend.run_rows(mat.theta, mat.data))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_run_bank_set_accepts_materialized_banks(backend, setup):
+    """Contract: every adapter's run_bank_set handles materialized
+    ``CircuitBank``s (per-bank fallback — no (bank, group) structure to
+    fuse), not just implicit ``ShiftBank``s."""
+    _, bank, mat, ref = setup
+    outs = backend.run_bank_set([mat, bank])
+    assert len(outs) == 2
+    np.testing.assert_allclose(np.asarray(outs[0]), ref, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs[1]), ref, atol=1e-5)
+
+
+def test_run_bank_set_matches_per_bank(backend, setup):
+    spec, bank, _, ref = setup
+    rng = np.random.default_rng(11)
+    other = shift_rule.build_shift_bank(
+        jnp.asarray(rng.uniform(0, np.pi, spec.n_theta), jnp.float32),
+        jnp.asarray(rng.uniform(0, np.pi, (2, spec.n_data)), jnp.float32),
+    )
+    mat2 = other.materialize()
+    ref2 = np.asarray(kops.vqc_fidelity(spec, mat2.theta, mat2.data))
+    outs = backend.run_bank_set([bank, other])
+    assert len(outs) == 2
+    np.testing.assert_allclose(np.asarray(outs[0]), ref, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs[1]), ref2, atol=1e-5)
+
+
+# -------------------------------------------------------- capability honesty
+def test_protocol_and_declaration(backend):
+    assert isinstance(backend, ExecutionBackend)
+    caps = backend.capabilities()
+    # capabilities_of resolves the declaration, not the legacy shim
+    assert api.capabilities_of(backend) == caps
+
+
+def test_shiftbank_backends_never_materialize(backend, setup, monkeypatch):
+    """Honesty: a declared shiftbank backend must consume the implicit bank
+    directly; everything else must fall back through materialize()."""
+    _, bank, _, ref = setup
+    calls = {"n": 0}
+    real = shift_rule.ShiftBank.materialize
+
+    def spy(self):
+        calls["n"] += 1
+        return real(self)
+
+    monkeypatch.setattr(shift_rule.ShiftBank, "materialize", spy)
+    got = np.asarray(backend.run_bank(bank))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+    if backend.capabilities().shiftbank:
+        assert calls["n"] == 0, "declared shiftbank but materialized"
+    else:
+        assert calls["n"] > 0, "declared materialize-only but skipped it"
+
+
+def test_multibank_honesty_mixed_shift_rules(backend, setup):
+    """Honesty: a declared ``multibank`` backend genuinely fuses, so a set
+    mixing shift rules (two-term + four-term banks cannot share a launch)
+    must be rejected; per-bank fallback backends run it fine."""
+    spec, bank, _, _ = setup
+    other = shift_rule.build_shift_bank(bank.theta[0], bank.data, four_term=True)
+    if backend.capabilities().multibank:
+        with pytest.raises(ValueError, match="four_term"):
+            backend.run_bank_set([bank, other])
+    else:
+        outs = backend.run_bank_set([bank, other])
+        assert len(outs) == 2 and outs[1].shape == (other.n_circuits,)
+
+
+def test_multibank_worker_single_fused_launch(setup, monkeypatch):
+    """The multibank worker adapter runs a whole same-spec set through ONE
+    fused multi-bank kernel entry per worker, not one launch per bank."""
+    spec, bank, _, ref = setup
+    calls = {"n": 0}
+    real = kops.vqc_fidelity_shiftgroups_multibank
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(kops, "vqc_fidelity_shiftgroups_multibank", spy)
+    be = make_backend("multibank", spec, n_workers=2)
+    outs = be.run_bank_set([bank, bank, bank])
+    assert len(outs) == 3
+    assert calls["n"] <= 2, "expected at most one fused launch per worker"
+    for o in outs:
+        np.testing.assert_allclose(np.asarray(o), ref, atol=1e-5)
+
+
+def test_legacy_executor_interop(backend, setup):
+    """Adapters remain drop-in ``shift_rule.Executor`` callables: run_bank
+    and run_bank_set dispatch through the protocol object unchanged."""
+    _, bank, _, ref = setup
+    np.testing.assert_allclose(
+        np.asarray(shift_rule.run_bank(backend, bank)), ref, atol=1e-5
+    )
+    outs = shift_rule.run_bank_set(backend, [bank, bank])
+    for o in outs:
+        np.testing.assert_allclose(np.asarray(o), ref, atol=1e-5)
+
+
+# ----------------------------------------------------------------- cost model
+def test_cost_model_sanity(backend, setup):
+    spec, bank, mat, _ = setup
+    cm = backend.cost_model()
+    cost = cm.bank_cost_units(spec, bank)
+    assert cost > 0 and np.isfinite(cost)
+    assert cm.bank_vmem_bytes(spec, bank) > 0
+    assert cm.bank_cost_units(spec, mat) > 0
+    # at full lane tiles the prefix-reuse estimate must undercut the
+    # materialized bank (at B=3 both round up to one 128-lane tile, so the
+    # ratio only becomes meaningful at realistic widths)
+    from repro.kernels.vqc_statevector import LANES
+
+    wide = shift_rule.build_shift_bank(
+        bank.theta[0],
+        jnp.tile(bank.data, (LANES // bank.n_samples + 1, 1))[:LANES],
+        four_term=bank.four_term,
+    )
+    wide_cost = cm.bank_cost_units(spec, wide)
+    wide_mat_cost = cm.bank_cost_units(spec, wide.materialize())
+    if backend.capabilities().shiftbank:
+        assert wide_cost < wide_mat_cost, (wide_cost, wide_mat_cost)
+    # monotone in sample count (at lane-tile granularity: 2 tiles > 1 tile)
+    wider = shift_rule.build_shift_bank(
+        wide.theta[0],
+        jnp.tile(wide.data, (2, 1)),
+        four_term=wide.four_term,
+    )
+    assert cm.bank_cost_units(spec, wider) > wide_cost >= cost
+
+
+# -------------------------------------------------------------- legacy bridge
+def test_as_backend_wraps_legacy_callables(setup):
+    spec, bank, _, ref = setup
+
+    def legacy(theta_bank, data_bank):
+        return kops.vqc_fidelity(spec, theta_bank, data_bank)
+
+    be = as_backend(legacy, spec)
+    assert isinstance(be, CallableBackend)
+    assert not be.capabilities().shiftbank  # shim: undeclared => materialized
+    np.testing.assert_allclose(np.asarray(be.run_bank(bank)), ref, atol=1e-5)
+
+    declared = kops.shiftbank_executor(spec)
+    be2 = as_backend(declared, spec)
+    assert be2.capabilities().shiftbank
+    np.testing.assert_allclose(np.asarray(be2.run_bank(bank)), ref, atol=1e-5)
+
+    # protocol objects pass through untouched
+    assert as_backend(be2) is be2
+    with pytest.raises(TypeError, match="CircuitSpec"):
+        as_backend(legacy)
+
+
+def test_make_backend_rejects_unknown_kind(setup):
+    with pytest.raises(ValueError, match="unknown backend kind"):
+        make_backend("warp_drive", setup[0])
+
+
+@pytest.mark.parametrize("kind", ["batched", "pooled", "multibank"])
+def test_pinned_assignment_length_mismatch_rejected(kind, setup):
+    """A backend pinned to a fixed row assignment must reject banks of any
+    other size instead of silently executing only the assigned rows."""
+    spec, _, mat, _ = setup
+    be = make_backend(kind, spec, n_workers=2, assignment=(0, 1, 0, 1))
+    with pytest.raises(ValueError, match="assignment"):
+        be.run_rows(mat.theta, mat.data)  # 63 rows != 4 pinned
+    be.close()

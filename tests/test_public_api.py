@@ -1,0 +1,56 @@
+"""Public-API snapshot: ``repro.api.__all__`` and ``repro.serve.__all__``
+are asserted against the committed snapshot so accidental surface changes
+(a renamed symbol, a leaked helper) fail CI instead of shipping silently.
+
+Intentional surface changes update the snapshot in the same PR:
+
+    PYTHONPATH=src python tests/test_public_api.py --update
+"""
+
+import json
+import pathlib
+
+SNAPSHOT = pathlib.Path(__file__).parent / "snapshots" / "public_api.json"
+
+
+def _current() -> dict:
+    import repro.api
+    import repro.serve
+
+    return {
+        "repro.api": sorted(repro.api.__all__),
+        "repro.serve": sorted(repro.serve.__all__),
+    }
+
+
+def test_public_api_matches_snapshot():
+    snap = json.loads(SNAPSHOT.read_text())
+    current = _current()
+    assert current == snap, (
+        "public API surface drifted from tests/snapshots/public_api.json; "
+        "if intentional, regenerate with "
+        "`PYTHONPATH=src python tests/test_public_api.py --update` "
+        "and commit the diff"
+    )
+
+
+def test_public_api_symbols_resolve():
+    """Everything advertised in __all__ must actually import (lazy loaders
+    included) and nothing private leaks in."""
+    import repro.api
+    import repro.serve
+
+    for mod in (repro.api, repro.serve):
+        for name in mod.__all__:
+            assert not name.startswith("_"), name
+            assert getattr(mod, name) is not None, f"{mod.__name__}.{name}"
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--update" in sys.argv:
+        SNAPSHOT.write_text(json.dumps(_current(), indent=2) + "\n")
+        print(f"updated {SNAPSHOT}")
+    else:
+        print(json.dumps(_current(), indent=2))
