@@ -56,6 +56,13 @@ GATES = [
     ("BENCH_gateway.json", r"poisson\.lane_fill$", "higher", 0.25),
     ("BENCH_gateway.json", r"poisson\.slo_attainment$", "higher", 0.10),
     ("BENCH_gateway.json", r"poisson\.tenants\.\d+\.p99_latency_s$", "lower", 0.25),
+    # observability layer (virtual clock, so deterministic): tracing must
+    # keep covering the run — event count shrinking past the band means a
+    # lifecycle hook got dropped — and circuits must not start spending a
+    # larger share of their end-to-end latency waiting in the coalescer.
+    ("BENCH_gateway.json", r"poisson\.observability\.events$", "higher", 0.25),
+    ("BENCH_gateway.json",
+     r"poisson\.observability\.stages\.coalesce_wait_share$", "lower", 0.25),
 ]
 
 #: substrings marking wall-clock metrics: never gated, listed informationally.

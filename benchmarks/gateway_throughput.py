@@ -226,7 +226,8 @@ def async_kernel(n_per_client: int = 256, slots_per_worker: int = 2,
     }
 
 
-def main(run_kernel: bool = True, scale: float = 0.25):
+def main(run_kernel: bool = True, scale: float = 0.25,
+         trace_path: str | None = None):
     print("## fig6-shaped workload: 4 clients x 4 workers (virtual clock)")
     base, gw, rows = fig6(scale)
     keys = list(rows[0])
@@ -260,6 +261,20 @@ def main(run_kernel: bool = True, scale: float = 0.25):
           f"({s['size_flushes']} size / {s['deadline_flushes']} deadline "
           f"flushes), slo attainment {s.get('slo_attainment')}")
     assert s["lane_fill"] >= 0.5, "open-loop lane fill must stay >= 50%"
+
+    # stage-latency breakdown from the lifecycle traces: virtual-clock, so
+    # the shares and event counts are machine-independent and trend-gated.
+    obs = s["observability"]
+    stages = obs["stages"]
+    shares = {m: stages.get(f"{m}_share", 0.0)
+              for m in ("queue_wait", "coalesce_wait", "place_wait",
+                        "dispatch_lag", "execute")}
+    print(f"# trace: {obs['events']} events over {obs['records']} records; "
+          f"e2e share " +
+          " ".join(f"{m}={v:.0%}" for m, v in shares.items()))
+    if trace_path is not None:
+        rep.trace.export_chrome_trace(trace_path)
+        print(f"[artifact] wrote {trace_path} (open in ui.perfetto.dev)")
 
     result = {
         "fig6": rows,

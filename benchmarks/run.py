@@ -81,7 +81,8 @@ def main() -> None:
     section("Serving gateway: cross-tenant circuit-bank coalescing "
             "(beyond paper)")
     gateway_result = gateway_throughput.main(
-        run_kernel=args.full, scale=0.05 if args.quick else 0.25)
+        run_kernel=args.full, scale=0.05 if args.quick else 0.25,
+        trace_path=os.path.join(args.out_dir, "trace_gateway.json"))
     _write_artifact(args.out_dir, "BENCH_gateway.json", gateway_result)
 
     if args.full:

@@ -39,6 +39,7 @@ _LAZY = {
     "as_backend": "repro.api.backend",
     "make_backend": "repro.api.backend",
     "ClusterConfig": "repro.api.config",
+    "ObservabilityConfig": "repro.obs.config",
     "ServingConfig": "repro.api.config",
     "SimulationConfig": "repro.api.config",
     "TenantPolicy": "repro.api.config",

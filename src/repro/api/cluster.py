@@ -251,5 +251,14 @@ class Session:
                 return row
         return None
 
+    def trace(self) -> list[dict]:
+        """This tenant's finished circuit lifecycle records (oldest first):
+        timestamped stage transitions submit -> ... -> complete/evict, the
+        executing worker, and the outcome.  Empty when tracing is disabled
+        (``ServingConfig.observability``) or nothing has finished yet; use
+        ``cluster.telemetry.trace.export_chrome_trace(path)`` for the
+        Perfetto view across all tenants."""
+        return self.cluster.runtime.telemetry.trace.tenant_records(self.tenant)
+
 
 __all__ = ["QuantumCluster", "Session"]

@@ -17,6 +17,7 @@ import dataclasses
 from typing import Optional
 
 from repro.comanager.worker import WorkerConfig
+from repro.obs.config import ObservabilityConfig
 
 #: default heterogeneous fleet (matches the paper's 5/10/15/20-qubit
 #: workers and GatewayRuntime's historical default).
@@ -88,6 +89,9 @@ class ServingConfig:
     mesh_spill: bool = True
     worker_vmem_bytes: Optional[int] = None
     evict_over_slo: bool = False
+    #: tracing + metrics knobs (None = trace everything at the defaults;
+    #: ``ObservabilityConfig.disabled()`` turns the recorder off).
+    observability: Optional[ObservabilityConfig] = None
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
@@ -123,6 +127,7 @@ class ServingConfig:
             slots_per_worker=self.slots_per_worker,
             mesh_spill=self.mesh_spill,
             evict_over_slo=self.evict_over_slo,
+            observability=self.observability,
         )
         if self.worker_vmem_bytes is not None:
             kw["worker_vmem_bytes"] = self.worker_vmem_bytes
@@ -154,6 +159,8 @@ class SimulationConfig:
     gateway_target: Optional[int] = None
     gateway_deadline: float = 1.0
     gateway_async: bool = False
+    #: gateway-mode tracing + metrics knobs (None = trace everything).
+    observability: Optional[ObservabilityConfig] = None
 
     def __post_init__(self):
         if self.tenancy is not None and self.tenancy not in (
@@ -174,8 +181,14 @@ class SimulationConfig:
                 )
 
     def simulation_kwargs(self) -> dict:
-        """The ``SystemSimulation`` keyword view of this config."""
-        return dataclasses.asdict(self)
+        """The ``SystemSimulation`` keyword view of this config.
+
+        Shallow on purpose: ``dataclasses.asdict`` would deep-convert the
+        nested ``ObservabilityConfig`` into a plain dict, and the simulation
+        passes it through to the trace recorder as the typed object."""
+        return {
+            f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+        }
 
 
 @dataclasses.dataclass(frozen=True)

@@ -39,6 +39,10 @@ class SimulationReport:
     #: serve-gateway telemetry (per-tenant latency, lane-fill) when the
     #: simulation ran with gateway=True; None otherwise.
     gateway_summary: dict | None = None
+    #: the gateway telemetry's ``TraceRecorder`` (lifecycle traces, worker
+    #: timelines, Chrome-trace export) when the simulation ran with
+    #: gateway=True; None otherwise.
+    trace: object | None = None
 
     @property
     def circuits_per_second(self) -> float:
@@ -95,6 +99,7 @@ class SystemSimulation:
         tenant_priorities: dict[str, int] | None = None,
         tenant_slos_ms: dict[str, float] | None = None,
         arrivals: dict[str, list[float]] | None = None,
+        observability=None,
     ):
         """``assign_latency``: manager->worker dispatch cost per circuit.
 
@@ -194,12 +199,14 @@ class SystemSimulation:
         if gateway:
             from repro.kernels.vqc_statevector import LANES
             from repro.serve.gateway import Gateway
+            from repro.serve.metrics import Telemetry
 
             self.gw_lanes = LANES
             self.gateway = Gateway(
                 target=gateway_target or LANES,
                 deadline=gateway_deadline,
                 lanes=LANES,
+                telemetry=Telemetry(lanes=LANES, observability=observability),
             )
             for j in jobs:
                 self.gateway.register_client(
@@ -343,7 +350,7 @@ class SystemSimulation:
         possibly merged with newer arrivals — rather than replayed as-is."""
         batch = self._gw_batches.pop(batch_task.task_id)
         self._gw_dispatched.discard(batch_task.task_id)
-        self.gateway.requeue(batch)
+        self.gateway.requeue(batch, now=t)
         self._gw_pump(t)
 
     def _on_start(self, t: float, payload) -> None:
@@ -358,6 +365,23 @@ class SystemSimulation:
                 self.manager.submit(task)
             return
         finish = w.start(task, t)
+        if self.gateway is not None and task.task_id in self._gw_batches:
+            tr = self.gateway.telemetry.trace
+            if tr.enabled:
+                batch = self._gw_batches[task.task_id]
+                seqs = [m.seq for m in batch.members]
+                tr.batch_stage(seqs, "dispatched", t, worker=wid)
+                tr.batch_stage(seqs, "kernel_start", t)
+                tr.worker_span(
+                    wid,
+                    t,
+                    finish,
+                    name=f"batch x{batch.n}",
+                    args={
+                        "members": batch.n,
+                        "service_time": round(finish - t, 9),
+                    },
+                )
         self.loop.schedule(finish, "complete", (task, wid))
 
     def _on_complete(self, t: float, payload) -> None:
@@ -408,6 +432,14 @@ class SystemSimulation:
             self._in_flight[cid] = self._in_flight.get(cid, 0) + 1
             if self.gateway is not None and task.task_id in self._gw_batches:
                 self._gw_dispatched.add(task.task_id)
+                tr = self.gateway.telemetry.trace
+                if tr.enabled:
+                    tr.batch_stage(
+                        (m.seq for m in self._gw_batches[task.task_id].members),
+                        "placed",
+                        t,
+                        worker=wid,
+                    )
             self.loop.schedule(free + self.assign_latency, "start", (task, wid))
 
         if self.lockstep:
@@ -460,6 +492,9 @@ class SystemSimulation:
             fidelity_retention=(sum(rets) / len(rets)) if rets else 1.0,
             gateway_summary=(
                 self.gateway.telemetry.summary() if self.gateway is not None else None
+            ),
+            trace=(
+                self.gateway.telemetry.trace if self.gateway is not None else None
             ),
         )
 

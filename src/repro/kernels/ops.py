@@ -44,24 +44,47 @@ def kernel_executor(spec: CircuitSpec):
     return lambda theta_bank, data_bank: vqc_fidelity(spec, theta_bank, data_bank)
 
 
+# ----------------------------------------------- kernel profiling observer
+#: module-level launch observer: when set, every shift-plan launch entering
+#: through the public wrappers reports its static ``shift_execution_info``
+#: (mode fused/spill/materialize, launches, tiles, VMEM footprint) plus the
+#: lane/bank shape.  The hook lives OUTSIDE the jit boundary — the public
+#: shift wrappers below are plain Python around inner jit'd functions — so
+#: it fires once per launch, not once per trace.  None (default) costs one
+#: global read per launch.
+_launch_observer = None
+
+
+def set_launch_observer(fn):
+    """Install ``fn(info: dict)`` as the shift-launch observer (None
+    disables).  Returns the previous observer so callers can restore it."""
+    global _launch_observer
+    prev = _launch_observer
+    _launch_observer = fn
+    return prev
+
+
+def _notify_launch(spec, n_lanes, four_term, groups, banks=1):
+    obs = _launch_observer
+    if obs is None:
+        return
+    info = dict(
+        K.shift_execution_info(spec, n_lanes, four_term=four_term, groups=groups)
+    )
+    info["lanes"] = n_lanes
+    info["banks"] = banks
+    obs(info)
+
+
 # ------------------------------------------------- shift-structured banks
 @functools.partial(jax.jit, static_argnums=(0, 3, 4))
-def vqc_fidelity_shiftgroups(
+def _shiftgroups_jit(
     spec: CircuitSpec,
     theta: jnp.ndarray,
     data: jnp.ndarray,
     four_term: bool = False,
     groups: tuple[int, ...] | None = None,
 ) -> jnp.ndarray:
-    """Shift-bank fidelities for the requested groups, (G, B).
-
-    ``theta (B, P)`` / ``data (B, D)`` are the IMPLICIT bank — base angles
-    only.  Uses the prefix-reuse kernel when the circuit matches the
-    SWAP-test product structure (spilling prefix checkpoints to HBM in
-    depth tiles when the register is too wide for VMEM); otherwise
-    materializes just the requested groups and runs the standard fused
-    kernel (same results, more work).
-    """
     from repro.core import shift_rule
 
     if K.build_shift_plan(spec) is not None:
@@ -83,7 +106,26 @@ def vqc_fidelity_shiftgroups(
     return vqc_fidelity(spec, theta_bank, data_bank).reshape(len(groups), b)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
+def vqc_fidelity_shiftgroups(
+    spec: CircuitSpec,
+    theta: jnp.ndarray,
+    data: jnp.ndarray,
+    four_term: bool = False,
+    groups: tuple[int, ...] | None = None,
+) -> jnp.ndarray:
+    """Shift-bank fidelities for the requested groups, (G, B).
+
+    ``theta (B, P)`` / ``data (B, D)`` are the IMPLICIT bank — base angles
+    only.  Uses the prefix-reuse kernel when the circuit matches the
+    SWAP-test product structure (spilling prefix checkpoints to HBM in
+    depth tiles when the register is too wide for VMEM); otherwise
+    materializes just the requested groups and runs the standard fused
+    kernel (same results, more work).
+    """
+    _notify_launch(spec, theta.shape[0], four_term, groups)
+    return _shiftgroups_jit(spec, theta, data, four_term, groups)
+
+
 def vqc_fidelity_shiftbank(
     spec: CircuitSpec,
     theta: jnp.ndarray,
@@ -116,6 +158,30 @@ def _pack_banks(thetas, datas):
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _shiftgroups_multibank_jit(
+    spec: CircuitSpec, thetas, datas, four_term: bool, group_sets: tuple
+) -> tuple:
+    union = tuple(sorted({g for gs in group_sets for g in gs}))
+    if K.build_shift_plan(spec) is None:
+        return tuple(
+            _shiftgroups_jit(spec, t, d, four_term, gs)
+            for t, d, gs in zip(thetas, datas, group_sets)
+        )
+    theta_cat, data_cat, segments = _pack_banks(thetas, datas)
+    out = jnp.clip(
+        K.vqc_shift_fidelity(
+            spec, theta_cat, data_cat, four_term=four_term, groups=union
+        ),
+        0.0,
+        1.0,
+    )
+    row = {g: i for i, g in enumerate(union)}
+    return tuple(
+        jnp.stack([out[row[g], off : off + b] for g in gs], axis=0)
+        for (off, b), gs in zip(segments, group_sets)
+    )
+
+
 def vqc_fidelity_shiftgroups_multibank(
     spec: CircuitSpec, thetas, datas, four_term: bool, group_sets: tuple
 ) -> tuple:
@@ -135,25 +201,11 @@ def vqc_fidelity_shiftgroups_multibank(
     Circuits without the verified product structure fall back to per-bank
     materialized execution (correct, not fused).
     """
-    union = tuple(sorted({g for gs in group_sets for g in gs}))
-    if K.build_shift_plan(spec) is None:
-        return tuple(
-            vqc_fidelity_shiftgroups(spec, t, d, four_term, gs)
-            for t, d, gs in zip(thetas, datas, group_sets)
-        )
-    theta_cat, data_cat, segments = _pack_banks(thetas, datas)
-    out = jnp.clip(
-        K.vqc_shift_fidelity(
-            spec, theta_cat, data_cat, four_term=four_term, groups=union
-        ),
-        0.0,
-        1.0,
-    )
-    row = {g: i for i, g in enumerate(union)}
-    return tuple(
-        jnp.stack([out[row[g], off : off + b] for g in gs], axis=0)
-        for (off, b), gs in zip(segments, group_sets)
-    )
+    if _launch_observer is not None:
+        union = tuple(sorted({g for gs in group_sets for g in gs}))
+        lanes = sum(t.shape[0] + (-t.shape[0]) % K.LANES for t in thetas)
+        _notify_launch(spec, lanes, four_term, union, banks=len(thetas))
+    return _shiftgroups_multibank_jit(spec, thetas, datas, four_term, group_sets)
 
 
 def multibank_executor(spec: CircuitSpec):

@@ -1,0 +1,33 @@
+"""repro.obs — tracing + metrics for the multi-tenant serving stack.
+
+One recorder serves both runtimes (virtual-clock simulation and real
+kernel dispatchers) because every clock in the stack is a caller-supplied
+float.  See ``trace.TraceRecorder`` for the hook surface and
+``histogram.LogHistogram`` for the fixed-memory aggregation primitive.
+"""
+from repro.obs.config import LIFECYCLE_STAGES, ObservabilityConfig
+from repro.obs.histogram import LogHistogram
+from repro.obs.trace import (
+    OUTCOMES,
+    STAGE_METRICS,
+    CircuitTrace,
+    TraceBuffer,
+    TraceRecorder,
+    WorkerSpan,
+    WorkerTimeline,
+    validate_trace,
+)
+
+__all__ = [
+    "LIFECYCLE_STAGES",
+    "OUTCOMES",
+    "STAGE_METRICS",
+    "CircuitTrace",
+    "LogHistogram",
+    "ObservabilityConfig",
+    "TraceBuffer",
+    "TraceRecorder",
+    "WorkerSpan",
+    "WorkerTimeline",
+    "validate_trace",
+]

@@ -1,0 +1,72 @@
+"""Typed configuration for the observability layer.
+
+``ObservabilityConfig`` travels inside ``ServingConfig`` / ``SimulationConfig``
+(repro.api) down to the ``Telemetry`` object every gateway owns, so one
+dataclass controls tracing across the real dispatchers and the virtual-clock
+simulation alike.  Validation happens at construction — a bad sampling rate
+fails where it is written, not deep inside the serving hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+#: per-circuit lifecycle stages, in pipeline order.  ``submit`` opens the
+#: trace; the terminal transition (complete / evict / fail / reject) closes
+#: it and is always recorded for open traces regardless of stage filtering.
+LIFECYCLE_STAGES = (
+    "submit",
+    "admit",
+    "coalesced",
+    "placed",
+    "dispatched",
+    "kernel_start",
+    "requeue",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservabilityConfig:
+    """Tracing + metrics knobs.
+
+    ``enabled``: master switch — False makes every recorder hook a cheap
+    no-op (the sampling=0 fast path the gateway benchmark pins).
+    ``sample_rate``: fraction of circuits that get a full lifecycle trace
+    record (deterministic hash of the admission sequence number, so virtual
+    -clock traces are reproducible); histograms and worker timelines are
+    O(1) memory and always on while enabled.  ``buffer_size``: ring-buffer
+    capacity for finished trace records and worker spans — memory stays
+    bounded at millions of circuits.  ``stages``: optional subset of
+    ``LIFECYCLE_STAGES`` to record (None = all).
+    """
+
+    enabled: bool = True
+    sample_rate: float = 1.0
+    buffer_size: int = 65536
+    stages: Optional[tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.sample_rate <= 1.0:
+            raise ValueError(
+                f"sample_rate must be in [0, 1], got {self.sample_rate}"
+            )
+        if self.buffer_size < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1, got {self.buffer_size}"
+            )
+        if self.stages is not None:
+            if not isinstance(self.stages, tuple):
+                object.__setattr__(self, "stages", tuple(self.stages))
+            unknown = sorted(set(self.stages) - set(LIFECYCLE_STAGES))
+            if unknown:
+                raise ValueError(
+                    f"unknown stage(s) {unknown}; valid stages: "
+                    f"{list(LIFECYCLE_STAGES)}"
+                )
+
+    @classmethod
+    def disabled(cls) -> "ObservabilityConfig":
+        return cls(enabled=False, sample_rate=0.0)
+
+
+__all__ = ["LIFECYCLE_STAGES", "ObservabilityConfig"]

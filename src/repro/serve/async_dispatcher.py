@@ -45,6 +45,7 @@ from repro.serve.dispatcher import (
     batch_cost_units,
     batch_family,
     execute_batch,
+    kernel_span_args,
 )
 from repro.serve.gateway import Gateway
 
@@ -258,17 +259,33 @@ class AsyncDispatcher(Dispatcher):
                     break
                 else:
                     return  # nothing placeable right now
+            tr = self.gateway.telemetry.trace
             if evict is not None:
                 self.gateway.evict(evict, now)
             elif spill is not None:
+                if tr.enabled:
+                    tr.batch_stage(
+                        (m.seq for m in spill.members), "placed", now,
+                        worker="mesh",
+                    )
                 self._pool.submit(self._run_spill, spill)
             elif launch is not None:
+                if tr.enabled:
+                    tr.batch_stage(
+                        (m.seq for m in launch[0].members), "placed", now,
+                        worker=launch[2],
+                    )
                 self._pool.submit(self._run, *launch)
 
     def _run_spill(self, batch: CoalescedBatch) -> None:
         """Spill-slot thread: execute one oversized batch on the whole
         device mesh, resolve its futures, release the spill slot."""
+        tr = self.gateway.telemetry.trace
         t0 = self.clock()
+        if tr.enabled:
+            seqs = [m.seq for m in batch.members]
+            tr.batch_stage(seqs, "dispatched", t0)
+            tr.batch_stage(seqs, "kernel_start", t0)
         err: BaseException | None = None
         fids = None
         try:
@@ -278,6 +295,11 @@ class AsyncDispatcher(Dispatcher):
         dt = self.clock() - t0
         now = self.clock()
         if err is None:
+            if tr.enabled:
+                tr.worker_span(
+                    "mesh", t0, t0 + dt, kind="spill",
+                    args=kernel_span_args(batch),
+                )
             self.gateway.telemetry.service.update(
                 ("spill", batch_family(batch)), batch_cost_units(batch), dt
             )
@@ -302,7 +324,12 @@ class AsyncDispatcher(Dispatcher):
     ) -> None:
         """Worker-slot thread: execute one batch, resolve its futures (out
         of submission order relative to other batches), release the slot."""
+        tr = self.gateway.telemetry.trace
         t0 = self.clock()
+        if tr.enabled:
+            seqs = [m.seq for m in batch.members]
+            tr.batch_stage(seqs, "dispatched", t0)
+            tr.batch_stage(seqs, "kernel_start", t0)
         err: BaseException | None = None
         fids = None
         try:
@@ -314,6 +341,8 @@ class AsyncDispatcher(Dispatcher):
         dt = self.clock() - t0
         now = self.clock()
         if err is None:
+            if tr.enabled:
+                tr.worker_span(wid, t0, t0 + dt, args=kernel_span_args(batch))
             self._observe(batch, dt)
             self._record(batch)
             self.gateway.complete(batch, fids, now)

@@ -192,3 +192,16 @@ class Coalescer:
     @property
     def buffered(self) -> int:
         return sum(len(b) for b in self._buffers.values())
+
+    @property
+    def buffered_lanes(self) -> int:
+        """Lane-weighted buffer depth: kernel lanes the buffered circuits
+        will occupy when flushed (== ``buffered`` for row circuits; a
+        shift-group subtask weighs its bank's sample width).  The depth
+        metric the observability layer samples each pump."""
+        return sum(m.lanes for b in self._buffers.values() for m in b)
+
+    def oldest_wait(self, now: float) -> float:
+        """Age of the oldest buffered circuit (0.0 when empty)."""
+        arrivals = [m.arrival for b in self._buffers.values() for m in b]
+        return now - min(arrivals) if arrivals else 0.0

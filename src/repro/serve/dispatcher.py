@@ -234,6 +234,40 @@ def batch_cost_units(batch: CoalescedBatch) -> float:
 WORKER_VMEM_BYTES = 16 * 1024 * 1024
 
 
+def kernel_span_args(batch: CoalescedBatch) -> dict:
+    """Trace-span payload for one batch's kernel launch: the shift-plan
+    execution shape (``shift_execution_info`` — fused/spill/materialize,
+    launches, tiles, VMEM footprint) for shift-group batches, the padded
+    row-tile footprint otherwise.  Only computed when tracing is enabled."""
+    spec = batch_spec(batch)
+    if isinstance(batch.key, ShiftGroupKey):
+        banks, group_sets, _ = bank_partition(batch)
+        lanes = sum(math.ceil(b.n_samples / LANES) * LANES for b in banks)
+        union = tuple(sorted({g for gs in group_sets for g in gs}))
+        info = shift_execution_info(
+            spec, lanes, four_term=batch.key.four_term, groups=union
+        )
+        return {
+            "kind": "shift",
+            "mode": info["mode"],
+            "launches": info["launches"],
+            "n_tiles": info["n_tiles"],
+            "vmem_bytes": info["vmem_bytes"],
+            "banks": len(banks),
+            "lanes": lanes,
+            "members": batch.n,
+        }
+    padded = batch.padded(LANES)
+    return {
+        "kind": "rows",
+        "mode": "rows",
+        "launches": 1,
+        "vmem_bytes": 2 * 4 * (2**spec.n_qubits) * kernel_tb(padded),
+        "lanes": padded,
+        "members": batch.n,
+    }
+
+
 def batch_vmem_bytes(batch: CoalescedBatch) -> int:
     """Modeled single-worker VMEM working set of one coalesced batch.
 
@@ -371,12 +405,23 @@ class Dispatcher:
     def run_spilled(self, batch: CoalescedBatch) -> str:
         """Execute one oversized batch on the whole device mesh (no single
         worker is charged — the spill path is its own resource)."""
+        tr = self.gateway.telemetry.trace
         t0 = self.clock()
+        if tr.enabled:
+            seqs = [m.seq for m in batch.members]
+            tr.batch_stage(seqs, "placed", t0, worker="mesh")
+            tr.batch_stage(seqs, "dispatched", t0)
+            tr.batch_stage(seqs, "kernel_start", t0)
         fids = execute_batch(batch, *self._spill_fns())
+        t1 = self.clock()
+        if tr.enabled:
+            tr.worker_span(
+                "mesh", t0, t1, kind="spill", args=kernel_span_args(batch)
+            )
         self.gateway.telemetry.service.update(
             ("spill", batch_family(batch)),
             batch_cost_units(batch),
-            self.clock() - t0,
+            t1 - t0,
         )
         self.gateway.telemetry.on_spill(batch.lane_count)
         self._record(batch)
@@ -405,11 +450,20 @@ class Dispatcher:
                 f"no worker fits a {task.demand}-qubit batch (capacities: {caps})"
             )
         self._charge(wid, est)
+        tr = self.gateway.telemetry.trace
         t0 = self.clock()
+        if tr.enabled:
+            seqs = [m.seq for m in batch.members]
+            tr.batch_stage(seqs, "placed", t0, worker=wid)
+            tr.batch_stage(seqs, "dispatched", t0)
+            tr.batch_stage(seqs, "kernel_start", t0)
         fids = execute_batch(
             batch, self.kernel, self.shift_kernel, self.multibank_kernel
         )
-        self._observe(batch, self.clock() - t0)
+        t1 = self.clock()
+        if tr.enabled:
+            tr.worker_span(wid, t0, t1, args=kernel_span_args(batch))
+        self._observe(batch, t1 - t0)
         self._record(batch)
         self._charge(wid, -est)
         self.manager.complete(wid, task, self.clock())
@@ -480,6 +534,7 @@ class GatewayRuntime:
         clock=time.perf_counter,
         mode: str = "sync",
         slots_per_worker: int = 1,
+        observability=None,
         **gateway_opts,
     ):
         if mode not in ("sync", "async"):
@@ -489,7 +544,7 @@ class GatewayRuntime:
                 WorkerConfig(f"w{i + 1}", q) for i, q in enumerate((5, 10, 15, 20))
             ]
         self.mode = mode
-        self.telemetry = Telemetry()
+        self.telemetry = Telemetry(observability=observability)
         self.gateway = Gateway(
             target=target,
             deadline=deadline,
@@ -522,10 +577,23 @@ class GatewayRuntime:
                     "(the sync dispatcher has no ready queue)"
                 )
             self.dispatcher = Dispatcher(self.gateway, workers, **common)
+        # kernel profiling hook: shift-plan launches report their execution
+        # shape (fused/spill/materialize) to this runtime's recorder for as
+        # long as the runtime is open; restored on close so runtimes nest.
+        self._prev_observer = None
+        self._observer_installed = False
+        if self.telemetry.trace.enabled:
+            self._prev_observer = kops.set_launch_observer(
+                self.telemetry.trace.on_kernel_launch
+            )
+            self._observer_installed = True
         self.dispatcher.start()
 
     def close(self) -> None:
         """Stop the pump thread and worker pool (async mode; sync no-op)."""
+        if self._observer_installed:
+            kops.set_launch_observer(self._prev_observer)
+            self._observer_installed = False
         self.dispatcher.close()
 
     def __enter__(self) -> "GatewayRuntime":

@@ -212,6 +212,7 @@ class Gateway:
             st = self._tenant(client_id)
             if len(st.queue) >= st.max_pending:
                 self.telemetry.on_reject(client_id)
+                self.telemetry.trace.circuit_reject(self._seq, client_id, key, now)
                 raise Backpressure(
                     f"{client_id}: {len(st.queue)} pending >= {st.max_pending}"
                 )
@@ -236,6 +237,9 @@ class Gateway:
             )
             self._seq += 1
             self.telemetry.on_submit(client_id, now)
+            self.telemetry.trace.circuit_submit(
+                fut.seq, client_id, key, now, queue_depth=len(st.queue)
+            )
             return fut
 
     # ------------------------------------------------- fair dequeue + pump
@@ -255,6 +259,7 @@ class Gateway:
         """Move admitted circuits into the coalescer in priority-then-fair
         order, then collect size-triggered and deadline-due batches."""
         with self._lock:
+            tr = self.telemetry.trace
             batches: list[CoalescedBatch] = []
             while True:
                 cid = self._next_client()
@@ -264,6 +269,7 @@ class Gateway:
                 item = st.queue.popleft()
                 st.vpass += 1.0 / st.weight
                 st.in_flight += 1
+                tr.circuit_stage(item.seq, "admit", now)
                 batches.extend(self.coalescer.add(item))
             batches.extend(self.coalescer.flush_due(now))
             for b in batches:
@@ -272,6 +278,11 @@ class Gateway:
                     padded=b.padded(self.coalescer.lanes),
                     by_deadline=b.by_deadline,
                 )
+                if tr.enabled:
+                    tr.batch_stage((m.seq for m in b.members), "coalesced", now)
+            tr.coalescer_sample(
+                self.coalescer.buffered, self.coalescer.buffered_lanes
+            )
             return batches
 
     def flush(self, now: float) -> list[CoalescedBatch]:
@@ -279,12 +290,15 @@ class Gateway:
         with self._lock:
             batches = self.pump(now)
             forced = self.coalescer.flush_all(now)
+            tr = self.telemetry.trace
             for b in forced:
                 self.telemetry.on_batch(
                     b.lane_count,
                     padded=b.padded(self.coalescer.lanes),
                     by_deadline=b.by_deadline,
                 )
+                if tr.enabled:
+                    tr.batch_stage((m.seq for m in b.members), "coalesced", now)
             return batches + forced
 
     # ------------------------------------------------------------ results
@@ -299,6 +313,7 @@ class Gateway:
                 if m.future is not None:
                     m.future.set(values[i] if values is not None else None)
                 self.telemetry.on_complete(m.client_id, m.arrival, now)
+                self.telemetry.trace.circuit_end(m.seq, "complete", now)
 
     def fail(self, batch: CoalescedBatch, exc: BaseException, now: float) -> None:
         """Resolve a batch whose execution errored: every member future
@@ -310,6 +325,7 @@ class Gateway:
                 st.in_flight = max(0, st.in_flight - 1)
                 if m.future is not None:
                     m.future.set_error(exc)
+                self.telemetry.trace.circuit_end(m.seq, "fail", now)
 
     def evict(self, batch: CoalescedBatch, now: float) -> None:
         """Preemptively shed a batch whose members' SLO budgets fully
@@ -329,14 +345,18 @@ class Gateway:
                         )
                     )
                 self.telemetry.on_evict(m.client_id)
+                self.telemetry.trace.circuit_end(m.seq, "evict", now)
 
-    def requeue(self, batch: CoalescedBatch) -> None:
+    def requeue(self, batch: CoalescedBatch, now: float | None = None) -> None:
         """Return a failed (evicted-worker) batch for re-coalescing; the
         members keep their futures and original arrivals, so nothing is
         dropped and the deadline policy re-emits them promptly.  They remain
         counted in-flight: they never went back through admission."""
         with self._lock:
             self.coalescer.requeue(batch)
+            tr = self.telemetry.trace
+            if now is not None and tr.enabled:
+                tr.batch_stage((m.seq for m in batch.members), "requeue", now)
 
     # --------------------------------------------------------- inspection
     def next_deadline(self) -> Optional[float]:

@@ -28,16 +28,11 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
-from typing import Hashable
+from typing import Hashable, Optional
 
-
-def _percentile(sorted_xs: list[float], q: float) -> float:
-    """Nearest-rank percentile on an already-sorted list (no numpy needed
-    on the hot path)."""
-    if not sorted_xs:
-        return float("nan")
-    k = max(0, min(len(sorted_xs) - 1, math.ceil(q / 100.0 * len(sorted_xs)) - 1))
-    return sorted_xs[k]
+from repro.obs.config import ObservabilityConfig
+from repro.obs.histogram import LogHistogram
+from repro.obs.trace import TraceRecorder, _key_str
 
 
 @dataclasses.dataclass
@@ -50,7 +45,10 @@ class TenantStats:
     evicted: int = 0
     first_submit: float = float("inf")
     last_complete: float = 0.0
-    latencies: list = dataclasses.field(default_factory=list)
+    #: streaming end-to-end latency histogram — O(1) memory per tenant no
+    #: matter how many circuits complete (percentiles within one bucket
+    #: width, i.e. a 1.25x relative factor, of exact).
+    latencies: LogHistogram = dataclasses.field(default_factory=LogHistogram)
     #: end-to-end latency SLO in seconds (None = best-effort tenant).
     slo_s: float | None = None
     slo_misses: int = 0
@@ -70,7 +68,7 @@ class TenantStats:
         return 1.0 - self.slo_misses / max(self.completed + self.evicted, 1)
 
     def latency_percentile(self, q: float) -> float:
-        return _percentile(sorted(self.latencies), q)
+        return self.latencies.percentile(q)
 
 
 class ServiceModel:
@@ -83,7 +81,12 @@ class ServiceModel:
         self.alpha = alpha
         self.default_s = default_s
         self._per_key: dict[Hashable, float] = {}
+        self._updates: dict[Hashable, int] = {}
         self._global: float | None = None
+        # EWMA of |predicted - measured| / measured per update, so placement
+        # cost-model drift is visible in Telemetry.summary() instead of
+        # silently steering Algorithm-2 decisions.
+        self._rel_error: float | None = None
         self._lock = threading.Lock()
 
     def update(self, key: Hashable, units: float, seconds: float) -> None:
@@ -92,11 +95,19 @@ class ServiceModel:
         per_unit = seconds / units
         with self._lock:
             old = self._per_key.get(key)
+            if old is not None and seconds > 0:
+                rel = abs(old * units - seconds) / seconds
+                self._rel_error = (
+                    rel
+                    if self._rel_error is None
+                    else self.alpha * rel + (1 - self.alpha) * self._rel_error
+                )
             self._per_key[key] = (
                 per_unit
                 if old is None
                 else self.alpha * per_unit + (1 - self.alpha) * old
             )
+            self._updates[key] = self._updates.get(key, 0) + 1
             self._global = (
                 per_unit
                 if self._global is None
@@ -110,10 +121,43 @@ class ServiceModel:
             return self.default_s
         return per_unit * units
 
+    def snapshot(self) -> dict:
+        """EWMA state for the metrics summary: per-spec seconds-per-unit
+        (keys rendered with the trace layer's compact spec labels) and the
+        running prediction error against measured wall time."""
+        with self._lock:
+            per_key: dict[str, dict] = {}
+            for k, v in self._per_key.items():
+                label = _key_str(k)
+                if label in per_key:  # distinct specs, same shape label
+                    n = 2
+                    while f"{label}#{n}" in per_key:
+                        n += 1
+                    label = f"{label}#{n}"
+                per_key[label] = {
+                    "s_per_unit": v,
+                    "updates": self._updates.get(k, 0),
+                }
+            out = {
+                "alpha": self.alpha,
+                "global_s_per_unit": self._global,
+                "per_key": dict(sorted(per_key.items())),
+            }
+            if self._rel_error is not None:
+                out["ewma_rel_error"] = round(self._rel_error, 4)
+            return out
+
 
 class Telemetry:
-    def __init__(self, lanes: int = 128):
+    def __init__(
+        self,
+        lanes: int = 128,
+        observability: Optional[ObservabilityConfig] = None,
+    ):
         self.lanes = lanes
+        #: lifecycle tracing + worker timelines + stage histograms; the
+        #: gateway/dispatchers record into it alongside these counters.
+        self.trace = TraceRecorder(observability)
         self.tenants: dict[str, TenantStats] = {}
         self.batches = 0
         self.batched_circuits = 0
@@ -192,7 +236,7 @@ class Telemetry:
         s.completed += 1
         s.last_complete = max(s.last_complete, now)
         latency = now - submit_time
-        s.latencies.append(latency)
+        s.latencies.record(latency)
         if s.slo_s is not None and latency > s.slo_s + 1e-12:
             s.slo_misses += 1
 
@@ -260,4 +304,8 @@ class Telemetry:
         if slo_done:
             out["slo_misses"] = slo_misses
             out["slo_attainment"] = round(1.0 - slo_misses / slo_done, 4)
+        if self.service._per_key or self.service._global is not None:
+            out["service_model"] = self.service.snapshot()
+        if self.trace.enabled and self.trace.events:
+            out["observability"] = self.trace.summary()
         return out

@@ -1,0 +1,366 @@
+"""Observability layer: streaming histograms, lifecycle tracing, exporters.
+
+Covers the tentpole contracts:
+  * ``LogHistogram`` percentiles stay within one bucket width (x ``growth``)
+    of the exact order statistic, at O(1) memory;
+  * ``TenantStats`` latency accounting survives the list -> histogram swap
+    with the same tolerance;
+  * ``TraceBuffer`` is a bounded ring; sampling is deterministic in the
+    admission sequence number and a zero rate is a structural no-op;
+  * a seeded ``SystemSimulation`` exports a bit-identical Chrome trace
+    (golden snapshot — regenerate with
+    ``PYTHONPATH=src python tests/test_observability.py --update``);
+  * real-dispatcher traces are well-formed: monotone stage timestamps, no
+    orphan (unclosed) spans, eviction spans closed;
+  * ``Telemetry.summary()`` exposes the ``ServiceModel`` EWMA state.
+"""
+
+import json
+import math
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    CircuitTrace,
+    LogHistogram,
+    ObservabilityConfig,
+    TraceBuffer,
+    TraceRecorder,
+    WorkerTimeline,
+    validate_trace,
+)
+
+TRACE_SNAPSHOT = pathlib.Path(__file__).parent / "snapshots" / "gateway_trace.json"
+
+
+# ------------------------------------------------------------- histograms
+def test_log_histogram_percentile_within_one_bucket():
+    rng = np.random.default_rng(7)
+    values = rng.lognormal(mean=-3.0, sigma=2.0, size=5000)
+    h = LogHistogram()
+    for v in values:
+        h.record(float(v))
+    xs = np.sort(values)
+    for q in (1, 10, 50, 90, 99, 99.9):
+        exact = float(xs[max(0, min(len(xs) - 1, math.ceil(q / 100 * len(xs)) - 1))])
+        got = h.percentile(q)
+        # one log-bucket of relative error in either direction
+        assert exact / h.growth <= got <= exact * h.growth, (q, exact, got)
+
+
+def test_log_histogram_mean_count_minmax_exact():
+    h = LogHistogram()
+    values = [0.001, 0.5, 2.0, 2.0, 40.0]
+    for v in values:
+        h.record(v)
+    assert h.count == len(values)
+    assert h.mean == pytest.approx(sum(values) / len(values))
+    assert h.min_seen == min(values)
+    assert h.max_seen == max(values)
+
+
+def test_log_histogram_fixed_memory_and_zero_bucket():
+    h = LogHistogram(n_buckets=32)
+    for i in range(100_000):
+        h.record((i % 1000) * 1e-5)  # includes exact zeros
+    assert len(h.counts) == 32  # no growth, ever
+    assert h.zeros > 0
+    assert h.count == 100_000
+    assert 0.0 <= h.percentile(0.1) <= h.v_min + 1e-12
+
+
+def test_log_histogram_merge_and_validation():
+    a, b = LogHistogram(), LogHistogram()
+    for v in (0.1, 0.2):
+        a.record(v)
+    for v in (0.4, 0.8):
+        b.record(v)
+    a.merge(b)
+    assert a.count == 4
+    assert a.max_seen == 0.8
+    with pytest.raises(ValueError):
+        a.merge(LogHistogram(n_buckets=16))
+    with pytest.raises(ValueError):
+        LogHistogram(growth=1.0)
+
+
+def test_tenant_stats_percentile_within_one_bucket():
+    """Satellite: the TenantStats list -> histogram swap keeps
+    latency_percentile within one bucket width of exact."""
+    from repro.serve.metrics import Telemetry
+
+    t = Telemetry()
+    rng = np.random.default_rng(3)
+    lats = rng.lognormal(mean=-1.0, sigma=1.0, size=2000)
+    for lat in lats:
+        t.on_submit("a", 0.0)
+        t.on_complete("a", 0.0, float(lat))
+    xs = np.sort(lats)
+    s = t.tenants["a"]
+    growth = s.latencies.growth
+    for q in (50, 99):
+        exact = float(xs[math.ceil(q / 100 * len(xs)) - 1])
+        got = s.latency_percentile(q)
+        assert exact / growth <= got <= exact * growth
+    # O(1) memory: the histogram's bucket array never grows with samples
+    assert len(s.latencies.counts) == s.latencies.n_buckets
+
+
+# ------------------------------------------------------------- ring buffer
+def test_trace_buffer_bounded_ring():
+    buf = TraceBuffer(capacity=8)
+    for i in range(20):
+        buf.append(CircuitTrace(seq=i, tenant="t", key="k", stages=[("submit", i)]))
+    assert len(buf) == 8
+    assert buf.appended == 20
+    assert buf.dropped == 12
+    assert [r.seq for r in buf][0] == 12  # oldest evicted first
+
+
+# --------------------------------------------------------------- sampling
+def test_sampling_deterministic_and_fractional():
+    cfg = ObservabilityConfig(sample_rate=0.25)
+    r1, r2 = TraceRecorder(cfg), TraceRecorder(cfg)
+    picks1 = [r1.sampled(i) for i in range(4000)]
+    picks2 = [r2.sampled(i) for i in range(4000)]
+    assert picks1 == picks2  # pure function of seq
+    frac = sum(picks1) / len(picks1)
+    assert 0.2 < frac < 0.3
+    assert all(TraceRecorder(ObservabilityConfig()).sampled(i) for i in range(100))
+
+
+def test_sampling_zero_is_noop():
+    r = TraceRecorder(ObservabilityConfig(sample_rate=0.0))
+    assert not r.enabled
+    r.circuit_submit(0, "t", "k", 0.0, queue_depth=3)
+    r.circuit_stage(0, "admit", 0.1)
+    r.circuit_end(0, "complete", 0.2)
+    r.worker_span("w1", 0.0, 1.0)
+    r.coalescer_sample(4, 4)
+    r.on_kernel_launch({"mode": "fused"})
+    assert r.events == 0
+    assert len(r.buffer) == 0
+    assert r.open_traces == 0
+    assert not r.stage_hists and not r.timelines and not r.kernel_launches
+
+
+def test_stage_filtering():
+    r = TraceRecorder(ObservabilityConfig(stages=("submit", "kernel_start")))
+    r.circuit_submit(0, "t", "k", 0.0)
+    r.circuit_stage(0, "admit", 0.1)        # filtered out
+    r.circuit_stage(0, "kernel_start", 0.2)  # kept
+    r.circuit_end(0, "complete", 0.3)        # terminal: always recorded
+    (rec,) = r.buffer.records(CircuitTrace)
+    assert [s for s, _ in rec.stages] == ["submit", "kernel_start", "complete"]
+    with pytest.raises(ValueError):
+        ObservabilityConfig(stages=("submit", "bogus"))
+
+
+def test_worker_timeline_accounting():
+    tl = WorkerTimeline("w1")
+    tl.record(0.0, 1.0, "batch")
+    tl.record(2.0, 3.0, "spill")
+    s = tl.summary()
+    assert s["busy_s"] == pytest.approx(2.0)
+    assert s["spill_s"] == pytest.approx(1.0)
+    assert s["idle_s"] == pytest.approx(1.0)
+    assert s["utilization"] == pytest.approx(2.0 / 3.0, abs=1e-3)
+    assert s["by_kind"] == {"batch": 1, "spill": 1}
+
+
+# ------------------------------------------------ simulation trace (golden)
+def _seeded_sim_trace() -> dict:
+    """4-tenant virtual-clock gateway run; everything deterministic."""
+    from repro.comanager.simulation import SystemSimulation, homogeneous_workers
+    from repro.comanager.tenancy import JobSpec
+
+    workers = homogeneous_workers(3, 10)
+    jobs = [
+        JobSpec("alice", qc=5, n_layers=1, n_circuits=30, submit_time=0.0),
+        JobSpec("bob", qc=5, n_layers=1, n_circuits=30, submit_time=0.0),
+        JobSpec("carol", qc=7, n_layers=1, n_circuits=20, submit_time=0.5),
+        JobSpec("dave", qc=7, n_layers=1, n_circuits=20, submit_time=0.5),
+    ]
+    sim = SystemSimulation(
+        workers,
+        jobs,
+        gateway=True,
+        gateway_deadline=0.2,
+        tenant_slos_ms={"alice": 2000.0, "carol": 2000.0},
+    )
+    report = sim.run()
+    assert report.trace is not None
+    assert report.trace.open_traces == 0  # every span closed
+    assert validate_trace(report.trace.buffer.records(CircuitTrace)) == []
+    return report.trace.export_chrome_trace()
+
+
+def _dump(trace: dict) -> str:
+    return json.dumps(trace, indent=1, sort_keys=True)
+
+
+def test_simulation_trace_matches_golden_snapshot():
+    """Same seed/jobs -> bit-identical Chrome trace (virtual clock floats
+    are IEEE-deterministic).  Regenerate intentionally with
+    ``PYTHONPATH=src python tests/test_observability.py --update``."""
+    got = _dump(_seeded_sim_trace())
+    assert TRACE_SNAPSHOT.exists(), (
+        "missing golden trace; generate with "
+        "`PYTHONPATH=src python tests/test_observability.py --update`"
+    )
+    assert got == TRACE_SNAPSHOT.read_text(), (
+        "exported Chrome trace drifted from tests/snapshots/gateway_trace.json; "
+        "if intentional, regenerate with "
+        "`PYTHONPATH=src python tests/test_observability.py --update`"
+    )
+
+
+def test_simulation_trace_covers_every_circuit():
+    trace = _seeded_sim_trace()
+    events = trace["traceEvents"]
+    tenant_pids = {
+        e["pid"]
+        for e in events
+        if e["ph"] == "M"
+        and e["name"] == "process_name"
+        and e["args"]["name"].startswith("tenant ")
+    }
+    worker_pids = {
+        e["pid"]
+        for e in events
+        if e["ph"] == "M"
+        and e["name"] == "process_name"
+        and e["args"]["name"].startswith("worker ")
+    }
+    assert len(tenant_pids) == 4  # one row per tenant
+    assert worker_pids  # and per executing worker
+    begins = {e["id"] for e in events if e["ph"] == "b" and e["cat"] == "circuit"}
+    ends = {e["id"] for e in events if e["ph"] == "e" and e["cat"] == "circuit"}
+    assert begins == ends  # no orphan spans
+    assert len(begins) == 100  # submit -> complete for every circuit
+
+
+# --------------------------------------------- real dispatcher well-formed
+def test_real_dispatcher_trace_well_formed():
+    import jax.numpy as jnp
+
+    from repro.core.circuits import build_quclassi_circuit
+    from repro.serve.dispatcher import GatewayRuntime
+
+    spec = build_quclassi_circuit(5, 1)
+    rng = np.random.default_rng(0)
+
+    def fake_kernel(spec_, theta, data):
+        return jnp.zeros(theta.shape[0])
+
+    with GatewayRuntime(
+        mode="async", deadline=0.02, kernel=fake_kernel
+    ) as rt:
+        run_a = rt.executor(spec, "alice", slo_ms=10_000.0)
+        run_b = rt.executor(spec, "bob")
+        theta = rng.normal(size=(5, spec.n_theta)).astype(np.float32)
+        data = rng.normal(size=(5, spec.n_data)).astype(np.float32)
+        run_a(theta, data)
+        run_b(theta, data)
+        tr = rt.telemetry.trace
+        assert tr.open_traces == 0
+        records = tr.buffer.records(CircuitTrace)
+        assert len(records) == 10
+        assert validate_trace(records) == []
+        for rec in records:
+            assert rec.outcome == "complete"
+            assert rec.worker is not None
+        assert tr.timelines  # worker occupancy captured
+        summary = rt.telemetry.summary()["observability"]
+        assert summary["stages"]["e2e"]["count"] == 10
+
+
+def test_eviction_spans_closed():
+    """Evicted circuits close their trace with outcome='evict'."""
+    from repro.serve.gateway import Gateway
+
+    gw = Gateway(deadline=0.01, target_lanes=None)
+    gw.register_client("a", slo_ms=1.0)
+    fut = gw.submit("a", "k", None, now=0.0)
+    (batch,) = gw.flush(now=5.0)  # SLO long gone
+    gw.evict(batch, now=5.0)
+    with pytest.raises(Exception):
+        fut.value
+    tr = gw.telemetry.trace
+    assert tr.open_traces == 0
+    (rec,) = tr.buffer.records(CircuitTrace)
+    assert rec.outcome == "evict"
+    assert rec.stages[-1][0] == "evict"
+    assert validate_trace([rec]) == []
+
+
+def test_reject_records_closed_trace():
+    from repro.serve.gateway import Backpressure, Gateway
+
+    gw = Gateway(max_pending=1)
+    gw.register_client("a")
+    gw.submit("a", "k", None, now=0.0)
+    with pytest.raises(Backpressure):
+        gw.submit("a", "k", None, now=0.1)
+    rejects = [
+        r for r in gw.telemetry.trace.buffer.records(CircuitTrace)
+        if r.outcome == "reject"
+    ]
+    assert len(rejects) == 1
+
+
+# ----------------------------------------------------- service-model summary
+def test_service_model_in_telemetry_summary():
+    """Satellite: EWMA seconds-per-unit and prediction error are surfaced."""
+    from repro.core.circuits import build_quclassi_circuit
+    from repro.serve.metrics import Telemetry
+
+    t = Telemetry()
+    spec = build_quclassi_circuit(5, 1)
+    t.service.update(spec, 100.0, 2.0)
+    t.service.update(spec, 100.0, 3.0)
+    sm = t.summary()["service_model"]
+    assert sm["alpha"] == 0.25
+    assert sm["global_s_per_unit"] is not None
+    (label, entry), = sm["per_key"].items()
+    assert entry["updates"] == 2
+    assert entry["s_per_unit"] > 0
+    # second update's prediction (0.02 s/u * 100 = 2 s) vs measured 3 s
+    assert sm["ewma_rel_error"] == pytest.approx(1.0 / 3.0, abs=1e-3)
+
+
+def test_kernel_launch_observer():
+    """ops.set_launch_observer reports shift_execution_info per launch."""
+    import jax.numpy as jnp
+
+    from repro.core.circuits import build_quclassi_circuit
+    from repro.kernels import ops as kops
+
+    spec = build_quclassi_circuit(5, 1)
+    theta = jnp.zeros((2, spec.n_theta))
+    data = jnp.zeros((2, spec.n_data))
+    seen = []
+    prev = kops.set_launch_observer(seen.append)
+    try:
+        kops.vqc_fidelity_shiftgroups(spec, theta, data, False, (0,))
+        kops.vqc_fidelity_shiftgroups(spec, theta, data, False, (0,))
+    finally:
+        kops.set_launch_observer(prev)
+    assert len(seen) == 2  # fires per call, not per jit trace
+    info = seen[0]
+    assert info["mode"] in ("fused", "spill", "materialize")
+    assert info["lanes"] == 2
+    assert info["banks"] == 1
+    assert info["vmem_bytes"] > 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--update" in sys.argv:
+        TRACE_SNAPSHOT.write_text(_dump(_seeded_sim_trace()))
+        print(f"updated {TRACE_SNAPSHOT}")
+    else:
+        print(_dump(_seeded_sim_trace())[:2000])
