@@ -39,6 +39,8 @@ _LAZY = {
     "as_backend": "repro.api.backend",
     "make_backend": "repro.api.backend",
     "ClusterConfig": "repro.api.config",
+    "FaultSpec": "repro.comanager.faults",
+    "FaultToleranceConfig": "repro.comanager.faults",
     "ObservabilityConfig": "repro.obs.config",
     "ServingConfig": "repro.api.config",
     "SimulationConfig": "repro.api.config",

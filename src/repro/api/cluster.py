@@ -24,6 +24,7 @@ from typing import Optional
 
 from repro.api.backend import ExecutionBackend, make_backend
 from repro.api.config import ClusterConfig, TenantPolicy
+from repro.comanager.worker import WorkerConfig
 from repro.core.sim import CircuitSpec
 
 
@@ -61,6 +62,32 @@ class QuantumCluster:
     @property
     def telemetry(self):
         return self.runtime.telemetry
+
+    @property
+    def fleet(self):
+        """Per-worker health vitals (``serve.fleet.FleetHealth``) of the
+        active dispatcher — state machine, failure rates, breaker trips."""
+        return self.runtime.dispatcher.fleet
+
+    def register_worker(self, worker: WorkerConfig) -> None:
+        """Add a worker to the live runtime (new capacity is placeable on
+        the next dispatch; the fleet's max width is re-derived)."""
+        self.runtime.dispatcher.register_worker(worker)
+        self.config = dataclasses.replace(
+            self.config, workers=(*self.config.workers, worker)
+        )
+
+    def drain_worker(self, worker_id: str, timeout: float = 30.0) -> None:
+        """Gracefully remove a worker: stop placing on it, wait for its
+        in-flight batches, then forget it.  In-flight work elsewhere is
+        untouched."""
+        self.runtime.dispatcher.drain_worker(worker_id, timeout=timeout)
+        self.config = dataclasses.replace(
+            self.config,
+            workers=tuple(
+                w for w in self.config.workers if w.worker_id != worker_id
+            ),
+        )
 
     def close(self) -> None:
         if self._runtime is not None:

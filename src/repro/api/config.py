@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.comanager.faults import FaultToleranceConfig
 from repro.comanager.worker import WorkerConfig
 from repro.obs.config import ObservabilityConfig
 
@@ -92,6 +93,10 @@ class ServingConfig:
     #: tracing + metrics knobs (None = trace everything at the defaults;
     #: ``ObservabilityConfig.disabled()`` turns the recorder off).
     observability: Optional[ObservabilityConfig] = None
+    #: retry / migration / hedging / circuit-breaker knobs (None = the
+    #: ``FaultToleranceConfig`` defaults: 1 in-place retry, no hedging,
+    #: breaker trips after 3 consecutive failures).
+    fault_tolerance: Optional[FaultToleranceConfig] = None
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
@@ -128,6 +133,7 @@ class ServingConfig:
             mesh_spill=self.mesh_spill,
             evict_over_slo=self.evict_over_slo,
             observability=self.observability,
+            fault_tolerance=self.fault_tolerance,
         )
         if self.worker_vmem_bytes is not None:
             kw["worker_vmem_bytes"] = self.worker_vmem_bytes

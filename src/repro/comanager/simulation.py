@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.comanager.events import EventLoop
+from repro.comanager.faults import normalize_failures
 from repro.comanager.manager import CoManager
 from repro.comanager.tenancy import JobResult, JobSpec, TaskIdAllocator
 from repro.comanager.worker import CircuitTask, QuantumWorker, WorkerConfig
@@ -70,6 +71,9 @@ def _validate_tenant_maps(jobs, *, worker_ids, worker_failures=None, **maps):
             f"worker_failures refers to unknown worker id(s) {bad_workers}; "
             f"known workers: {sorted(worker_ids)}"
         )
+    # malformed fault specs (negative/NaN times, recover-before-fail, bad
+    # probabilities) raise here, naming the offending worker id
+    normalize_failures(worker_failures)
 
 
 class SystemSimulation:
@@ -122,8 +126,16 @@ class SystemSimulation:
         client's classical process generates/analyzes its own circuits
         serially, which is the real bottleneck on the paper's classical side.
 
-        ``worker_failures``: worker_id -> time at which it silently stops
-        heartbeating (exercises the 3-missed-heartbeats eviction path).
+        ``worker_failures``: worker_id -> fault schedule.  The legacy float
+        form (time at which the worker silently stops heartbeating, which
+        exercises the 3-missed-heartbeats eviction path) still works; a
+        ``FaultSpec`` — or a dict of its fields — selects a typed fault:
+        ``crash`` (silent forever), ``crash_recover`` (re-registers at
+        ``recover_at``, abandoning and requeueing anything it was running),
+        ``slowdown`` (service times stretched by ``factor`` inside the
+        window), ``flaky`` (each completion dropped-and-requeued with
+        deterministic probability ``p``).  The same schedules drive the real
+        dispatchers via ``repro.serve.fleet.FaultInjector``.
 
         ``gateway``: route submissions through the online serving gateway
         (repro.serve): circuits are admitted to per-client queues, dequeued
@@ -186,7 +198,9 @@ class SystemSimulation:
         self._client_free: dict[str, float] = {}  # per-client serial CPU
         self._in_flight: dict[str, int] = {}  # per-client outstanding
         self.run_until = run_until
-        self.failures = worker_failures or {}
+        self.failures = normalize_failures(worker_failures)
+        self._flaky_attempts: dict[tuple[str, int], int] = {}
+        self._recovery_scheduled: set[str] = set()
 
         self._remaining: dict[str, int] = {}
         self._results: dict[str, JobResult] = {}
@@ -232,14 +246,43 @@ class SystemSimulation:
     # ------------------------------------------------------------ handlers
     def _on_register(self, t: float, wid: str) -> None:
         w = self.workers[wid]
+        for task in w.abandon(t):
+            # crash_recover re-registration: the worker lost its in-memory
+            # state, so anything it was running is requeued — unless the
+            # liveness eviction already returned it to the queue, or a
+            # replay finished elsewhere in the meantime
+            if task.task_id in self.manager.completed_ids:
+                continue
+            if any(p.task_id == task.task_id for p in self.manager.pending):
+                continue
+            if any(
+                task.task_id in v.in_flight
+                for w2, v in self.manager.workers.items()
+                if w2 != wid
+            ):
+                continue
+            if self.gateway is not None and task.client_id == "__gw__":
+                if task.task_id in self._gw_batches:
+                    self._in_flight[task.client_id] -= 1
+                    self._gw_requeue(t, task)
+                continue
+            self._in_flight[task.client_id] -= 1
+            self.manager.submit(task)
         self.manager.register_worker(
             wid, w.max_qubits, w.cru(t), t, error_rate=w.cfg.error_rate
         )
         self.loop.schedule(t + self.heartbeat_period, "heartbeat", wid)
+        self._drain(t)
 
     def _on_heartbeat(self, t: float, wid: str) -> None:
-        if wid in self.failures and t >= self.failures[wid]:
-            return  # worker went silent: no report, no reschedule
+        f = self.failures.get(wid)
+        if f is not None and f.crashed_between(t - self.heartbeat_period, t):
+            # worker went silent: no report, no reschedule.  A crash_recover
+            # schedules exactly one re-registration at its recovery time.
+            if f.recover_at is not None and wid not in self._recovery_scheduled:
+                self._recovery_scheduled.add(wid)
+                self.loop.schedule(max(f.recover_at, t), "register", wid)
+            return
         if self._all_done():
             return  # system idle: let the event loop drain
         w = self.workers[wid]
@@ -365,6 +408,12 @@ class SystemSimulation:
                 self.manager.submit(task)
             return
         finish = w.start(task, t)
+        f = self.failures.get(wid)
+        if f is not None:
+            factor = f.slowdown_factor(t)
+            if factor != 1.0:
+                finish = t + (finish - t) * factor
+                w.active[task.task_id].finish_time = finish
         if self.gateway is not None and task.task_id in self._gw_batches:
             tr = self.gateway.telemetry.trace
             if tr.enabled:
@@ -382,15 +431,36 @@ class SystemSimulation:
                         "service_time": round(finish - t, 9),
                     },
                 )
-        self.loop.schedule(finish, "complete", (task, wid))
+        self.loop.schedule(finish, "complete", (task, wid, t))
 
     def _on_complete(self, t: float, payload) -> None:
-        task, wid = payload
-        if wid in self.failures and t >= self.failures[wid]:
+        task, wid, t_start = payload
+        f = self.failures.get(wid)
+        if f is not None and f.crashed_between(t_start, t):
             return  # worker died mid-execution: result never loops back
         if task.task_id in self.manager.completed_ids:
             return  # duplicate (requeued-then-finished-twice guard)
         w = self.workers[wid]
+        if task.task_id not in w.active:
+            return  # abandoned at a crash_recover re-registration
+        if f is not None and f.kind == "flaky":
+            key = (wid, task.task_id)
+            attempt = self._flaky_attempts.get(key, 0)
+            self._flaky_attempts[key] = attempt + 1
+            if f.drops(task.task_id, attempt, t):
+                # the execution happened but its result is garbage: release
+                # the worker and requeue the task for another attempt
+                w.finish(task.task_id, t)
+                view = self.manager.workers.get(wid)
+                if view is not None:
+                    view.in_flight.pop(task.task_id, None)
+                self._in_flight[task.client_id] -= 1
+                if self.gateway is not None and task.task_id in self._gw_batches:
+                    self._gw_requeue(t, task)
+                else:
+                    self.manager.submit(task)
+                self._drain(t)
+                return
         w.finish(task.task_id, t)
         self.manager.complete(wid, task, t)
         cid = task.client_id

@@ -138,6 +138,19 @@ class QuantumWorker:
         self.completed.append(task_id)
         return ac.task
 
+    def abandon(self, now: float) -> list[CircuitTask]:
+        """Drop every resident circuit without completing it.
+
+        Crash recovery: a worker that re-registers after a crash lost its
+        in-memory state, so its active set is cleared (capacity returns,
+        busy time accrues up to ``now``) and the orphaned tasks are handed
+        back to the caller for requeueing.
+        """
+        self._accumulate(now)
+        orphans = [ac.task for ac in self.active.values()]
+        self.active.clear()
+        return orphans
+
     def _accumulate(self, now: float) -> None:
         self.busy_time += len(self.active) * (now - self._last_t)
         self._last_t = now

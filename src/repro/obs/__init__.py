@@ -5,7 +5,11 @@ kernel dispatchers) because every clock in the stack is a caller-supplied
 float.  See ``trace.TraceRecorder`` for the hook surface and
 ``histogram.LogHistogram`` for the fixed-memory aggregation primitive.
 """
-from repro.obs.config import LIFECYCLE_STAGES, ObservabilityConfig
+from repro.obs.config import (
+    LIFECYCLE_STAGES,
+    RECOVERY_STAGES,
+    ObservabilityConfig,
+)
 from repro.obs.histogram import LogHistogram
 from repro.obs.trace import (
     OUTCOMES,
@@ -21,6 +25,7 @@ from repro.obs.trace import (
 __all__ = [
     "LIFECYCLE_STAGES",
     "OUTCOMES",
+    "RECOVERY_STAGES",
     "STAGE_METRICS",
     "CircuitTrace",
     "LogHistogram",

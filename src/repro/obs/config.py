@@ -14,6 +14,9 @@ from typing import Optional
 #: per-circuit lifecycle stages, in pipeline order.  ``submit`` opens the
 #: trace; the terminal transition (complete / evict / fail / reject) closes
 #: it and is always recorded for open traces regardless of stage filtering.
+#: The recovery stages (retried / hedged / worker_offline / migrated /
+#: requeue) revisit earlier pipeline stages by design — ``validate_trace``
+#: relaxes its pipeline-order check for traces that contain them.
 LIFECYCLE_STAGES = (
     "submit",
     "admit",
@@ -21,7 +24,17 @@ LIFECYCLE_STAGES = (
     "placed",
     "dispatched",
     "kernel_start",
+    "retried",
+    "hedged",
+    "worker_offline",
+    "migrated",
     "requeue",
+)
+
+#: stages recorded only on the failure-recovery path: their presence means
+#: the circuit legitimately revisited earlier pipeline stages.
+RECOVERY_STAGES = frozenset(
+    {"retried", "hedged", "worker_offline", "migrated", "requeue"}
 )
 
 
@@ -69,4 +82,4 @@ class ObservabilityConfig:
         return cls(enabled=False, sample_rate=0.0)
 
 
-__all__ = ["LIFECYCLE_STAGES", "ObservabilityConfig"]
+__all__ = ["LIFECYCLE_STAGES", "RECOVERY_STAGES", "ObservabilityConfig"]

@@ -33,7 +33,11 @@ import threading
 from collections import deque
 from typing import Any, Iterable, Optional
 
-from repro.obs.config import LIFECYCLE_STAGES, ObservabilityConfig
+from repro.obs.config import (
+    LIFECYCLE_STAGES,
+    RECOVERY_STAGES,
+    ObservabilityConfig,
+)
 from repro.obs.histogram import LogHistogram
 
 #: human-facing metric name for the latency *into* each stage (duration
@@ -562,12 +566,13 @@ def validate_trace(records: Iterable[CircuitTrace]) -> list[str]:
         names = [s for s, _ in r.stages]
         if names[0] != "submit":
             bad.append(f"#{r.seq}: trace does not open with submit")
+        # recovery stages (retry / hedge / migrate / requeue) legitimately
+        # send a circuit back through earlier pipeline stages, so the
+        # order check only applies to untouched traces.
         order = {s: i for i, s in enumerate(LIFECYCLE_STAGES)}
-        core = [s for s in names if s in order and s != "requeue"]
-        if any(
-            order[b] < order[a]
-            for a, b in zip(core, core[1:])
-            if "requeue" not in names
+        core = [s for s in names if s in order and s not in RECOVERY_STAGES]
+        if not RECOVERY_STAGES.intersection(names) and any(
+            order[b] < order[a] for a, b in zip(core, core[1:])
         ):
             bad.append(f"#{r.seq}: stages out of pipeline order {names}")
     return bad

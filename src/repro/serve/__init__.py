@@ -7,8 +7,10 @@ See ``gateway`` (admission / priority tiers / SLOs / backpressure),
 ``coalescer`` (structure-keyed mega-batch packing), ``dispatcher``
 (placement + inline execution + EWMA cost model), ``async_dispatcher``
 (pump loop + per-worker execution slots, out-of-order futures), ``metrics``
-(per-tenant latency / throughput / lane-fill / SLO-attainment telemetry).
+(per-tenant latency / throughput / lane-fill / SLO-attainment telemetry),
+``fleet`` (worker health states, circuit breaker, fault injection).
 """
+from repro.comanager.faults import FaultSpec, FaultToleranceConfig
 from repro.serve.async_dispatcher import AsyncDispatcher
 from repro.serve.coalescer import CoalescedBatch, Coalescer, PendingCircuit
 from repro.serve.dispatcher import (
@@ -20,6 +22,13 @@ from repro.serve.dispatcher import (
     batch_cost_units,
     batch_vmem_bytes,
     execute_batch,
+)
+from repro.serve.fleet import (
+    WORKER_STATES,
+    FaultInjector,
+    FleetHealth,
+    InjectedWorkerFault,
+    WorkerVitals,
 )
 from repro.serve.gateway import (
     SLO_FLUSH_FRACTION,
@@ -38,14 +47,21 @@ __all__ = [
     "Coalescer",
     "DeadlineExceeded",
     "Dispatcher",
+    "FaultInjector",
+    "FaultSpec",
+    "FaultToleranceConfig",
+    "FleetHealth",
     "Gateway",
     "GatewayRuntime",
+    "InjectedWorkerFault",
     "PendingCircuit",
     "ServiceModel",
     "ShiftGroupKey",
     "SLO_FLUSH_FRACTION",
     "Telemetry",
+    "WORKER_STATES",
     "WORKER_VMEM_BYTES",
+    "WorkerVitals",
     "bank_partition",
     "batch_cost_units",
     "batch_vmem_bytes",

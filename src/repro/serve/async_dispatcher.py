@@ -30,9 +30,11 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
+from repro.comanager.faults import FaultToleranceConfig
 from repro.comanager.manager import CoManager
 from repro.comanager.worker import CircuitTask, WorkerConfig
 from repro.serve.coalescer import CoalescedBatch
@@ -47,11 +49,17 @@ from repro.serve.dispatcher import (
     execute_batch,
     kernel_span_args,
 )
+from repro.serve.fleet import FaultInjector
 from repro.serve.gateway import Gateway
 
 
 class AsyncDispatcher(Dispatcher):
     """Non-blocking dispatcher: pump loop + per-worker execution pool."""
+
+    #: ring-buffer capacity for execution errors kept for inspection — a
+    #: long-lived dispatcher on a flaky fleet must not grow an unbounded
+    #: error list; overflow increments ``errors_dropped`` instead.
+    ERRORS_CAPACITY = 256
 
     def __init__(
         self,
@@ -68,6 +76,8 @@ class AsyncDispatcher(Dispatcher):
         evict_over_slo: bool = False,
         clock=time.perf_counter,
         slots_per_worker: int = 1,
+        fault_tolerance: FaultToleranceConfig | None = None,
+        fault_injector: FaultInjector | None = None,
     ):
         super().__init__(
             gateway,
@@ -80,6 +90,8 @@ class AsyncDispatcher(Dispatcher):
             spill_executor=spill_executor,
             worker_vmem_bytes=worker_vmem_bytes,
             clock=clock,
+            fault_tolerance=fault_tolerance,
+            fault_injector=fault_injector,
         )
         if slots_per_worker < 1:
             raise ValueError(f"slots_per_worker must be >= 1, got {slots_per_worker}")
@@ -98,8 +110,12 @@ class AsyncDispatcher(Dispatcher):
         self._pumping = False  # a _pump_once holds popped-but-unqueued batches
         self._kicked = False
         self._stop = False
-        self._errors: list[BaseException] = []
+        self._errors: deque[BaseException] = deque(maxlen=self.ERRORS_CAPACITY)
+        self._errors_dropped = 0
         self._pump_errors: list[BaseException] = []
+        # in-flight runner registry for hedging and first-result-wins:
+        # id(batch) -> {batch, outstanding, winner, wid, t0, est, hedged}
+        self._runners: dict[int, dict] = {}
         # +1 thread: the whole-mesh spill slot runs alongside full worker pools
         self._pool = ThreadPoolExecutor(
             max_workers=len(workers) * slots_per_worker + 1,
@@ -151,6 +167,9 @@ class AsyncDispatcher(Dispatcher):
         with self._cv:
             if self._ready:
                 timeout = 0.05
+            if self.ft.hedge_k is not None and self._runners:
+                # hedging watches in-flight slots against the EWMA estimate
+                timeout = 0.01 if timeout is None else min(timeout, 0.01)
         if nd is not None:
             until = max(nd - self.clock(), 1e-3)
             timeout = until if timeout is None else min(timeout, until)
@@ -189,6 +208,7 @@ class AsyncDispatcher(Dispatcher):
                 self._pumping = False
                 self._cv.notify_all()
         self._place_ready()
+        self._maybe_hedge()
 
     def _expired(self, batch: CoalescedBatch, now: float) -> bool:
         """True when EVERY member's SLO budget has fully elapsed: the batch
@@ -216,7 +236,9 @@ class AsyncDispatcher(Dispatcher):
             now = self.clock()
             launch = spill = evict = None
             with self._cv:
-                exclude = {w for w, free in self._slot_free.items() if free <= 0}
+                exclude = {
+                    w for w, free in self._slot_free.items() if free <= 0
+                } | self.fleet.unplaceable(now)
                 for i, batch in enumerate(self._ready):
                     if self.evict_over_slo and self._expired(batch, now):
                         evict = self._ready.pop(i)
@@ -238,7 +260,7 @@ class AsyncDispatcher(Dispatcher):
                             f"no worker fits a {width}-qubit batch "
                             f"(largest worker: {self._max_width} qubits)"
                         )
-                        self._errors.append(err)
+                        self._push_error_locked(err)
                         self.gateway.fail(batch, err, now)
                         break
                     est = self._estimate_s(batch)
@@ -255,6 +277,16 @@ class AsyncDispatcher(Dispatcher):
                     self._slot_free[wid] -= 1
                     self._in_flight += 1
                     self._charge(wid, est)
+                    self.fleet.on_dispatch(wid)
+                    self._runners[id(batch)] = {
+                        "batch": batch,
+                        "outstanding": 1,
+                        "winner": None,
+                        "wid": wid,
+                        "t0": now,
+                        "est": est,
+                        "hedged": False,
+                    }
                     launch = (batch, task, wid, est)
                     break
                 else:
@@ -315,51 +347,192 @@ class AsyncDispatcher(Dispatcher):
                 ("mesh", batch.n, tuple(sorted(batch.clients())))
             )
             if err is not None:
-                self._errors.append(err)
+                self._push_error_locked(err)
             self._kicked = True
             self._cv.notify_all()
 
     def _run(
-        self, batch: CoalescedBatch, task: CircuitTask, wid: str, est: float
+        self,
+        batch: CoalescedBatch,
+        task: CircuitTask | None,
+        wid: str,
+        est: float,
+        hedge: bool = False,
     ) -> None:
         """Worker-slot thread: execute one batch, resolve its futures (out
-        of submission order relative to other batches), release the slot."""
-        tr = self.gateway.telemetry.trace
+        of submission order relative to other batches), release the slot.
+
+        Failure tolerance: a failed attempt retries in place (bounded by
+        ``FaultToleranceConfig.retry_limit`` with exponential backoff), then
+        the batch migrates to a surviving worker through the gateway's
+        re-coalescing requeue.  With hedging, two runners may race on one
+        batch: the first success claims it (resolving the futures exactly
+        once) and the loser's result is discarded — kernel launches cannot
+        be interrupted, so safe cancellation means the loser lands without
+        side effects."""
+        tel = self.gateway.telemetry
+        tr = tel.trace
+        seqs = [m.seq for m in batch.members]
         t0 = self.clock()
-        if tr.enabled:
-            seqs = [m.seq for m in batch.members]
+        if tr.enabled and not hedge:
             tr.batch_stage(seqs, "dispatched", t0)
             tr.batch_stage(seqs, "kernel_start", t0)
         err: BaseException | None = None
         fids = None
-        try:
-            fids = execute_batch(
-                batch, self.kernel, self.shift_kernel, self.multibank_kernel
-            )
-        except BaseException as exc:
-            err = exc
+        attempts = 0
+        while True:
+            t0 = self.clock()
+            err = None
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector.check(wid, t0)
+                fids = execute_batch(
+                    batch, self.kernel, self.shift_kernel, self.multibank_kernel
+                )
+                if self.fault_injector is not None:
+                    # mirror the simulation's slowdown fault in wall time
+                    extra = (
+                        self.fault_injector.slowdown_factor(wid, t0) - 1.0
+                    ) * (self.clock() - t0)
+                    if extra > 0:
+                        time.sleep(extra)
+            except BaseException as exc:
+                err = exc
+            if err is None:
+                break
+            now = self.clock()
+            tripped = self.fleet.on_failure(wid, now)
+            tel.on_worker_failure(wid)
+            if tripped:
+                tel.on_worker_offline(wid)
+                if tr.enabled:
+                    tr.batch_stage(seqs, "worker_offline", now, worker=wid)
+            attempts += 1
+            if (
+                not hedge
+                and attempts <= self.ft.retry_limit
+                and self.fleet.retryable(wid, now)
+            ):
+                self.fleet.record_retry(wid)
+                tel.on_worker_retry(wid)
+                if tr.enabled:
+                    tr.batch_stage(seqs, "retried", now, worker=wid)
+                if self.ft.retry_backoff_s:
+                    time.sleep(self.ft.retry_backoff_s * 2 ** (attempts - 1))
+                continue
+            break
         dt = self.clock() - t0
         now = self.clock()
-        if err is None:
+        # settle against the (possibly hedged) runner set: the first
+        # successful runner claims the batch, the LAST failed runner with
+        # no winner owns migration/terminal failure.
+        with self._cv:
+            entry = self._runners.get(id(batch))
+            if entry is not None:
+                entry["outstanding"] -= 1
+                last = entry["outstanding"] <= 0
+                claimed = err is None and entry["winner"] is None
+                if claimed:
+                    entry["winner"] = wid
+                winner_exists = entry["winner"] is not None
+                if last:
+                    self._runners.pop(id(batch), None)
+            else:  # defensive: every launch registers an entry
+                last, claimed, winner_exists = True, err is None, err is None
+        migrated = False
+        if claimed:
             if tr.enabled:
                 tr.worker_span(wid, t0, t0 + dt, args=kernel_span_args(batch))
             self._observe(batch, dt)
             self._record(batch)
             self.gateway.complete(batch, fids, now)
-        else:
-            self.gateway.fail(batch, err, now)
+        elif err is not None and last and not winner_exists:
+            bad = self.fleet.unplaceable(now)
+            with self._cv:
+                survivors = [
+                    w
+                    for w, v in self.manager.workers.items()
+                    if w != wid
+                    and w not in bad
+                    and v.max_qubits >= self._width(batch)
+                ]
+            if survivors:
+                migrated = True
+                self.fleet.record_migration(wid)
+                tel.on_worker_migration(wid)
+                if tr.enabled:
+                    tr.batch_stage(seqs, "migrated", now, worker=wid)
+                self.gateway.requeue(batch, now)
+            else:
+                self.gateway.fail(batch, err, now)
+        if err is None:
+            self.fleet.on_success(wid)
         # futures are resolved BEFORE the slot is released, so drain()'s
         # "no in-flight batches" implies "every future resolved".
         with self._cv:
-            self.manager.complete(wid, task, now)
+            if task is not None:
+                self.manager.complete(wid, task, now)
             self._charge(wid, -est)
-            self._slot_free[wid] += 1
+            if wid in self._slot_free:  # the worker may have been drained
+                self._slot_free[wid] += 1
             self._in_flight -= 1
-            self.batch_log.append((wid, batch.n, tuple(sorted(batch.clients()))))
-            if err is not None:
-                self._errors.append(err)
+            self.fleet.on_release(wid)
+            if claimed or (err is not None and last and not winner_exists):
+                self.batch_log.append(
+                    (wid, batch.n, tuple(sorted(batch.clients())))
+                )
+            if err is not None and last and not winner_exists and not migrated:
+                self._push_error_locked(err)
             self._kicked = True  # freed capacity: ready batches may now place
             self._cv.notify_all()
+
+    def _maybe_hedge(self) -> None:
+        """Hedged duplicate dispatch: an in-flight batch whose slot has
+        exceeded ``hedge_k x`` its ServiceModel estimate is duplicated onto
+        a free surviving worker; first result wins."""
+        k = self.ft.hedge_k
+        if k is None:
+            return
+        now = self.clock()
+        launches = []
+        with self._cv:
+            for entry in self._runners.values():
+                if entry["hedged"] or entry["winner"] is not None:
+                    continue
+                if now - entry["t0"] < k * max(entry["est"], 1e-9):
+                    continue
+                batch = entry["batch"]
+                width = self._width(batch)
+                wid2 = None
+                for w in sorted(self._slot_free):
+                    if w == entry["wid"] or self._slot_free[w] <= 0:
+                        continue
+                    v = self.manager.workers.get(w)
+                    if v is None or v.max_qubits < width:
+                        continue
+                    if not self.fleet.placeable(w, now):
+                        continue
+                    wid2 = w
+                    break
+                if wid2 is None:
+                    continue
+                entry["hedged"] = True
+                entry["outstanding"] += 1
+                self._slot_free[wid2] -= 1
+                self._in_flight += 1
+                self._charge(wid2, entry["est"])
+                self.fleet.on_dispatch(wid2)
+                launches.append((batch, entry["wid"], wid2, entry["est"]))
+        tel = self.gateway.telemetry
+        tr = tel.trace
+        for batch, straggler, wid2, est in launches:
+            self.fleet.record_hedge(straggler)
+            tel.on_worker_hedge(straggler)
+            if tr.enabled:
+                tr.batch_stage(
+                    (m.seq for m in batch.members), "hedged", now, worker=wid2
+                )
+            self._pool.submit(self._run, batch, None, wid2, est, True)
 
     # ------------------------------------------------------------- control
     def pump(self) -> int:
@@ -404,12 +577,62 @@ class AsyncDispatcher(Dispatcher):
                 raise self._pump_errors[0]
             self._cv.wait(0.05)
 
+    # ------------------------------------------------------ live membership
+    def register_worker(self, worker: WorkerConfig) -> None:
+        """Grow the fleet at runtime: the new worker gets its execution
+        slots and becomes placeable on the next pump cycle."""
+        # manager.workers is read under _cv by the pump and runner threads,
+        # so membership mutations happen under the same lock
+        with self._cv:
+            super().register_worker(worker)
+            self._slot_free[worker.worker_id] = self.slots_per_worker
+            # grow the slot pool so the new worker's slots can actually run
+            # concurrently (ThreadPoolExecutor spawns threads on demand up
+            # to _max_workers, so raising the cap is safe at runtime)
+            self._pool._max_workers += self.slots_per_worker
+            self._kicked = True
+            self._cv.notify_all()
+
+    def drain_worker(self, worker_id: str, timeout: float = 30.0) -> None:
+        """Live drain: stop placing on the worker, wait for its in-flight
+        slots to land (results resolve, or migrate through the failure
+        path), then remove it from the fleet."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            if worker_id not in self._slot_free:
+                raise KeyError(f"unknown worker {worker_id!r}")
+            self.fleet.mark_draining(worker_id)
+            while self._slot_free[worker_id] < self.slots_per_worker:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"drain_worker({worker_id!r}): in-flight work did "
+                        f"not land within {timeout}s"
+                    )
+                self._cv.wait(min(remaining, 0.05))
+            del self._slot_free[worker_id]
+            self._forget_worker(worker_id)
+        self.kick()
+
+    # ------------------------------------------------------------- metrics
     @property
     def in_flight_batches(self) -> int:
         with self._cv:
             return self._in_flight
 
+    def _push_error_locked(self, err: BaseException) -> None:
+        """Append to the bounded error ring (caller holds ``_cv``)."""
+        if len(self._errors) == self._errors.maxlen:
+            self._errors_dropped += 1
+        self._errors.append(err)
+
     @property
     def errors(self) -> list[BaseException]:
         with self._cv:
             return list(self._pump_errors) + list(self._errors)
+
+    @property
+    def errors_dropped(self) -> int:
+        """Errors evicted from the bounded ring (oldest-first overflow)."""
+        with self._cv:
+            return self._errors_dropped

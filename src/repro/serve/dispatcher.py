@@ -32,6 +32,7 @@ from typing import Callable, Sequence
 import jax.numpy as jnp
 
 from repro.api.capabilities import declare
+from repro.comanager.faults import FaultToleranceConfig
 from repro.comanager.manager import CoManager
 from repro.comanager.tenancy import TaskIdAllocator
 from repro.comanager.worker import CircuitTask, WorkerConfig
@@ -44,6 +45,7 @@ from repro.kernels.vqc_statevector import (
     shift_execution_info,
 )
 from repro.serve.coalescer import CoalescedBatch
+from repro.serve.fleet import FaultInjector, FleetHealth
 from repro.serve.gateway import Backpressure, Gateway
 from repro.serve.metrics import Telemetry
 
@@ -305,6 +307,8 @@ class Dispatcher:
         spill_executor=None,
         worker_vmem_bytes: int = WORKER_VMEM_BYTES,
         clock=time.perf_counter,
+        fault_tolerance: FaultToleranceConfig | None = None,
+        fault_injector: FaultInjector | None = None,
     ):
         self.gateway = gateway
         self.manager = manager or CoManager(multi_tenant=True)
@@ -324,17 +328,56 @@ class Dispatcher:
         self.batch_log: list[tuple[str, int, tuple]] = []  # (worker, n, clients)
         self._base_cru: dict[str, float] = {}
         self._outstanding_s: dict[str, float] = {}  # predicted queued seconds
-        self._max_width = max(w.max_qubits for w in workers)
+        self.ft = fault_tolerance or FaultToleranceConfig()
+        self.fleet = FleetHealth(self.ft)
+        self.fault_injector = fault_injector
+        if fault_injector is not None:
+            fault_injector.start(self.clock())
+        self._max_width = max((w.max_qubits for w in workers), default=0)
         for w in workers:
-            self.manager.register_worker(
-                w.worker_id,
-                w.max_qubits,
-                cru=w.base_load,
-                t=self.clock(),
-                error_rate=w.error_rate,
-            )
-            self._base_cru[w.worker_id] = w.base_load
-            self._outstanding_s[w.worker_id] = 0.0
+            self._register(w)
+
+    # ------------------------------------------------------ live membership
+    def _register(self, w: WorkerConfig) -> None:
+        self.manager.register_worker(
+            w.worker_id,
+            w.max_qubits,
+            cru=w.base_load,
+            t=self.clock(),
+            error_rate=w.error_rate,
+        )
+        self._base_cru[w.worker_id] = w.base_load
+        self._outstanding_s[w.worker_id] = 0.0
+        self.fleet.add(w.worker_id)
+
+    def _recompute_max_width(self) -> None:
+        self._max_width = max(
+            (v.max_qubits for v in self.manager.workers.values()), default=0
+        )
+
+    def register_worker(self, worker: WorkerConfig) -> None:
+        """Add a worker to the fleet at runtime; it becomes placeable on
+        the next batch."""
+        if worker.worker_id in self._base_cru:
+            raise ValueError(f"worker {worker.worker_id!r} already registered")
+        self._register(worker)
+        self._max_width = max(self._max_width, worker.max_qubits)
+
+    def drain_worker(self, worker_id: str, timeout: float = 30.0) -> None:
+        """Remove a worker from the fleet: stop placing on it, let in-flight
+        work land, then forget it.  The sync dispatcher has no cross-call
+        in-flight work, so removal is immediate."""
+        if worker_id not in self._base_cru:
+            raise KeyError(f"unknown worker {worker_id!r}")
+        self.fleet.mark_draining(worker_id)
+        self._forget_worker(worker_id)
+
+    def _forget_worker(self, worker_id: str) -> None:
+        self.manager.workers.pop(worker_id, None)
+        self._base_cru.pop(worker_id, None)
+        self._outstanding_s.pop(worker_id, None)
+        self.fleet.remove(worker_id)
+        self._recompute_max_width()
 
     # ------------------------------------------------------ CRU cost model
     def _estimate_s(self, batch: CoalescedBatch) -> float:
@@ -430,7 +473,9 @@ class Dispatcher:
         return "mesh"
 
     def run_batch(self, batch: CoalescedBatch) -> str:
-        """Place one batch via Algorithm 2 and execute it on the spot."""
+        """Place one batch via Algorithm 2 and execute it on the spot,
+        retrying in place on failure and then migrating the batch to a
+        surviving worker through the gateway's re-coalescing requeue."""
         now = self.clock()
         if self.mesh_spill and self._oversized(batch):
             return self.run_spilled(batch)
@@ -441,7 +486,7 @@ class Dispatcher:
             demand=self._width(batch),
             service_time=est,
         )
-        wid = self.manager.assign(task, now)
+        wid = self.manager.assign(task, now, exclude=self.fleet.unplaceable(now))
         if wid is None:
             if self.mesh_spill:
                 return self.run_spilled(batch)
@@ -450,16 +495,63 @@ class Dispatcher:
                 f"no worker fits a {task.demand}-qubit batch (capacities: {caps})"
             )
         self._charge(wid, est)
-        tr = self.gateway.telemetry.trace
+        self.fleet.on_dispatch(wid)
+        tel = self.gateway.telemetry
+        tr = tel.trace
+        seqs = [m.seq for m in batch.members]
         t0 = self.clock()
         if tr.enabled:
-            seqs = [m.seq for m in batch.members]
             tr.batch_stage(seqs, "placed", t0, worker=wid)
             tr.batch_stage(seqs, "dispatched", t0)
             tr.batch_stage(seqs, "kernel_start", t0)
-        fids = execute_batch(
-            batch, self.kernel, self.shift_kernel, self.multibank_kernel
-        )
+        attempts = 0
+        while True:
+            t0 = self.clock()
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector.check(wid, t0)
+                fids = execute_batch(
+                    batch, self.kernel, self.shift_kernel, self.multibank_kernel
+                )
+                break
+            except Exception as exc:
+                err = exc
+            now = self.clock()
+            tripped = self.fleet.on_failure(wid, now)
+            tel.on_worker_failure(wid)
+            if tripped:
+                tel.on_worker_offline(wid)
+                if tr.enabled:
+                    tr.batch_stage(seqs, "worker_offline", now, worker=wid)
+            attempts += 1
+            if attempts <= self.ft.retry_limit and self.fleet.retryable(wid, now):
+                self.fleet.record_retry(wid)
+                tel.on_worker_retry(wid)
+                if tr.enabled:
+                    tr.batch_stage(seqs, "retried", now, worker=wid)
+                if self.ft.retry_backoff_s:
+                    time.sleep(self.ft.retry_backoff_s * 2 ** (attempts - 1))
+                continue
+            # out of retries: release the failed worker's capacity, then
+            # migrate through the coalescer if any surviving worker fits
+            self._charge(wid, -est)
+            self.manager.complete(wid, task, now)
+            self.fleet.on_release(wid)
+            bad = self.fleet.unplaceable(now)
+            survivors = [
+                w
+                for w, v in self.manager.workers.items()
+                if w != wid and w not in bad and v.max_qubits >= task.demand
+            ]
+            if survivors:
+                self.fleet.record_migration(wid)
+                tel.on_worker_migration(wid)
+                if tr.enabled:
+                    tr.batch_stage(seqs, "migrated", now, worker=wid)
+                self.gateway.requeue(batch, now)
+                return wid
+            self.gateway.fail(batch, err, now)
+            raise err
         t1 = self.clock()
         if tr.enabled:
             tr.worker_span(wid, t0, t1, args=kernel_span_args(batch))
@@ -467,6 +559,8 @@ class Dispatcher:
         self._record(batch)
         self._charge(wid, -est)
         self.manager.complete(wid, task, self.clock())
+        self.fleet.on_success(wid)
+        self.fleet.on_release(wid)
         self.gateway.complete(batch, fids, self.clock())
         self.batch_log.append((wid, batch.n, tuple(sorted(batch.clients()))))
         return wid
@@ -481,11 +575,17 @@ class Dispatcher:
         return len(batches)
 
     def drain(self) -> int:
-        """Force-flush partial buffers and run everything (end of a bank)."""
-        batches = self.gateway.flush(self.clock())
-        for b in batches:
-            self.run_batch(b)
-        return len(batches)
+        """Force-flush partial buffers and run everything (end of a bank).
+        Loops until the gateway is empty so batches migrated back through
+        the coalescer after a worker failure are re-emitted and re-placed."""
+        n = 0
+        while True:
+            batches = self.gateway.flush(self.clock())
+            if not batches:
+                return n
+            for b in batches:
+                self.run_batch(b)
+            n += len(batches)
 
     # lifecycle no-ops so sync/async runtimes share a shutdown path
     def start(self) -> None:
@@ -535,6 +635,8 @@ class GatewayRuntime:
         mode: str = "sync",
         slots_per_worker: int = 1,
         observability=None,
+        fault_tolerance: FaultToleranceConfig | None = None,
+        fault_injector: FaultInjector | None = None,
         **gateway_opts,
     ):
         if mode not in ("sync", "async"):
@@ -559,6 +661,8 @@ class GatewayRuntime:
             spill_executor=spill_executor,
             worker_vmem_bytes=worker_vmem_bytes,
             clock=clock,
+            fault_tolerance=fault_tolerance,
+            fault_injector=fault_injector,
         )
         if mode == "async":
             from repro.serve.async_dispatcher import AsyncDispatcher

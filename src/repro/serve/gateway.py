@@ -354,6 +354,7 @@ class Gateway:
         counted in-flight: they never went back through admission."""
         with self._lock:
             self.coalescer.requeue(batch)
+            self.telemetry.on_requeue(len(batch.members))
             tr = self.telemetry.trace
             if now is not None and tr.enabled:
                 tr.batch_stage((m.seq for m in batch.members), "requeue", now)

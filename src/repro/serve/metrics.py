@@ -176,6 +176,12 @@ class Telemetry:
         # failing fast.
         self.mesh_spills = 0
         self.spilled_lanes = 0
+        # failure recovery: batches sent back through the coalescer after a
+        # worker failure or drain (each re-coalesces and re-places
+        # bit-identically), plus per-worker fleet event counters.
+        self.migrated_batches = 0
+        self.migrated_circuits = 0
+        self.worker_events: dict[str, dict[str, int]] = {}
         self.service = ServiceModel()
 
     def _tenant(self, client_id: str) -> TenantStats:
@@ -230,6 +236,39 @@ class Telemetry:
         s = self._tenant(client_id)
         s.evicted += 1
         s.slo_misses += 1
+
+    def on_requeue(self, n_members: int) -> None:
+        """One batch migrated back through the coalescer (worker failure,
+        drain, or simulated eviction) for re-coalescing and re-placement."""
+        self.migrated_batches += 1
+        self.migrated_circuits += n_members
+
+    def _worker_events(self, worker_id: str) -> dict[str, int]:
+        return self.worker_events.setdefault(
+            worker_id,
+            {
+                "failures": 0,
+                "retries": 0,
+                "migrations": 0,
+                "hedges": 0,
+                "offline_trips": 0,
+            },
+        )
+
+    def on_worker_failure(self, worker_id: str) -> None:
+        self._worker_events(worker_id)["failures"] += 1
+
+    def on_worker_retry(self, worker_id: str) -> None:
+        self._worker_events(worker_id)["retries"] += 1
+
+    def on_worker_migration(self, worker_id: str) -> None:
+        self._worker_events(worker_id)["migrations"] += 1
+
+    def on_worker_hedge(self, worker_id: str) -> None:
+        self._worker_events(worker_id)["hedges"] += 1
+
+    def on_worker_offline(self, worker_id: str) -> None:
+        self._worker_events(worker_id)["offline_trips"] += 1
 
     def on_complete(self, client_id: str, submit_time: float, now: float) -> None:
         s = self._tenant(client_id)
@@ -301,6 +340,13 @@ class Telemetry:
             out["spilled_lanes"] = self.spilled_lanes
         if evicted:
             out["evicted"] = evicted
+        if self.migrated_batches:
+            out["migrated_batches"] = self.migrated_batches
+            out["migrated_circuits"] = self.migrated_circuits
+        if self.worker_events:
+            out["fleet"] = {
+                w: dict(ev) for w, ev in sorted(self.worker_events.items())
+            }
         if slo_done:
             out["slo_misses"] = slo_misses
             out["slo_attainment"] = round(1.0 - slo_misses / slo_done, 4)

@@ -172,7 +172,9 @@ def test_worker_timeline_accounting():
 
 # ------------------------------------------------ simulation trace (golden)
 def _seeded_sim_trace() -> dict:
-    """4-tenant virtual-clock gateway run; everything deterministic."""
+    """4-tenant virtual-clock gateway run with a mid-run worker crash (and
+    recovery), so the golden trace covers the failure-recovery stages;
+    everything deterministic."""
     from repro.comanager.simulation import SystemSimulation, homogeneous_workers
     from repro.comanager.tenancy import JobSpec
 
@@ -188,12 +190,23 @@ def _seeded_sim_trace() -> dict:
         jobs,
         gateway=True,
         gateway_deadline=0.2,
+        heartbeat_period=0.5,
         tenant_slos_ms={"alice": 2000.0, "carol": 2000.0},
+        worker_failures={
+            "w1": {"kind": "crash_recover", "at": 0.3, "recover_at": 3.0}
+        },
     )
     report = sim.run()
     assert report.trace is not None
     assert report.trace.open_traces == 0  # every span closed
-    assert validate_trace(report.trace.buffer.records(CircuitTrace)) == []
+    records = report.trace.buffer.records(CircuitTrace)
+    assert validate_trace(records) == []
+    # the injected crash produced real recovery traffic: batches lost on w1
+    # went back through the coalescer and completed elsewhere (or on the
+    # recovered worker) — every circuit still ends in "complete" below
+    assert any(
+        stage == "requeue" for r in records for stage, _ in r.stages
+    ), "crash_recover schedule produced no requeue stage"
     return report.trace.export_chrome_trace()
 
 
