@@ -21,15 +21,25 @@ from repro.data import mnist
 PAPER_ACC = {(3, 9): 0.975, (3, 8): 0.962, (3, 6): 0.981, (1, 5): 0.986}
 
 
-def run_task(a: int, b: int, *, epochs: int = 40, n_per_class: int = 60,
-             seed: int = 0):
+def run_task(
+    a: int, b: int, *, epochs: int = 40, n_per_class: int = 60, seed: int = 0
+):
     """Paper settings: epsilon=40 epochs; 2-layer (single+dual) circuits give
     the best accuracy on our synthetic MNIST stand-in."""
     cfg = QuClassiConfig(qc=5, n_layers=2)
     x, y = mnist.make_pair_dataset(a, b, n_per_class=n_per_class, seed=seed)
     (xtr, ytr), (xte, yte) = mnist.train_test_split(x, y)
-    rep = train(cfg, (xtr, ytr), (xte, yte), epochs=epochs, batch_size=16,
-                lr=0.05, optimizer="adam", grad_mode="autodiff", seed=seed)
+    rep = train(
+        cfg,
+        (xtr, ytr),
+        (xte, yte),
+        epochs=epochs,
+        batch_size=16,
+        lr=0.05,
+        optimizer="adam",
+        grad_mode="autodiff",
+        seed=seed,
+    )
     return rep
 
 
@@ -41,7 +51,8 @@ def gradient_equivalence(a: int, b: int) -> float:
     p = quclassi.init_params(cfg, jax.random.PRNGKey(0))
     n_bank = (2 * cfg.n_theta + 1) * 8 * cfg.n_patches
     ex = dataplane.worker_batched_executor(
-        cfg.spec, dataplane.round_robin_assignment(n_bank, 4), 4)
+        cfg.spec, dataplane.round_robin_assignment(n_bank, 4), 4
+    )
     _, g1, _ = quclassi.grad_shift(cfg, p, xb, yb, executor=ex)
     _, g2, _ = quclassi.grad_shift(cfg, p, xb, yb)
     return float(jnp.abs(g1["theta"] - g2["theta"]).max())
@@ -52,13 +63,15 @@ def rows(epochs: int = 40):
     for (a, b), paper in PAPER_ACC.items():
         rep = run_task(a, b, epochs=epochs)
         best = max(e.test_accuracy for e in rep.epochs)
-        out.append({
-            "task": f"{a}/{b}",
-            "test_accuracy": round(rep.final_test_accuracy, 3),
-            "best_accuracy": round(best, 3),
-            "paper_accuracy": paper,
-            "dist_vs_local_grad_gap": f"{gradient_equivalence(a, b):.1e}",
-        })
+        out.append(
+            {
+                "task": f"{a}/{b}",
+                "test_accuracy": round(rep.final_test_accuracy, 3),
+                "best_accuracy": round(best, 3),
+                "paper_accuracy": paper,
+                "dist_vs_local_grad_gap": f"{gradient_equivalence(a, b):.1e}",
+            }
+        )
     return out
 
 
@@ -68,8 +81,10 @@ def main(epochs: int = 40):
     print(",".join(keys))
     for r in all_rows:
         print(",".join(str(r[k]) for k in keys))
-    print("# distributed == local gradients (gap ~1e-7): distribution "
-          "cannot change accuracy — stronger than the paper's <2% claim")
+    print(
+        "# distributed == local gradients (gap ~1e-7): distribution "
+        "cannot change accuracy — stronger than the paper's <2% claim"
+    )
     return all_rows
 
 

@@ -13,13 +13,22 @@ hosts, so a committed baseline is meaningful.  Wall-clock numbers
 (``*_us_per_circuit``, real-kernel c/s) vary wildly between the committing
 machine and a CI runner and are reported informationally only.
 
+Every gate is evaluated in one pass — ALL out-of-band metrics are reported
+together (never fail-on-first), and when ``$GITHUB_STEP_SUMMARY`` is set a
+markdown comparison table of every gated metric lands on the workflow run
+page.
+
 Usage:
     python benchmarks/check_trend.py [--emitted DIR] [--baselines DIR]
+                                     [--artifacts A.json,B.json]
                                      [--tolerance-scale S]
                                      [--update-baselines]
 
-``--update-baselines`` copies the emitted artifacts over the committed
-baselines (run after an intentional perf change, then commit the diff).
+``--artifacts`` restricts the pass to a subset (the tier-1 job gates the
+kernel + gateway artifacts; the scale job gates ``BENCH_scale.json``,
+which tier-1 never emits).  ``--update-baselines`` copies the emitted
+artifacts over the committed baselines (run after an intentional perf
+change, then commit the diff).
 """
 from __future__ import annotations
 
@@ -30,7 +39,7 @@ import re
 import shutil
 import sys
 
-ARTIFACTS = ("BENCH_kernel.json", "BENCH_gateway.json")
+ARTIFACTS = ("BENCH_kernel.json", "BENCH_gateway.json", "BENCH_scale.json")
 
 #: (artifact, path regex, direction, relative tolerance).  ``higher`` means
 #: the metric regressed if current < baseline * (1 - tol); ``lower`` means
@@ -61,8 +70,12 @@ GATES = [
     # lifecycle hook got dropped — and circuits must not start spending a
     # larger share of their end-to-end latency waiting in the coalescer.
     ("BENCH_gateway.json", r"poisson\.observability\.events$", "higher", 0.25),
-    ("BENCH_gateway.json",
-     r"poisson\.observability\.stages\.coalesce_wait_share$", "lower", 0.25),
+    (
+        "BENCH_gateway.json",
+        r"poisson\.observability\.stages\.coalesce_wait_share$",
+        "lower",
+        0.25,
+    ),
     # failure-tolerant dispatch (virtual clock, deterministic): the
     # canonical crash scenario must keep migrating batches off the dead
     # worker, and the system must keep absorbing the crash — every circuit
@@ -70,6 +83,20 @@ GATES = [
     ("BENCH_gateway.json", r"chaos\.migrated_batches$", "higher", 0.25),
     ("BENCH_gateway.json", r"chaos\.completed_fraction$", "higher", 0.01),
     ("BENCH_gateway.json", r"chaos\.slo_attainment$", "higher", 0.10),
+    # scale harness (virtual clock, fully seeded -> deterministic): the
+    # 1k-tenant storm's throughput knee must not move down, latency at 80%
+    # of the knee must not inflate, and knee-calibrated admission control
+    # must keep shedding load past the knee while holding the admitted
+    # circuits' SLO attainment.
+    ("BENCH_scale.json", r"^knee\.offered_cps$", "higher", 0.25),
+    ("BENCH_scale.json", r"^knee\.achieved_cps$", "higher", 0.25),
+    ("BENCH_scale.json", r"^knee\.p99_latency_s$", "lower", 0.25),
+    ("BENCH_scale.json", r"^p99_at_80pct_knee_s$", "lower", 0.25),
+    ("BENCH_scale.json", r"^attainment_at_knee$", "higher", 0.10),
+    ("BENCH_scale.json", r"^admission\.reject_fraction$", "higher", 0.25),
+    ("BENCH_scale.json", r"^admission\.attainment_admitted$", "higher", 0.10),
+    # same-seed double run must be bit-identical (1 = identical, 0 = drift)
+    ("BENCH_scale.json", r"^determinism\.repeat_identical$", "higher", 0.0),
 ]
 
 #: substrings marking wall-clock metrics: never gated, listed informationally.
@@ -98,20 +125,57 @@ def load(path):
         return flatten(json.load(f))
 
 
-def check(emitted_dir, baseline_dir, tolerance_scale=1.0, verbose=True):
-    """Returns a list of regression strings (empty = gate passes)."""
+def step_summary(rows, failures, path):
+    """Append the comparison as a markdown table to ``path`` (the file
+    ``$GITHUB_STEP_SUMMARY`` points at on a CI runner)."""
+    lines = ["## Benchmark trend gate", ""]
+    if rows:
+        lines += [
+            "| artifact | metric | baseline | current | change | status |",
+            "|---|---|---:|---:|---:|---|",
+        ]
+        for artifact, metric, base, cur, delta, direction, tol, bad in rows:
+            status = "**REGRESSED**" if bad else "ok"
+            lines.append(
+                f"| {artifact} | `{metric}` | {base:g} | {cur:g} "
+                f"| {delta:+.1%} | {status} |"
+            )
+    gate_errors = [f for f in failures if ":" not in f or "vs baseline" not in f]
+    if gate_errors:
+        lines += [""] + [f"- {f}" for f in gate_errors]
+    n_bad = sum(1 for r in rows if r[-1])
+    lines += ["", f"**{n_bad} regressed / {len(rows)} gated metrics**", ""]
+    with open(path, "a") as f:
+        f.write("\n".join(lines))
+
+
+def check(
+    emitted_dir, baseline_dir, tolerance_scale=1.0, verbose=True, artifacts=None
+):
+    """Returns a list of regression strings (empty = gate passes).
+
+    Every gate across every artifact is evaluated before returning, so one
+    run reports ALL out-of-band metrics; ``artifacts`` restricts the pass
+    (default: all known artifacts).  With ``$GITHUB_STEP_SUMMARY`` set, the
+    full comparison lands there as a markdown table.
+    """
+    artifacts = ARTIFACTS if artifacts is None else tuple(artifacts)
     failures = []
     rows = []
-    for artifact in ARTIFACTS:
+    for artifact in artifacts:
         emitted_path = os.path.join(emitted_dir, artifact)
         baseline_path = os.path.join(baseline_dir, artifact)
         if not os.path.exists(emitted_path):
-            failures.append(f"{artifact}: not emitted in {emitted_dir} "
-                            f"(run benchmarks/run.py --quick first)")
+            failures.append(
+                f"{artifact}: not emitted in {emitted_dir} "
+                f"(run benchmarks/run.py --quick first)"
+            )
             continue
         if not os.path.exists(baseline_path):
-            failures.append(f"{artifact}: no baseline in {baseline_dir} "
-                            f"(run with --update-baselines and commit)")
+            failures.append(
+                f"{artifact}: no baseline in {baseline_dir} "
+                f"(run with --update-baselines and commit)"
+            )
             continue
         current = load(emitted_path)
         baseline = load(baseline_path)
@@ -120,15 +184,18 @@ def check(emitted_dir, baseline_dir, tolerance_scale=1.0, verbose=True):
             tol = tol * tolerance_scale
             matched = [p for p in baseline if re.search(pattern, p)]
             if not matched:
-                failures.append(f"{artifact}: gate {pattern!r} matches "
-                                f"nothing in the baseline")
+                failures.append(
+                    f"{artifact}: gate {pattern!r} matches " f"nothing in the baseline"
+                )
             for path in sorted(matched):
                 base = baseline[path]
                 if path not in current:
-                    failures.append(f"{artifact}:{path}: gated metric "
-                                    f"missing from the emitted artifact "
-                                    f"(baseline {base}); if intentional, "
-                                    f"--update-baselines")
+                    failures.append(
+                        f"{artifact}:{path}: gated metric "
+                        f"missing from the emitted artifact "
+                        f"(baseline {base}); if intentional, "
+                        f"--update-baselines"
+                    )
                     continue
                 cur = current[path]
                 if direction == "higher":
@@ -136,40 +203,55 @@ def check(emitted_dir, baseline_dir, tolerance_scale=1.0, verbose=True):
                 else:
                     bad = cur > base * (1.0 + tol)
                 delta = (cur - base) / base if base else 0.0
-                rows.append((artifact, path, base, cur, delta, direction,
-                             tol, bad))
+                rows.append((artifact, path, base, cur, delta, direction, tol, bad))
                 if bad:
                     failures.append(
                         f"{artifact}:{path}: {cur:g} vs baseline {base:g} "
                         f"({delta:+.1%}, tolerance {tol:.0%}, "
-                        f"want {direction})")
+                        f"want {direction})"
+                    )
     if verbose:
-        print(f"{'artifact':<19} {'metric':<42} {'baseline':>10} "
-              f"{'current':>10} {'change':>8}  status")
+        print(
+            f"{'artifact':<19} {'metric':<42} {'baseline':>10} "
+            f"{'current':>10} {'change':>8}  status"
+        )
         for artifact, path, base, cur, delta, direction, tol, bad in rows:
             status = "REGRESSED" if bad else "ok"
-            print(f"{artifact:<19} {path:<42} {base:>10g} {cur:>10g} "
-                  f"{delta:>+8.1%}  {status}")
+            print(
+                f"{artifact:<19} {path:<42} {base:>10g} {cur:>10g} "
+                f"{delta:>+8.1%}  {status}"
+            )
         wall = []
-        for artifact in ARTIFACTS:
+        for artifact in artifacts:
             path = os.path.join(emitted_dir, artifact)
             if os.path.exists(path):
-                wall += [f"{artifact}:{p}={v:g}" for p, v in load(path).items()
-                         if any(m in p for m in WALL_CLOCK_MARKERS)
-                         and not any(re.search(g[1], p) for g in GATES)]
+                wall += [
+                    f"{artifact}:{p}={v:g}"
+                    for p, v in load(path).items()
+                    if any(m in p for m in WALL_CLOCK_MARKERS)
+                    and not any(re.search(g[1], p) for g in GATES)
+                ]
         if wall:
-            print(f"# {len(wall)} wall-clock metrics not gated "
-                  f"(machine-dependent), e.g. {wall[0]}")
+            print(
+                f"# {len(wall)} wall-clock metrics not gated "
+                f"(machine-dependent), e.g. {wall[0]}"
+            )
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        step_summary(rows, failures, summary_path)
     return failures
 
 
-def update_baselines(emitted_dir, baseline_dir):
+def update_baselines(emitted_dir, baseline_dir, artifacts=None):
+    artifacts = ARTIFACTS if artifacts is None else tuple(artifacts)
     os.makedirs(baseline_dir, exist_ok=True)
-    for artifact in ARTIFACTS:
+    for artifact in artifacts:
         src = os.path.join(emitted_dir, artifact)
         if not os.path.exists(src):
-            sys.exit(f"cannot update baselines: {src} missing "
-                     f"(run benchmarks/run.py --quick first)")
+            sys.exit(
+                f"cannot update baselines: {src} missing "
+                f"(run benchmarks/run.py --quick first)"
+            )
         shutil.copy(src, os.path.join(baseline_dir, artifact))
         print(f"baseline updated: {os.path.join(baseline_dir, artifact)}")
 
@@ -177,20 +259,47 @@ def update_baselines(emitted_dir, baseline_dir):
 def main(argv=None) -> int:
     here = os.path.dirname(os.path.abspath(__file__))
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--emitted", default=".",
-                    help="directory holding the freshly emitted BENCH_*.json")
-    ap.add_argument("--baselines", default=os.path.join(here, "baselines"),
-                    help="directory holding the committed baselines")
-    ap.add_argument("--tolerance-scale", type=float, default=1.0,
-                    help="multiply every gate's tolerance band (e.g. 2.0 to "
-                         "loosen all bands while bisecting)")
-    ap.add_argument("--update-baselines", action="store_true",
-                    help="copy the emitted artifacts over the baselines")
+    ap.add_argument(
+        "--emitted",
+        default=".",
+        help="directory holding the freshly emitted BENCH_*.json",
+    )
+    ap.add_argument(
+        "--baselines",
+        default=os.path.join(here, "baselines"),
+        help="directory holding the committed baselines",
+    )
+    ap.add_argument(
+        "--artifacts",
+        default=None,
+        help="comma-separated subset of artifacts to gate "
+        f"(default: all of {', '.join(ARTIFACTS)})",
+    )
+    ap.add_argument(
+        "--tolerance-scale",
+        type=float,
+        default=1.0,
+        help="multiply every gate's tolerance band (e.g. 2.0 to "
+        "loosen all bands while bisecting)",
+    )
+    ap.add_argument(
+        "--update-baselines",
+        action="store_true",
+        help="copy the emitted artifacts over the baselines",
+    )
     args = ap.parse_args(argv)
+    artifacts = None
+    if args.artifacts:
+        artifacts = tuple(a.strip() for a in args.artifacts.split(",") if a.strip())
+        unknown = sorted(set(artifacts) - set(ARTIFACTS))
+        if unknown:
+            ap.error(f"unknown artifact(s) {unknown}; known: {list(ARTIFACTS)}")
     if args.update_baselines:
-        update_baselines(args.emitted, args.baselines)
+        update_baselines(args.emitted, args.baselines, artifacts)
         return 0
-    failures = check(args.emitted, args.baselines, args.tolerance_scale)
+    failures = check(
+        args.emitted, args.baselines, args.tolerance_scale, artifacts=artifacts
+    )
     if failures:
         print("\nbenchmark regression gate FAILED:", file=sys.stderr)
         for f in failures:

@@ -39,20 +39,25 @@ from repro.comanager.simulation import SystemSimulation
 from repro.comanager.worker import PAPER_RATES_GCP, WorkerConfig
 
 CLIENTS = [("5q1l", 5, 1), ("5q2l", 5, 2), ("7q1l", 7, 1), ("7q2l", 7, 2)]
-CONTENTION = 0.5   # same co-residency slowdown as benchmarks/multitenant.py
+CONTENTION = 0.5  # same co-residency slowdown as benchmarks/multitenant.py
 
 
 def workers():
-    return [WorkerConfig(f"w{i+1}", q, contention=CONTENTION)
-            for i, q in enumerate((5, 10, 15, 20))]
+    return [
+        WorkerConfig(f"w{i+1}", q, contention=CONTENTION)
+        for i, q in enumerate((5, 10, 15, 20))
+    ]
 
 
 def make_jobs(scale: float = 0.25):
     jobs = []
     for cid, qc, nl in CLIENTS:
         n = max(8, int(PD.N_CIRCUITS[(qc, nl)] * scale))
-        jobs.append(tenancy.JobSpec(cid, qc, nl, n,
-                                    service_override=1.0 / PAPER_RATES_GCP[(qc, nl)]))
+        jobs.append(
+            tenancy.JobSpec(
+                cid, qc, nl, n, service_override=1.0 / PAPER_RATES_GCP[(qc, nl)]
+            )
+        )
     return jobs
 
 
@@ -60,19 +65,23 @@ def make_jobs(scale: float = 0.25):
 def fig6(scale: float = 0.25):
     """Coalesced gateway vs uncoalesced per-circuit dispatch, closed world."""
     common = dict(classical_overhead=0.01, assign_latency=PD.ASSIGN_LATENCY)
-    base = SystemSimulation(workers(), make_jobs(scale), fair_queue=True,
-                            **common).run()
-    gw = SystemSimulation(workers(), make_jobs(scale), gateway=True,
-                          gateway_deadline=1.0, **common).run()
+    base = SystemSimulation(
+        workers(), make_jobs(scale), fair_queue=True, **common
+    ).run()
+    gw = SystemSimulation(
+        workers(), make_jobs(scale), gateway=True, gateway_deadline=1.0, **common
+    ).run()
     rows = []
     for cid, qc, nl in CLIENTS:
         jb, jg = base.jobs[cid], gw.jobs[cid]
-        rows.append({
-            "client": cid,
-            "cps_uncoalesced": round(jb.circuits_per_second, 2),
-            "cps_gateway": round(jg.circuits_per_second, 2),
-            "gain": f"{jg.circuits_per_second / jb.circuits_per_second:.1f}x",
-        })
+        rows.append(
+            {
+                "client": cid,
+                "cps_uncoalesced": round(jb.circuits_per_second, 2),
+                "cps_gateway": round(jg.circuits_per_second, 2),
+                "gain": f"{jg.circuits_per_second / jb.circuits_per_second:.1f}x",
+            }
+        )
     return base, gw, rows
 
 
@@ -82,16 +91,22 @@ def sync_vs_async(scale: float = 0.25):
     ledger) vs the async gateway (per-worker slot pipelines overlap batch
     dispatch across workers), virtual clock — deterministic, so the trend
     gate pins it."""
-    common = dict(classical_overhead=0.01, assign_latency=PD.ASSIGN_LATENCY,
-                  gateway=True, gateway_deadline=1.0)
+    common = dict(
+        classical_overhead=0.01,
+        assign_latency=PD.ASSIGN_LATENCY,
+        gateway=True,
+        gateway_deadline=1.0,
+    )
     sync = SystemSimulation(workers(), make_jobs(scale), **common).run()
-    asyn = SystemSimulation(workers(), make_jobs(scale), gateway_async=True,
-                            **common).run()
+    asyn = SystemSimulation(
+        workers(), make_jobs(scale), gateway_async=True, **common
+    ).run()
     return {
         "sync_cps": round(sync.circuits_per_second, 2),
         "async_cps": round(asyn.circuits_per_second, 2),
-        "async_over_sync": round(asyn.circuits_per_second
-                                 / sync.circuits_per_second, 3),
+        "async_over_sync": round(
+            asyn.circuits_per_second / sync.circuits_per_second, 3
+        ),
     }
 
 
@@ -100,8 +115,12 @@ def sync_vs_async(scale: float = 0.25):
 #: shape — so the coalescer's cross-tenant packing actually has peers to
 #: pack with (a tenant alone at 60 c/s can only ~half-fill a 128-lane batch
 #: within the deadline; two tenants sharing a structure fill it).
-POISSON_CLIENTS = [("alice-5q", 5, 1), ("bob-5q", 5, 1),
-                   ("carol-7q", 7, 1), ("dave-7q", 7, 1)]
+POISSON_CLIENTS = [
+    ("alice-5q", 5, 1),
+    ("bob-5q", 5, 1),
+    ("carol-7q", 7, 1),
+    ("dave-7q", 7, 1),
+]
 
 #: end-to-end latency SLOs for the Poisson tenants (ms).  2000 ms keeps the
 #: SLO flush budget (SLO_FLUSH_FRACTION * 2 s = 1 s) equal to the default
@@ -109,21 +128,38 @@ POISSON_CLIENTS = [("alice-5q", 5, 1), ("bob-5q", 5, 1),
 POISSON_SLOS_MS = {cid: 2000.0 for cid, _, _ in POISSON_CLIENTS}
 
 
-def poisson(rate_per_client: float = 60.0, n_per_client: int = 300,
-            deadline: float = 1.0, seed: int = 0):
+def poisson(
+    rate_per_client: float = 60.0,
+    n_per_client: int = 300,
+    deadline: float = 1.0,
+    seed: int = 0,
+):
     """Open-loop arrivals: per-circuit Poisson streams instead of one burst."""
     rng = np.random.default_rng(seed)
     jobs, arrivals = [], {}
     for cid, qc, nl in POISSON_CLIENTS:
-        jobs.append(tenancy.JobSpec(cid, qc, nl, n_per_client,
-                                    service_override=1.0 / PAPER_RATES_GCP[(qc, nl)]))
+        jobs.append(
+            tenancy.JobSpec(
+                cid,
+                qc,
+                nl,
+                n_per_client,
+                service_override=1.0 / PAPER_RATES_GCP[(qc, nl)],
+            )
+        )
         arrivals[cid] = np.cumsum(
-            rng.exponential(1.0 / rate_per_client, n_per_client)).tolist()
-    sim = SystemSimulation(workers(), jobs, gateway=True,
-                           gateway_deadline=deadline, arrivals=arrivals,
-                           tenant_slos_ms=POISSON_SLOS_MS,
-                           classical_overhead=0.01,
-                           assign_latency=PD.ASSIGN_LATENCY)
+            rng.exponential(1.0 / rate_per_client, n_per_client)
+        ).tolist()
+    sim = SystemSimulation(
+        workers(),
+        jobs,
+        gateway=True,
+        gateway_deadline=deadline,
+        arrivals=arrivals,
+        tenant_slos_ms=POISSON_SLOS_MS,
+        classical_overhead=0.01,
+        assign_latency=PD.ASSIGN_LATENCY,
+    )
     return sim.run()
 
 
@@ -145,11 +181,16 @@ def chaos(scale: float = 0.25):
     within SLO (``completed_fraction``, ``slo_attainment``)."""
     jobs = make_jobs(scale)
     rep = SystemSimulation(
-        workers(), jobs, gateway=True, gateway_deadline=1.0,
+        workers(),
+        jobs,
+        gateway=True,
+        gateway_deadline=1.0,
         heartbeat_period=0.3,
-        classical_overhead=0.01, assign_latency=PD.ASSIGN_LATENCY,
+        classical_overhead=0.01,
+        assign_latency=PD.ASSIGN_LATENCY,
         tenant_slos_ms={j.client_id: CHAOS_SLO_MS for j in jobs},
-        worker_failures=CHAOS_FAILURES).run()
+        worker_failures=CHAOS_FAILURES,
+    ).run()
     s = rep.gateway_summary
     total = sum(j.n_circuits for j in jobs)
     completed = sum(r.n_circuits for r in rep.jobs.values())
@@ -176,7 +217,7 @@ def kernel(n: int = 128, qc: int = 5, n_layers: int = 1, seed: int = 0):
     theta = jnp.asarray(rng.uniform(0, np.pi, (n, spec.n_theta)), jnp.float32)
     data = jnp.asarray(rng.uniform(0, np.pi, (n, spec.n_data)), jnp.float32)
 
-    kops.vqc_fidelity(spec, theta, data).block_until_ready()   # warm both jits
+    kops.vqc_fidelity(spec, theta, data).block_until_ready()  # warm both jits
     kops.vqc_fidelity(spec, theta[:1], data[:1]).block_until_ready()
 
     t0 = time.perf_counter()
@@ -184,8 +225,9 @@ def kernel(n: int = 128, qc: int = 5, n_layers: int = 1, seed: int = 0):
     t_coalesced = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    singles = [kops.vqc_fidelity(spec, theta[i:i + 1], data[i:i + 1])
-               for i in range(n)]
+    singles = [
+        kops.vqc_fidelity(spec, theta[i : i + 1], data[i : i + 1]) for i in range(n)
+    ]
     f_per = np.concatenate([np.asarray(s) for s in singles])
     t_single = time.perf_counter() - t0
 
@@ -200,12 +242,20 @@ def kernel(n: int = 128, qc: int = 5, n_layers: int = 1, seed: int = 0):
 
 #: (client, qc, layers, slo_ms) for the real-execution async section: the
 #: Fig-6 client mix with latency SLOs attached.
-ASYNC_CLIENTS = [("5q1l", 5, 1, 4000.0), ("5q2l", 5, 2, 4000.0),
-                 ("7q1l", 7, 1, 8000.0), ("7q2l", 7, 2, 8000.0)]
+ASYNC_CLIENTS = [
+    ("5q1l", 5, 1, 4000.0),
+    ("5q2l", 5, 2, 4000.0),
+    ("7q1l", 7, 1, 8000.0),
+    ("7q2l", 7, 2, 8000.0),
+]
 
 
-def async_kernel(n_per_client: int = 256, slots_per_worker: int = 2,
-                 deadline: float = 0.25, seed: int = 0):
+def async_kernel(
+    n_per_client: int = 256,
+    slots_per_worker: int = 2,
+    deadline: float = 0.25,
+    seed: int = 0,
+):
     """Real data plane, Fig-6 client mix: the sync dispatcher executes every
     mega-batch inline (serial kernel launches), the async dispatcher overlaps
     launches across per-worker slots.  Reports wall-clock circuits/sec for
@@ -218,15 +268,18 @@ def async_kernel(n_per_client: int = 256, slots_per_worker: int = 2,
     streams = []
     for cid, qc, nl, slo in ASYNC_CLIENTS:
         spec = circuits.build_quclassi_circuit(qc, nl)
-        theta = jnp.asarray(rng.uniform(0, np.pi, (n_per_client, spec.n_theta)),
-                            jnp.float32)
-        data = jnp.asarray(rng.uniform(0, np.pi, (n_per_client, spec.n_data)),
-                           jnp.float32)
+        theta = jnp.asarray(
+            rng.uniform(0, np.pi, (n_per_client, spec.n_theta)), jnp.float32
+        )
+        data = jnp.asarray(
+            rng.uniform(0, np.pi, (n_per_client, spec.n_data)), jnp.float32
+        )
         streams.append((cid, spec, theta, data, slo))
 
     def run(mode: str):
-        rt = GatewayRuntime(target=128, deadline=deadline, mode=mode,
-                            slots_per_worker=slots_per_worker)
+        rt = GatewayRuntime(
+            target=128, deadline=deadline, mode=mode, slots_per_worker=slots_per_worker
+        )
         try:
             for cid, spec, theta, data, slo in streams:
                 rt.gateway.register_client(cid, slo_ms=slo)
@@ -236,11 +289,13 @@ def async_kernel(n_per_client: int = 256, slots_per_worker: int = 2,
                 rt.dispatcher.kernel(spec, theta[:1], data[:1])
             t0 = time.perf_counter()
             futures = []
-            for i in range(n_per_client):      # interleaved open-loop streams
+            for i in range(n_per_client):  # interleaved open-loop streams
                 for cid, spec, theta, data, _ in streams:
-                    futures.append(rt.gateway.submit(
-                        cid, spec, (theta[i], data[i]),
-                        now=rt.dispatcher.clock()))
+                    futures.append(
+                        rt.gateway.submit(
+                            cid, spec, (theta[i], data[i]), now=rt.dispatcher.clock()
+                        )
+                    )
                 rt.dispatcher.kick()
             rt.dispatcher.drain()
             wall = time.perf_counter() - t0
@@ -258,13 +313,15 @@ def async_kernel(n_per_client: int = 256, slots_per_worker: int = 2,
         "sync_cps": round(sync_cps, 1),
         "async_cps": round(async_cps, 1),
         "async_over_sync": round(async_cps / sync_cps, 2),
-        "slo_attainment": {t["client"]: t.get("slo_attainment")
-                           for t in summary["tenants"]},
+        "slo_attainment": {
+            t["client"]: t.get("slo_attainment") for t in summary["tenants"]
+        },
     }
 
 
-def main(run_kernel: bool = True, scale: float = 0.25,
-         trace_path: str | None = None):
+def main(
+    run_kernel: bool = True, scale: float = 0.25, trace_path: str | None = None
+):
     print("## fig6-shaped workload: 4 clients x 4 workers (virtual clock)")
     base, gw, rows = fig6(scale)
     keys = list(rows[0])
@@ -272,58 +329,75 @@ def main(run_kernel: bool = True, scale: float = 0.25,
     for r in rows:
         print(",".join(str(r[k]) for k in keys))
     gain = gw.circuits_per_second / base.circuits_per_second
-    print(f"# system: {base.circuits_per_second:.1f} -> "
-          f"{gw.circuits_per_second:.1f} circuits/sec ({gain:.1f}x), "
-          f"lane fill {gw.gateway_summary['lane_fill']:.0%}")
-    assert gw.circuits_per_second > base.circuits_per_second, \
-        "coalesced gateway must beat per-circuit dispatch"
+    print(
+        f"# system: {base.circuits_per_second:.1f} -> "
+        f"{gw.circuits_per_second:.1f} circuits/sec ({gain:.1f}x), "
+        f"lane fill {gw.gateway_summary['lane_fill']:.0%}"
+    )
+    assert (
+        gw.circuits_per_second > base.circuits_per_second
+    ), "coalesced gateway must beat per-circuit dispatch"
 
-    print("\n## sync vs async dispatch (virtual clock, per-worker slot "
-          "pipelines)")
+    print("\n## sync vs async dispatch (virtual clock, per-worker slot pipelines)")
     sva = sync_vs_async(scale)
-    print(f"# sync {sva['sync_cps']} c/s -> async {sva['async_cps']} c/s "
-          f"({sva['async_over_sync']}x)")
-    assert sva["async_cps"] >= sva["sync_cps"], \
-        "async dispatcher must sustain >= the sync path's circuits/sec"
+    print(
+        f"# sync {sva['sync_cps']} c/s -> async {sva['async_cps']} c/s "
+        f"({sva['async_over_sync']}x)"
+    )
+    assert (
+        sva["async_cps"] >= sva["sync_cps"]
+    ), "async dispatcher must sustain >= the sync path's circuits/sec"
 
-    print("\n## open-loop Poisson arrivals (60 circuits/sec/client, "
-          "2 s latency SLO)")
+    print("\n## open-loop Poisson arrivals (60 circuits/sec/client, 2 s latency SLO)")
     rep = poisson()
     s = rep.gateway_summary
     for t in s["tenants"]:
-        print(f"{t['client']}: p50={t['p50_latency_s']:.2f}s "
-              f"p99={t['p99_latency_s']:.2f}s cps={t['circuits_per_second']} "
-              f"slo_attainment={t.get('slo_attainment')}")
-    print(f"# lane fill {s['lane_fill']:.0%} over {s['batches']} batches "
-          f"({s['size_flushes']} size / {s['deadline_flushes']} deadline "
-          f"flushes), slo attainment {s.get('slo_attainment')}")
+        print(
+            f"{t['client']}: p50={t['p50_latency_s']:.2f}s "
+            f"p99={t['p99_latency_s']:.2f}s cps={t['circuits_per_second']} "
+            f"slo_attainment={t.get('slo_attainment')}"
+        )
+    print(
+        f"# lane fill {s['lane_fill']:.0%} over {s['batches']} batches "
+        f"({s['size_flushes']} size / {s['deadline_flushes']} deadline "
+        f"flushes), slo attainment {s.get('slo_attainment')}"
+    )
     assert s["lane_fill"] >= 0.5, "open-loop lane fill must stay >= 50%"
 
     # stage-latency breakdown from the lifecycle traces: virtual-clock, so
     # the shares and event counts are machine-independent and trend-gated.
     obs = s["observability"]
     stages = obs["stages"]
-    shares = {m: stages.get(f"{m}_share", 0.0)
-              for m in ("queue_wait", "coalesce_wait", "place_wait",
-                        "dispatch_lag", "execute")}
-    print(f"# trace: {obs['events']} events over {obs['records']} records; "
-          f"e2e share " +
-          " ".join(f"{m}={v:.0%}" for m, v in shares.items()))
+    shares = {
+        m: stages.get(f"{m}_share", 0.0)
+        for m in (
+            "queue_wait", "coalesce_wait", "place_wait", "dispatch_lag", "execute"
+        )
+    }
+    print(
+        f"# trace: {obs['events']} events over {obs['records']} records; "
+        f"e2e share "
+        + " ".join(f"{m}={v:.0%}" for m, v in shares.items())
+    )
     if trace_path is not None:
         rep.trace.export_chrome_trace(trace_path)
         print(f"[artifact] wrote {trace_path} (open in ui.perfetto.dev)")
 
     print("\n## chaos: mid-run worker crash + recovery (virtual clock)")
     ch = chaos(scale)
-    print(f"# {ch['migrated_batches']} batches ({ch['migrated_circuits']} "
-          f"circuits) migrated off the dead worker, "
-          f"{ch['completed_fraction']:.0%} of circuits completed, "
-          f"slo attainment {ch['slo_attainment']}, "
-          f"makespan {ch['makespan_s']}s")
-    assert ch["completed_fraction"] == 1.0, \
-        "every circuit must survive the worker crash"
-    assert ch["migrated_batches"] >= 1, \
-        "the canonical crash scenario must exercise the migration path"
+    print(
+        f"# {ch['migrated_batches']} batches ({ch['migrated_circuits']} "
+        f"circuits) migrated off the dead worker, "
+        f"{ch['completed_fraction']:.0%} of circuits completed, "
+        f"slo attainment {ch['slo_attainment']}, "
+        f"makespan {ch['makespan_s']}s"
+    )
+    assert (
+        ch["completed_fraction"] == 1.0
+    ), "every circuit must survive the worker crash"
+    assert (
+        ch["migrated_batches"] >= 1
+    ), "the canonical crash scenario must exercise the migration path"
 
     result = {
         "fig6": rows,
@@ -337,17 +411,23 @@ def main(run_kernel: bool = True, scale: float = 0.25,
     if run_kernel:
         print("\n## real kernel: coalesced launch vs per-circuit launches")
         r = kernel()
-        print(f"{r['n_circuits']} circuits: coalesced {r['coalesced_cps']} c/s "
-              f"vs per-circuit {r['per_circuit_cps']} c/s ({r['speedup']})")
+        print(
+            f"{r['n_circuits']} circuits: coalesced {r['coalesced_cps']} c/s "
+            f"vs per-circuit {r['per_circuit_cps']} c/s ({r['speedup']})"
+        )
         result["kernel"] = r
 
-        print("\n## real kernel: sync inline dispatcher vs async worker pool "
-              "(Fig-6 client mix)")
+        print(
+            "\n## real kernel: sync inline dispatcher vs async worker pool "
+            "(Fig-6 client mix)"
+        )
         ra = async_kernel()
-        print(f"{ra['n_circuits']} circuits over {ra['worker_slots']} worker "
-              f"slots: sync {ra['sync_cps']} c/s vs async {ra['async_cps']} "
-              f"c/s ({ra['async_over_sync']}x), "
-              f"slo attainment {ra['slo_attainment']}")
+        print(
+            f"{ra['n_circuits']} circuits over {ra['worker_slots']} worker "
+            f"slots: sync {ra['sync_cps']} c/s vs async {ra['async_cps']} "
+            f"c/s ({ra['async_over_sync']}x), "
+            f"slo attainment {ra['slo_attainment']}"
+        )
         result["async_kernel"] = ra
     return result
 

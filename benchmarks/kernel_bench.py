@@ -43,7 +43,7 @@ def time_fn(fn, *args, iters: int = 3) -> float:
 
 def hbm_bytes(qc: int, n_ops: int, batch: int, fused: bool) -> int:
     """Statevector traffic: (re+im) * 4 B * 2^qc per read+write round trip."""
-    state = 2 * 4 * (2 ** qc) * batch
+    state = 2 * 4 * (2**qc) * batch
     trips = 2 if fused else 2 * n_ops          # read+write once vs per gate
     return state * trips
 
@@ -65,15 +65,20 @@ def rows(batch: int = 512):
 
             bf = hbm_bytes(qc, len(spec.ops), batch, fused=True)
             bp = hbm_bytes(qc, len(spec.ops), batch, fused=False)
-            out.append({
-                "qc": qc, "layers": nl, "batch": batch, "n_gates": len(spec.ops),
-                "fused_us_per_circuit": round(t_fused / batch * 1e6, 2),
-                "pergate_us_per_circuit": round(t_ref / batch * 1e6, 2),
-                "max_err": f"{err:.1e}",
-                "hbm_bytes_fused": bf,
-                "hbm_bytes_pergate": bp,
-                "traffic_ratio": round(bp / bf, 1),
-            })
+            out.append(
+                {
+                    "qc": qc,
+                    "layers": nl,
+                    "batch": batch,
+                    "n_gates": len(spec.ops),
+                    "fused_us_per_circuit": round(t_fused / batch * 1e6, 2),
+                    "pergate_us_per_circuit": round(t_ref / batch * 1e6, 2),
+                    "max_err": f"{err:.1e}",
+                    "hbm_bytes_fused": bf,
+                    "hbm_bytes_pergate": bp,
+                    "traffic_ratio": round(bp / bf, 1),
+                }
+            )
     return out
 
 
@@ -85,41 +90,55 @@ def shift_rows(batch: int = 64, four_term: bool = False):
         for nl in (1, 3):
             spec = circuits.build_quclassi_circuit(qc, nl)
             key = jax.random.PRNGKey(1)
-            theta = jax.random.uniform(key, (spec.n_theta,), jnp.float32,
-                                       minval=0.0, maxval=np.pi)
-            data = jax.random.uniform(jax.random.fold_in(key, 1),
-                                      (batch, spec.n_data), jnp.float32,
-                                      minval=0.0, maxval=np.pi)
+            theta = jax.random.uniform(
+                key, (spec.n_theta,), jnp.float32, minval=0.0, maxval=np.pi
+            )
+            data = jax.random.uniform(
+                jax.random.fold_in(key, 1),
+                (batch, spec.n_data),
+                jnp.float32,
+                minval=0.0,
+                maxval=np.pi,
+            )
             bank = shift_rule.build_shift_bank(theta, data, four_term=four_term)
             mat = bank.materialize()
 
-            implicit = jax.jit(lambda t, d: ops.vqc_fidelity_shiftbank(
-                spec, t, d, four_term))
+            implicit = jax.jit(
+                lambda t, d: ops.vqc_fidelity_shiftbank(spec, t, d, four_term)
+            )
             materialized = jax.jit(lambda t, d: ops.vqc_fidelity(spec, t, d))
             t_impl = time_fn(implicit, bank.theta, bank.data)
             t_mat = time_fn(materialized, mat.theta, mat.data)
-            err = float(jnp.abs(implicit(bank.theta, bank.data)
-                                - materialized(mat.theta, mat.data)).max())
+            err = float(
+                jnp.abs(
+                    implicit(bank.theta, bank.data) - materialized(mat.theta, mat.data)
+                ).max()
+            )
             # assert on the RAW error: the displayed string is rounded to one
             # significant figure and useless at the 1e-5 boundary.
             assert err < 1e-5, (qc, nl, err)
 
             stats = K.shift_bank_stats(spec, batch, four_term)
-            out.append({
-                "qc": qc, "layers": nl, "batch": batch,
-                "n_params": spec.n_theta, "n_circuits": bank.n_circuits,
-                "implicit_us_per_circuit": round(
-                    t_impl / bank.n_circuits * 1e6, 2),
-                "materialized_us_per_circuit": round(
-                    t_mat / bank.n_circuits * 1e6, 2),
-                "max_err": f"{err:.1e}",
-                "gate_apps_implicit": stats["gate_apps_implicit"],
-                "gate_apps_materialized": stats["gate_apps_materialized"],
-                "gate_apps_ratio": stats["gate_apps_ratio"],
-                "angle_bytes_implicit": stats["angle_bytes_implicit"],
-                "angle_bytes_materialized": stats["angle_bytes_materialized"],
-                "angle_bytes_ratio": stats["angle_bytes_ratio"],
-            })
+            out.append(
+                {
+                    "qc": qc,
+                    "layers": nl,
+                    "batch": batch,
+                    "n_params": spec.n_theta,
+                    "n_circuits": bank.n_circuits,
+                    "implicit_us_per_circuit": round(t_impl / bank.n_circuits * 1e6, 2),
+                    "materialized_us_per_circuit": round(
+                        t_mat / bank.n_circuits * 1e6, 2
+                    ),
+                    "max_err": f"{err:.1e}",
+                    "gate_apps_implicit": stats["gate_apps_implicit"],
+                    "gate_apps_materialized": stats["gate_apps_materialized"],
+                    "gate_apps_ratio": stats["gate_apps_ratio"],
+                    "angle_bytes_implicit": stats["angle_bytes_implicit"],
+                    "angle_bytes_materialized": stats["angle_bytes_materialized"],
+                    "angle_bytes_ratio": stats["angle_bytes_ratio"],
+                }
+            )
     return out
 
 
@@ -135,22 +154,35 @@ def multibank_rows(batch: int = 64, qc: int = 7, nl: int = 3):
         key = jax.random.PRNGKey(k)
         banks = []
         for i in range(k):
-            theta = jax.random.uniform(jax.random.fold_in(key, i),
-                                       (spec.n_theta,), jnp.float32,
-                                       minval=0.0, maxval=np.pi)
-            data = jax.random.uniform(jax.random.fold_in(key, 100 + i),
-                                      (batch, spec.n_data), jnp.float32,
-                                      minval=0.0, maxval=np.pi)
+            theta = jax.random.uniform(
+                jax.random.fold_in(key, i),
+                (spec.n_theta,),
+                jnp.float32,
+                minval=0.0,
+                maxval=np.pi,
+            )
+            data = jax.random.uniform(
+                jax.random.fold_in(key, 100 + i),
+                (batch, spec.n_data),
+                jnp.float32,
+                minval=0.0,
+                maxval=np.pi,
+            )
             banks.append(shift_rule.build_shift_bank(theta, data))
         thetas = tuple(b.theta for b in banks)
         datas = tuple(b.data for b in banks)
         group_sets = tuple(tuple(range(b.n_groups)) for b in banks)
 
-        fused = jax.jit(lambda ts, ds: ops.vqc_fidelity_shiftgroups_multibank(
-            spec, ts, ds, False, group_sets))
-        per_bank = jax.jit(lambda ts, ds: tuple(
-            ops.vqc_fidelity_shiftgroups(spec, t, d, False)
-            for t, d in zip(ts, ds)))
+        fused = jax.jit(
+            lambda ts, ds: ops.vqc_fidelity_shiftgroups_multibank(
+                spec, ts, ds, False, group_sets
+            )
+        )
+        per_bank = jax.jit(
+            lambda ts, ds: tuple(
+                ops.vqc_fidelity_shiftgroups(spec, t, d, False) for t, d in zip(ts, ds)
+            )
+        )
         t_fused = time_fn(fused, thetas, datas)
         t_per = time_fn(per_bank, thetas, datas)
         got = fused(thetas, datas)
@@ -167,16 +199,21 @@ def multibank_rows(batch: int = 64, qc: int = 7, nl: int = 3):
             assert stats["launch_ratio"] >= 2.0, stats
         per_bank_fill = batch / (-(-batch // K.LANES) * K.LANES)
         assert stats["lane_fill"] == round(per_bank_fill, 4), stats
-        out.append({
-            "qc": qc, "layers": nl, "batch": batch, "n_banks": k,
-            "fused_us_per_bank": round(t_fused / k * 1e6, 2),
-            "per_bank_us_per_bank": round(t_per / k * 1e6, 2),
-            "max_err": f"{err:.1e}",
-            "launches_fused": stats["launches_fused"],
-            "launches_per_bank_path": stats["launches_per_bank_path"],
-            "launch_ratio": stats["launch_ratio"],
-            "lane_fill": stats["lane_fill"],
-        })
+        out.append(
+            {
+                "qc": qc,
+                "layers": nl,
+                "batch": batch,
+                "n_banks": k,
+                "fused_us_per_bank": round(t_fused / k * 1e6, 2),
+                "per_bank_us_per_bank": round(t_per / k * 1e6, 2),
+                "max_err": f"{err:.1e}",
+                "launches_fused": stats["launches_fused"],
+                "launches_per_bank_path": stats["launches_per_bank_path"],
+                "launch_ratio": stats["launch_ratio"],
+                "lane_fill": stats["lane_fill"],
+            }
+        )
     return out
 
 
@@ -191,15 +228,19 @@ def spill_rows():
         spec = circuits.build_quclassi_circuit(qc, 3)
         info = K.shift_execution_info(spec, 512)
         plan = K.build_shift_plan(spec)
-        out.append({
-            "qc": qc, "m": plan.m, "n_params": spec.n_theta,
-            "mode": info["mode"],
-            "launches": info["launches"],
-            "spill_tiles": info["n_tiles"],
-            "vmem_bytes": info["vmem_bytes"],
-            "vmem_budget": info["vmem_budget"],
-            "spilled_bytes": info.get("spilled_bytes", 0),
-        })
+        out.append(
+            {
+                "qc": qc,
+                "m": plan.m,
+                "n_params": spec.n_theta,
+                "mode": info["mode"],
+                "launches": info["launches"],
+                "spill_tiles": info["n_tiles"],
+                "vmem_bytes": info["vmem_bytes"],
+                "vmem_budget": info["vmem_budget"],
+                "spilled_bytes": info.get("spilled_bytes", 0),
+            }
+        )
     assert out[0]["mode"] == "fused", out[0]       # narrow: single sweep
     assert out[-1]["mode"] == "spill", out[-1]     # m = 8: tiled fast path
     assert all(r["vmem_bytes"] <= r["vmem_budget"] for r in out), out
@@ -216,45 +257,62 @@ def _print_table(table):
 def main(quick: bool = False):
     fused_table = rows(batch=128 if quick else 512)
     _print_table(fused_table)
-    print("# traffic_ratio = analytic HBM round-trips saved by gate fusion "
-          "(the TPU-side win; CPU interpret-mode wall time is not indicative)")
+    print(
+        "# traffic_ratio = analytic HBM round-trips saved by gate fusion "
+        "(the TPU-side win; CPU interpret-mode wall time is not indicative)"
+    )
 
-    print("\n## shift-structured circuit bank: implicit + prefix-reuse vs "
-          "materialized")
+    print(
+        "\n## shift-structured circuit bank: implicit + prefix-reuse vs "
+        "materialized"
+    )
     shift_table = shift_rows(batch=16 if quick else 64)
     _print_table(shift_table)
-    print("# gate_apps_ratio / angle_bytes_ratio = analytic per-step savings "
-          "of the shift-structured executor (acceptance: >=5x / >=10x at "
-          "7q/3l)")
+    print(
+        "# gate_apps_ratio / angle_bytes_ratio = analytic per-step savings "
+        "of the shift-structured executor (acceptance: >=5x / >=10x at "
+        "7q/3l)"
+    )
     r7 = next(r for r in shift_table if r["qc"] == 7 and r["layers"] == 3)
     assert r7["gate_apps_ratio"] >= 5.0, r7
     assert r7["angle_bytes_ratio"] >= 10.0, r7
 
-    print("\n## multi-bank fused launches: K same-spec banks, one kernel "
-          "launch")
+    print("\n## multi-bank fused launches: K same-spec banks, one kernel " "launch")
     multibank_table = multibank_rows(batch=16 if quick else 64)
     _print_table(multibank_table)
-    print("# launch_ratio = K per-bank launches collapsed into one fused "
-          "launch (acceptance: >= 2x at K = 4); per-lane results are "
-          "bit-identical")
+    print(
+        "# launch_ratio = K per-bank launches collapsed into one fused "
+        "launch (acceptance: >= 2x at K = 4); per-lane results are "
+        "bit-identical"
+    )
 
-    print("\n## VMEM-aware checkpoint spilling: execution mode by register "
-          "width (TB = 512)")
+    print(
+        "\n## VMEM-aware checkpoint spilling: execution mode by register "
+        "width (TB = 512)"
+    )
     spill_table = spill_rows()
     _print_table(spill_table)
-    print("# m > 6 registers run the prefix-reuse fast path in "
-          "1 + spill_tiles launches instead of falling back to the "
-          "materialized bank")
-    return {"fused": fused_table, "shift_bank": shift_table,
-            "multibank": multibank_table, "spill": spill_table}
+    print(
+        "# m > 6 registers run the prefix-reuse fast path in "
+        "1 + spill_tiles launches instead of falling back to the "
+        "materialized bank"
+    )
+    return {
+        "fused": fused_table,
+        "shift_bank": shift_table,
+        "multibank": multibank_table,
+        "spill": spill_table,
+    }
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller batches (CI smoke run)")
-    ap.add_argument("--json", metavar="PATH",
-                    help="also write the result tables to PATH as JSON")
+    ap.add_argument(
+        "--quick", action="store_true", help="smaller batches (CI smoke run)"
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", help="also write the result tables to PATH as JSON"
+    )
     args = ap.parse_args()
     result = main(quick=args.quick)
     if args.json:

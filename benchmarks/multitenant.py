@@ -24,8 +24,11 @@ def make_jobs(scale: float = 1.0):
     jobs = []
     for cid, qc, nl in CLIENTS:
         n = max(8, int(PD.N_CIRCUITS[(qc, nl)] * scale))
-        jobs.append(tenancy.JobSpec(cid, qc, nl, n,
-                                    service_override=1.0 / PAPER_RATES_GCP[(qc, nl)]))
+        jobs.append(
+            tenancy.JobSpec(
+                cid, qc, nl, n, service_override=1.0 / PAPER_RATES_GCP[(qc, nl)]
+            )
+        )
     return jobs
 
 
@@ -37,18 +40,24 @@ CONTENTION = 0.5
 
 
 def workers():
-    return [WorkerConfig(f"w{i+1}", q, contention=CONTENTION)
-            for i, q in enumerate((5, 10, 15, 20))]
+    return [
+        WorkerConfig(f"w{i+1}", q, contention=CONTENTION)
+        for i, q in enumerate((5, 10, 15, 20))
+    ]
 
 
 def run(multi_tenant: bool, scale: float = 0.25):
     """Single-tenant baseline = "single_circuit": one circuit occupies the
     whole machine at a time ("one user occupies the entire machine while
     others wait in a queue") — multi-tenancy's win is co-residency."""
-    sim = SystemSimulation(workers(), make_jobs(scale),
-                           tenancy="multi" if multi_tenant else "single_circuit",
-                           classical_overhead=0.01, fair_queue=True,
-                           assign_latency=PD.ASSIGN_LATENCY)
+    sim = SystemSimulation(
+        workers(),
+        make_jobs(scale),
+        tenancy="multi" if multi_tenant else "single_circuit",
+        classical_overhead=0.01,
+        fair_queue=True,
+        assign_latency=PD.ASSIGN_LATENCY,
+    )
     return sim.run()
 
 
@@ -61,15 +70,17 @@ def rows(scale: float = 0.25):
         red = 1 - jm.makespan / js.makespan
         gain = jm.circuits_per_second / js.circuits_per_second
         row = {
-            "figure": "fig6", "client": cid,
+            "figure": "fig6",
+            "client": cid,
             "multi_runtime_s": round(jm.makespan, 1),
             "single_runtime_s": round(js.makespan, 1),
             "runtime_reduction": f"{red:.1%}",
             "cps_multi": round(jm.circuits_per_second, 2),
             "cps_single": round(js.circuits_per_second, 2),
             "cps_gain": f"{gain:.2f}x",
-            "paper_reduction": (f"{PD.FIG6_REDUCTION[cid]:.1%}"
-                                if cid in PD.FIG6_REDUCTION else ""),
+            "paper_reduction": (
+                f"{PD.FIG6_REDUCTION[cid]:.1%}" if cid in PD.FIG6_REDUCTION else ""
+            ),
         }
         out.append(row)
     return out
@@ -84,8 +95,10 @@ def main():
     # claim checks
     r51 = next(r for r in all_rows if r["client"] == "5q1l")
     r72 = next(r for r in all_rows if r["client"] == "7q2l")
-    print(f"# multi-tenancy helps 5q1l ({r51['runtime_reduction']}) far more "
-          f"than 7q2l ({r72['runtime_reduction']}) — paper: 68.7% vs 8.2%")
+    print(
+        f"# multi-tenancy helps 5q1l ({r51['runtime_reduction']}) far more "
+        f"than 7q2l ({r72['runtime_reduction']}) — paper: 68.7% vs 8.2%"
+    )
     return all_rows
 
 

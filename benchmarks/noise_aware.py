@@ -33,9 +33,14 @@ WORKERS = [
 
 def run(policy: str, n_circuits: int = 480, fidelity_floor: float = 0.0):
     jobs = [tenancy.JobSpec("client", 5, 2, n_circuits, service_override=0.33)]
-    sim = SystemSimulation(WORKERS, jobs, policy=policy, fair_queue=True,
-                           fidelity_floor=fidelity_floor,
-                           classical_overhead=0.01)
+    sim = SystemSimulation(
+        WORKERS,
+        jobs,
+        policy=policy,
+        fair_queue=True,
+        fidelity_floor=fidelity_floor,
+        classical_overhead=0.01,
+    )
     rep = sim.run()
     return sim, rep
 
@@ -57,7 +62,7 @@ def gradient_error(sim, rep):
     # per-bank-row retention from the schedule (cycled to bank length)
     reg = sim.manager.task_registry
     rets = []
-    for (_, tid, wid) in rep.assignments:
+    for _, tid, wid in rep.assignments:
         w = sim.workers[wid]
         rets.append((1.0 - w.cfg.error_rate) ** reg[tid].depth)
     rets = np.resize(np.array(rets), bank.n_circuits)
@@ -66,26 +71,34 @@ def gradient_error(sim, rep):
     # depolarizing channel on the ancilla readout: F = 2*P0-1 -> retention*F
     noisy = jnp.asarray(rets, jnp.float32) * ideal
     onehot = jax.nn.one_hot(yb, 2)[:, 0]
-    _, g_ideal, _ = shift_rule.assemble_gradient(cfg.spec, bank, ideal,
-                                                 jnp.repeat(onehot, cfg.n_patches))
-    _, g_noisy, _ = shift_rule.assemble_gradient(cfg.spec, bank, noisy,
-                                                 jnp.repeat(onehot, cfg.n_patches))
+    _, g_ideal, _ = shift_rule.assemble_gradient(
+        cfg.spec, bank, ideal, jnp.repeat(onehot, cfg.n_patches)
+    )
+    _, g_noisy, _ = shift_rule.assemble_gradient(
+        cfg.spec, bank, noisy, jnp.repeat(onehot, cfg.n_patches)
+    )
     denom = float(jnp.linalg.norm(g_ideal)) or 1.0
     return float(jnp.linalg.norm(g_noisy - g_ideal)) / denom
 
 
 def rows():
     out = []
-    for policy, floor in (("cru", 0.0), ("noise_aware", 0.85),
-                          ("noise_aware", 0.90), ("noise_aware", 0.97)):
+    for policy, floor in (
+        ("cru", 0.0),
+        ("noise_aware", 0.85),
+        ("noise_aware", 0.90),
+        ("noise_aware", 0.97),
+    ):
         sim, rep = run(policy, fidelity_floor=floor)
-        out.append({
-            "policy": f"{policy}" + (f"(floor={floor})" if floor else ""),
-            "makespan_s": round(rep.makespan, 1),
-            "cps": round(rep.circuits_per_second, 2),
-            "fidelity_retention": round(rep.fidelity_retention, 4),
-            "rel_gradient_error": round(gradient_error(sim, rep), 4),
-        })
+        out.append(
+            {
+                "policy": f"{policy}" + (f"(floor={floor})" if floor else ""),
+                "makespan_s": round(rep.makespan, 1),
+                "cps": round(rep.circuits_per_second, 2),
+                "fidelity_retention": round(rep.fidelity_retention, 4),
+                "rel_gradient_error": round(gradient_error(sim, rep), 4),
+            }
+        )
     return out
 
 
@@ -96,10 +109,13 @@ def main():
     for r in all_rows:
         print(",".join(str(r[k]) for k in keys))
     cru, na = all_rows[0], all_rows[-1]
-    print(f"# noise-aware scheduling (strictest floor): retention "
-          f"{cru['fidelity_retention']} -> {na['fidelity_retention']}, "
-          f"gradient error {cru['rel_gradient_error']} -> "
-          f"{na['rel_gradient_error']}, at {na['makespan_s']/cru['makespan_s']:.2f}x runtime")
+    print(
+        f"# noise-aware scheduling (strictest floor): retention "
+        f"{cru['fidelity_retention']} -> {na['fidelity_retention']}, "
+        f"gradient error {cru['rel_gradient_error']} -> "
+        f"{na['rel_gradient_error']}, at "
+        f"{na['makespan_s'] / cru['makespan_s']:.2f}x runtime"
+    )
     return all_rows
 
 

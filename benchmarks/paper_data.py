@@ -14,8 +14,14 @@ from __future__ import annotations
 import dataclasses
 
 #: circuits per epoch (§IV-C1)
-N_CIRCUITS = {(5, 1): 1440, (5, 2): 2880, (5, 3): 4320,
-              (7, 1): 2016, (7, 2): 4032, (7, 3): 6048}
+N_CIRCUITS = {
+    (5, 1): 1440,
+    (5, 2): 2880,
+    (5, 3): 4320,
+    (7, 1): 2016,
+    (7, 2): 4032,
+    (7, 3): 6048,
+}
 
 #: paper epoch runtimes, seconds: (qc, layers) -> {workers: seconds}
 #: 2-worker entries derived from circuits/sec where runtime text omits them.
@@ -46,8 +52,11 @@ FIG5_CPS_5Q_GCP = {
     (5, 3): {1: 2.4, 2: 3.1, 4: 4.4},
 }
 #: Fig 5a runtime reductions of the 4-worker system vs 1- and 2-worker
-FIG5_REDUCTION_4W = {(5, 1): (0.271, 0.189), (5, 2): (0.373, 0.315),
-                     (5, 3): (0.432, 0.300)}
+FIG5_REDUCTION_4W = {
+    (5, 1): (0.271, 0.189),
+    (5, 2): (0.373, 0.315),
+    (5, 3): (0.432, 0.300),
+}
 #: Fig 6 multi-tenant vs single-tenant runtime reduction
 FIG6_REDUCTION = {"5q1l": 0.687, "7q2l": 0.082}
 

@@ -28,6 +28,7 @@ def section(title):
 
 
 def _write_artifact(out_dir: str, name: str, payload) -> None:
+    os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, name)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=float)
@@ -36,13 +37,20 @@ def _write_artifact(out_dir: str, name: str, payload) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="include the slow accuracy training runs")
-    ap.add_argument("--quick", action="store_true",
-                    help="CI smoke mode: kernel + gateway sections only, "
-                         "small batches, still emits BENCH_*.json")
-    ap.add_argument("--out-dir", default=".",
-                    help="directory for BENCH_kernel.json / BENCH_gateway.json")
+    ap.add_argument(
+        "--full", action="store_true", help="include the slow accuracy training runs"
+    )
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="CI smoke mode: kernel + gateway sections only, "
+        "small batches, still emits BENCH_*.json",
+    )
+    ap.add_argument(
+        "--out-dir",
+        default=".",
+        help="directory for BENCH_kernel.json / BENCH_gateway.json",
+    )
     args = ap.parse_args()
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
@@ -51,8 +59,7 @@ def main() -> None:
     from benchmarks import gateway_throughput, kernel_bench
 
     if not args.quick:
-        from benchmarks import (multitenant, runtime_controlled,
-                                runtime_uncontrolled)
+        from benchmarks import multitenant, runtime_controlled, runtime_uncontrolled
 
         section("Fig 3 + Fig 4: IBM-Q backends (uncontrolled), runtime & c/s")
         runtime_uncontrolled.main()
@@ -63,36 +70,47 @@ def main() -> None:
         section("Fig 6: multi-tenant system, 4 concurrent clients")
         multitenant.main()
 
-    section("Kernel microbenchmark: fused Pallas VQC + shift-structured "
-            "banks (beyond paper)")
+    section(
+        "Kernel microbenchmark: fused Pallas VQC + shift-structured "
+        "banks (beyond paper)"
+    )
     kernel_result = kernel_bench.main(quick=args.quick)
-    _write_artifact(args.out_dir, "BENCH_kernel.json", {
-        "wall_time_note": "CPU interpret-mode wall time; analytic ratios are "
-                          "the TPU-side signal",
-        **kernel_result,
-    })
+    _write_artifact(
+        args.out_dir,
+        "BENCH_kernel.json",
+        {
+            "wall_time_note": "CPU interpret-mode wall time; analytic ratios are "
+            "the TPU-side signal",
+            **kernel_result,
+        },
+    )
 
     if not args.quick:
-        section("Noise-aware scheduling (beyond paper — the paper's §V "
-                "limitation)")
+        section("Noise-aware scheduling (beyond paper — the paper's §V limitation)")
         from benchmarks import noise_aware
+
         noise_aware.main()
 
-    section("Serving gateway: cross-tenant circuit-bank coalescing "
-            "(beyond paper)")
+    section("Serving gateway: cross-tenant circuit-bank coalescing (beyond paper)")
     gateway_result = gateway_throughput.main(
-        run_kernel=args.full, scale=0.05 if args.quick else 0.25,
-        trace_path=os.path.join(args.out_dir, "trace_gateway.json"))
+        run_kernel=args.full,
+        scale=0.05 if args.quick else 0.25,
+        trace_path=os.path.join(args.out_dir, "trace_gateway.json"),
+    )
     _write_artifact(args.out_dir, "BENCH_gateway.json", gateway_result)
 
     if args.full:
         from benchmarks import accuracy
+
         section("§IV-B accuracy: distributed vs non-distributed")
         accuracy.main()
     elif not args.quick:
-        section("§IV-B accuracy (skipped — pass --full; one-step gradient "
-                "equivalence check only)")
+        section(
+            "§IV-B accuracy (skipped — pass --full; one-step gradient "
+            "equivalence check only)"
+        )
         from benchmarks import accuracy
+
         gap = accuracy.gradient_equivalence(1, 5)
         print(f"task 1/5: max |distributed - local| theta-grad = {gap:.2e}")
 

@@ -12,12 +12,19 @@ from repro.comanager.simulation import SystemSimulation, homogeneous_workers
 
 
 def run_config(qc, layers, n_workers, cal):
-    jobs = [tenancy.JobSpec("client", qc, layers, cal.n_circuits,
-                            service_override=cal.t_quantum)]
+    jobs = [
+        tenancy.JobSpec(
+            "client", qc, layers, cal.n_circuits, service_override=cal.t_quantum
+        )
+    ]
     workers = homogeneous_workers(n_workers, max_qubits=qc, contention=0.0)
-    sim = SystemSimulation(workers, jobs, lockstep=True,
-                           classical_overhead=cal.t_classical,
-                           assign_latency=PD.ASSIGN_LATENCY)
+    sim = SystemSimulation(
+        workers,
+        jobs,
+        lockstep=True,
+        classical_overhead=cal.t_classical,
+        assign_latency=PD.ASSIGN_LATENCY,
+    )
     return sim.run()
 
 
@@ -29,22 +36,36 @@ def rows():
         for w in (1, 2, 4):
             rep = run_config(qc, layers, w, cal)
             results[w] = rep
-            out.append({
-                "figure": "fig5", "qc": qc, "layers": layers, "workers": w,
-                "sim_runtime_s": round(rep.makespan, 1),
-                "sim_cps": round(rep.circuits_per_second, 2),
-                "paper_cps": cps[w],
-                "cps_err": round(abs(rep.circuits_per_second - cps[w]) / cps[w], 3),
-            })
+            out.append(
+                {
+                    "figure": "fig5",
+                    "qc": qc,
+                    "layers": layers,
+                    "workers": w,
+                    "sim_runtime_s": round(rep.makespan, 1),
+                    "sim_cps": round(rep.circuits_per_second, 2),
+                    "paper_cps": cps[w],
+                    "cps_err": round(
+                        abs(rep.circuits_per_second - cps[w]) / cps[w], 3
+                    ),
+                }
+            )
         # 4-worker reduction vs 1- and 2-worker (Fig 5a's headline numbers)
         red1 = 1 - results[4].makespan / results[1].makespan
         red2 = 1 - results[4].makespan / results[2].makespan
         p1, p2 = PD.FIG5_REDUCTION_4W[(qc, layers)]
-        out.append({
-            "figure": "fig5", "qc": qc, "layers": layers, "workers": "4v1/4v2",
-            "sim_runtime_s": f"{red1:.1%}/{red2:.1%}",
-            "sim_cps": "", "paper_cps": f"{p1:.1%}/{p2:.1%}", "cps_err": "",
-        })
+        out.append(
+            {
+                "figure": "fig5",
+                "qc": qc,
+                "layers": layers,
+                "workers": "4v1/4v2",
+                "sim_runtime_s": f"{red1:.1%}/{red2:.1%}",
+                "sim_cps": "",
+                "paper_cps": f"{p1:.1%}/{p2:.1%}",
+                "cps_err": "",
+            }
+        )
     return out
 
 

@@ -13,20 +13,25 @@ from repro.comanager.simulation import SystemSimulation, homogeneous_workers
 
 
 def run_config(qc: int, layers: int, n_workers: int, cal: PD.Calibration):
-    jobs = [tenancy.JobSpec("client", qc, layers, cal.n_circuits,
-                            service_override=cal.t_quantum)]
+    jobs = [
+        tenancy.JobSpec(
+            "client", qc, layers, cal.n_circuits, service_override=cal.t_quantum
+        )
+    ]
     workers = homogeneous_workers(n_workers, max_qubits=64, contention=0.0)
-    sim = SystemSimulation(workers, jobs, lockstep=True,
-                           classical_overhead=cal.t_classical,
-                           assign_latency=PD.ASSIGN_LATENCY)
+    sim = SystemSimulation(
+        workers,
+        jobs,
+        lockstep=True,
+        classical_overhead=cal.t_classical,
+        assign_latency=PD.ASSIGN_LATENCY,
+    )
     return sim.run()
 
 
 def rows(figure: str = "fig3"):
-    table = (PD.FIG3_RUNTIME_5Q_IBMQ if figure == "fig3"
-             else PD.FIG4_RUNTIME_7Q_IBMQ)
-    cps_table = (PD.FIG3_CPS_5Q_IBMQ if figure == "fig3"
-                 else PD.FIG4_CPS_7Q_IBMQ)
+    table = PD.FIG3_RUNTIME_5Q_IBMQ if figure == "fig3" else PD.FIG4_RUNTIME_7Q_IBMQ
+    cps_table = PD.FIG3_CPS_5Q_IBMQ if figure == "fig3" else PD.FIG4_CPS_7Q_IBMQ
     out = []
     for (qc, layers), runtimes in sorted(table.items()):
         cal = PD.calibrate(qc, layers, runtimes)
@@ -34,16 +39,22 @@ def rows(figure: str = "fig3"):
             rep = run_config(qc, layers, w, cal)
             paper_t = runtimes[w]
             paper_cps = cps_table[(qc, layers)][w]
-            out.append({
-                "figure": figure, "qc": qc, "layers": layers, "workers": w,
-                "sim_runtime_s": round(rep.makespan, 1),
-                "paper_runtime_s": paper_t,
-                "runtime_err": round(abs(rep.makespan - paper_t) / paper_t, 3),
-                "sim_cps": round(rep.circuits_per_second, 2),
-                "paper_cps": paper_cps,
-                "cps_err": round(abs(rep.circuits_per_second - paper_cps)
-                                 / paper_cps, 3),
-            })
+            out.append(
+                {
+                    "figure": figure,
+                    "qc": qc,
+                    "layers": layers,
+                    "workers": w,
+                    "sim_runtime_s": round(rep.makespan, 1),
+                    "paper_runtime_s": paper_t,
+                    "runtime_err": round(abs(rep.makespan - paper_t) / paper_t, 3),
+                    "sim_cps": round(rep.circuits_per_second, 2),
+                    "paper_cps": paper_cps,
+                    "cps_err": round(
+                        abs(rep.circuits_per_second - paper_cps) / paper_cps, 3
+                    ),
+                }
+            )
     return out
 
 
@@ -54,8 +65,10 @@ def main():
     for r in all_rows:
         print(",".join(str(r[k]) for k in keys))
     # headline claims
-    for fig, tab in (("fig3", PD.FIG3_RUNTIME_5Q_IBMQ),
-                     ("fig4", PD.FIG4_RUNTIME_7Q_IBMQ)):
+    for fig, tab in (
+        ("fig3", PD.FIG3_RUNTIME_5Q_IBMQ),
+        ("fig4", PD.FIG4_RUNTIME_7Q_IBMQ),
+    ):
         worst = max(r["runtime_err"] for r in all_rows if r["figure"] == fig)
         print(f"# {fig}: worst relative runtime error vs paper = {worst:.1%}")
     return all_rows

@@ -1,0 +1,237 @@
+"""Scale harness: storm sweep -> knee -> calibrated admission -> artifact.
+
+Drives the ``repro.scale`` pipeline end to end and emits
+``BENCH_scale.json`` for the trend gate plus ``trace_scale_sweep.json``
+(the full knee-sweep curve) as a CI artifact:
+
+1. generate a seeded multi-population arrival storm (interactive / batch /
+   bursty tenants with priority tiers, SLO classes and fair-share weights);
+2. sweep offered load on the virtual clock, replaying the storm through
+   the serving gateway at each multiplier;
+3. locate the throughput knee and the attainment cliff past it;
+4. calibrate the gateway's weighted-fair global admission cap at the knee
+   (Little's law) and verify a past-knee storm actually sheds load with it;
+5. re-run the sweep at the same seed and require bit-identical results
+   (the determinism gate).
+
+Everything gated is virtual-clock deterministic; the harness's own wall
+time and timer breakdown ride along informationally only.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.scale_harness           # CI mode
+    PYTHONPATH=src python -m benchmarks.scale_harness --full    # 10k tenants
+    PYTHONPATH=src python -m benchmarks.scale_harness --real    # + kernels
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+#: CI recipe: ~1k tenants on the 4-worker quartet saturates inside a minute
+#: while still crossing the knee.  --full widens to 10k tenants on the
+#: 8-worker fleet (the tentpole-scale storm; minutes, not CI).
+CI_DEFAULTS = dict(
+    tenants=1000,
+    rate_per_tenant=0.4,
+    slo_scale=2.0,
+    duration_s=20.0,
+    seed=7,
+    n_replicas=1,
+    loads=(0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0),
+    efficiency_floor=0.80,
+    attainment_floor=0.99,
+    overload=1.6,
+    slack=0.5,
+)
+FULL_OVERRIDES = dict(
+    tenants=10_000,
+    n_replicas=2,
+    loads=(0.125, 0.25, 0.5, 0.75, 1.0, 1.25, 1.5),
+)
+
+
+def build_spec(cfg):
+    from repro.scale import WorkloadSpec, standard_populations
+
+    return WorkloadSpec(
+        populations=standard_populations(
+            cfg["tenants"],
+            rate_per_tenant=cfg["rate_per_tenant"],
+            slo_scale=cfg["slo_scale"],
+        ),
+        duration_s=cfg["duration_s"],
+        seed=cfg["seed"],
+    )
+
+
+def run_sweep(cfg, timer, progress=print):
+    from repro.scale import default_fleet, find_knee, sweep
+
+    spec = build_spec(cfg)
+    fleet = default_fleet(cfg["n_replicas"])
+    points = sweep(
+        spec,
+        cfg["loads"],
+        timer=timer,
+        progress=progress,
+        workers=fleet,
+    )
+    report = find_knee(
+        points,
+        efficiency_floor=cfg["efficiency_floor"],
+        attainment_floor=cfg["attainment_floor"],
+    )
+    return spec, fleet, report
+
+
+def run_real(cfg, timer):
+    """Small real-kernel mix (wall clock, machine-dependent: never gated)."""
+    from repro.scale import WorkloadSpec, replay_real, standard_populations
+
+    spec = WorkloadSpec(
+        populations=standard_populations(
+            24, rate_per_tenant=2.0, slo_scale=cfg["slo_scale"]
+        ),
+        duration_s=3.0,
+        seed=cfg["seed"],
+    )
+    with timer.time("real"):
+        res = replay_real(spec.generate())
+    return res.row()
+
+
+def main(argv=None) -> int:
+    from repro.scale import CumulativeTimer, config_diff, verify_admission
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="10k-tenant storm on the 8-worker fleet (minutes)",
+    )
+    ap.add_argument(
+        "--tenants", type=int, default=None, help="override the tenant population size"
+    )
+    ap.add_argument("--seed", type=int, default=None, help="override the storm seed")
+    ap.add_argument(
+        "--out-dir", default=".", help="directory for BENCH_scale.json + sweep trace"
+    )
+    ap.add_argument(
+        "--skip-determinism",
+        action="store_true",
+        help="skip the same-seed double run (halves wall time; "
+        "the determinism gate then reports 0)",
+    )
+    ap.add_argument(
+        "--real",
+        action="store_true",
+        help="also replay a small mix on real kernels "
+        "(wall clock, informational only)",
+    )
+    args = ap.parse_args(argv)
+
+    cfg = dict(CI_DEFAULTS)
+    if args.full:
+        cfg.update(FULL_OVERRIDES)
+    if args.tenants is not None:
+        cfg["tenants"] = args.tenants
+    if args.seed is not None:
+        cfg["seed"] = args.seed
+    diff = config_diff(CI_DEFAULTS, cfg)
+    if diff:
+        print("config deviates from CI defaults:")
+        for line in diff:
+            print(f"  {line}")
+
+    t0 = time.time()
+    timer = CumulativeTimer()
+    spec, fleet, report = run_sweep(cfg, timer)
+    knee, cliff = report.knee, report.cliff
+    print(
+        f"\nknee: load {knee.load:g} -> offered {knee.offered_cps:.0f} c/s, "
+        f"achieved {knee.achieved_cps:.0f} c/s, p99 {knee.p99_latency_s:.2f}s, "
+        f"attainment {knee.slo_attainment}"
+    )
+    if cliff is not None:
+        print(
+            f"cliff: load {cliff.load:g} -> efficiency {cliff.efficiency:.2f}, "
+            f"attainment {cliff.slo_attainment}"
+        )
+    if not report.saturated:
+        print(
+            "ERROR: sweep never saturated — no knee found; widen the load "
+            "range or shrink the fleet",
+            file=sys.stderr,
+        )
+        return 1
+
+    near80 = report.point_near_offered(0.8 * knee.offered_cps)
+
+    with timer.time("admission"):
+        admission = verify_admission(
+            spec,
+            report,
+            overload=cfg["overload"],
+            slack=cfg["slack"],
+            workers=fleet,
+        )
+    print(
+        f"admission: cap {admission['max_system_pending']} -> "
+        f"reject {admission['reject_fraction']:.1%} at "
+        f"{cfg['overload']:g}x knee, attainment "
+        f"{admission['attainment_uncapped']} -> "
+        f"{admission['attainment_admitted']} for admitted"
+    )
+
+    repeat_identical = 0
+    if not args.skip_determinism:
+        with timer.time("determinism"):
+            _, _, report2 = run_sweep(cfg, CumulativeTimer(), progress=None)
+        repeat_identical = int(report.to_dict() == report2.to_dict())
+        print(
+            f"determinism: same-seed double run "
+            f"{'identical' if repeat_identical else 'DIVERGED'}"
+        )
+        if not repeat_identical:
+            print("ERROR: same-seed sweep not reproducible", file=sys.stderr)
+
+    payload = {
+        "config": {k: list(v) if isinstance(v, tuple) else v for k, v in cfg.items()},
+        "config_diff_from_ci_defaults": diff,
+        "knee": knee.row(),
+        "cliff": cliff.row() if cliff is not None else None,
+        "p99_at_80pct_knee_s": round(near80.p99_latency_s, 4),
+        "attainment_at_knee": knee.slo_attainment,
+        "admission": admission,
+        "determinism": {"repeat_identical": repeat_identical},
+        "sweep": [p.row() for p in report.points],
+        "harness": {"wall_s": round(time.time() - t0, 1), "timers": timer.stats()},
+    }
+    if args.real:
+        payload["real_kernels"] = run_real(cfg, timer)
+        payload["harness"]["timers"] = timer.stats()
+        print(f"real kernels: {payload['real_kernels']}")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    bench_path = os.path.join(args.out_dir, "BENCH_scale.json")
+    with open(bench_path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"[artifact] wrote {bench_path}")
+    trace_path = os.path.join(args.out_dir, "trace_scale_sweep.json")
+    with open(trace_path, "w") as f:
+        json.dump(
+            {"config": payload["config"], "knee_report": report.to_dict()},
+            f,
+            indent=2,
+            default=float,
+        )
+    print(f"[artifact] wrote {trace_path}")
+    print(f"\nscale harness done in {time.time() - t0:.0f}s")
+    return 0 if repeat_identical or args.skip_determinism else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -90,6 +90,11 @@ class ServingConfig:
     mesh_spill: bool = True
     worker_vmem_bytes: Optional[int] = None
     evict_over_slo: bool = False
+    #: global weighted-fair admission cap: total outstanding circuits
+    #: (queued + in flight) across all tenants; above it, a tenant at or
+    #: over its weighted share gets ``Backpressure`` at submit.  Calibrate
+    #: at the throughput knee with ``repro.scale.knee`` (None = never shed).
+    max_system_pending: Optional[int] = None
     #: tracing + metrics knobs (None = trace everything at the defaults;
     #: ``ObservabilityConfig.disabled()`` turns the recorder off).
     observability: Optional[ObservabilityConfig] = None
@@ -111,6 +116,10 @@ class ServingConfig:
         if self.slots_per_worker < 1:
             raise ValueError(
                 f"slots_per_worker must be >= 1, got {self.slots_per_worker}"
+            )
+        if self.max_system_pending is not None and self.max_system_pending < 1:
+            raise ValueError(
+                f"max_system_pending must be >= 1, got {self.max_system_pending}"
             )
         if self.target is not None:
             # fail where the typo is written, not at first (lazy) runtime
@@ -137,6 +146,8 @@ class ServingConfig:
         )
         if self.worker_vmem_bytes is not None:
             kw["worker_vmem_bytes"] = self.worker_vmem_bytes
+        if self.max_system_pending is not None:
+            kw["max_system_pending"] = self.max_system_pending
         return kw
 
 
@@ -165,6 +176,11 @@ class SimulationConfig:
     gateway_target: Optional[int] = None
     gateway_deadline: float = 1.0
     gateway_async: bool = False
+    #: per-tenant admission queue bound (None = gateway default).
+    gateway_max_pending: Optional[int] = None
+    #: global weighted-fair outstanding cap — the knee-calibrated admission
+    #: control (``repro.scale.knee``); None = admit everything.
+    gateway_max_system_pending: Optional[int] = None
     #: gateway-mode tracing + metrics knobs (None = trace everything).
     observability: Optional[ObservabilityConfig] = None
 
@@ -185,6 +201,10 @@ class SimulationConfig:
                     f"gateway_target {self.gateway_target} must be a "
                     f"positive multiple of the kernel lane width {LANES}"
                 )
+        for name in ("gateway_max_pending", "gateway_max_system_pending"):
+            value = getattr(self, name)
+            if value is not None and value < 1:
+                raise ValueError(f"{name} must be >= 1, got {value}")
 
     def simulation_kwargs(self) -> dict:
         """The ``SystemSimulation`` keyword view of this config.

@@ -37,6 +37,10 @@ class SimulationReport:
     #: mean over executed circuits of (1 - error_rate_w)^depth — the
     #: fraction of SWAP-test signal surviving depolarization (1.0 = ideal).
     fidelity_retention: float = 1.0
+    #: circuits shed by gateway admission control (``Backpressure`` raised
+    #: at submit under ``gateway_max_pending``/``gateway_max_system_pending``);
+    #: they count as drained — never executed, never in ``jobs`` latencies.
+    rejected: int = 0
     #: serve-gateway telemetry (per-tenant latency, lane-fill) when the
     #: simulation ran with gateway=True; None otherwise.
     gateway_summary: dict | None = None
@@ -99,6 +103,8 @@ class SystemSimulation:
         gateway_target: int | None = None,
         gateway_deadline: float = 1.0,
         gateway_async: bool = False,
+        gateway_max_pending: int | None = None,
+        gateway_max_system_pending: int | None = None,
         tenant_weights: dict[str, float] | None = None,
         tenant_priorities: dict[str, int] | None = None,
         tenant_slos_ms: dict[str, float] | None = None,
@@ -166,6 +172,14 @@ class SystemSimulation:
         open-loop instead of arriving as one epoch-sized burst — the
         high-traffic serving stand-in used by benchmarks/gateway_throughput.
 
+        ``gateway_max_pending`` / ``gateway_max_system_pending`` (gateway
+        mode): per-tenant and global admission caps.  A submission the
+        gateway rejects (``Backpressure``) is counted in
+        ``SimulationReport.rejected`` and drained — shed load, not executed
+        work.  The global cap is the weighted-fair admission control the
+        scale harness calibrates at the throughput knee
+        (``repro.scale.knee``); both default to None (admit everything).
+
         Every per-tenant override map is validated against the submitted
         jobs' client ids (and ``worker_failures`` against the worker fleet):
         unknown keys raise ``ValueError`` instead of silently never applying.
@@ -210,17 +224,24 @@ class SystemSimulation:
         self.gateway = None
         self.gateway_async = gateway_async
         self.arrivals = arrivals or {}
+        self.rejected = 0
         if gateway:
             from repro.kernels.vqc_statevector import LANES
-            from repro.serve.gateway import Gateway
+            from repro.serve.gateway import Backpressure, Gateway
             from repro.serve.metrics import Telemetry
 
             self.gw_lanes = LANES
+            self._backpressure = Backpressure
+            gw_kwargs = {}
+            if gateway_max_pending is not None:
+                gw_kwargs["max_pending"] = gateway_max_pending
             self.gateway = Gateway(
                 target=gateway_target or LANES,
                 deadline=gateway_deadline,
                 lanes=LANES,
+                max_system_pending=gateway_max_system_pending,
                 telemetry=Telemetry(lanes=LANES, observability=observability),
+                **gw_kwargs,
             )
             for j in jobs:
                 self.gateway.register_client(
@@ -350,7 +371,13 @@ class SystemSimulation:
 
     def _gw_admit(self, t: float, task: CircuitTask) -> None:
         key = (task.demand, task.service_time, task.depth)  # structural key
-        self.gateway.submit(task.client_id, key, task, now=t)
+        try:
+            self.gateway.submit(task.client_id, key, task, now=t)
+        except self._backpressure:
+            # admission control shed the circuit: it still counts as drained
+            # (the job finishes with fewer executed circuits), never executed
+            self.rejected += 1
+            self._finish_one(task.client_id, t)
 
     def _gw_pump(self, t: float) -> None:
         """Coalesce admitted circuits; submit emitted batches to Algorithm 2
@@ -560,6 +587,7 @@ class SystemSimulation:
             evictions=list(self.manager.evictions),
             worker_busy_time={wid: w.busy_time for wid, w in self.workers.items()},
             fidelity_retention=(sum(rets) / len(rets)) if rets else 1.0,
+            rejected=self.rejected,
             gateway_summary=(
                 self.gateway.telemetry.summary() if self.gateway is not None else None
             ),

@@ -38,7 +38,9 @@ def layers_for_count(n_layers: int) -> tuple[str, ...]:
 def registers(qc: int) -> tuple[int, list[int], list[int]]:
     """-> (ancilla, data qubits, trainable qubits) for a qc-qubit circuit."""
     if qc % 2 == 0 or qc < 3:
-        raise ValueError(f"need odd qubit count >=3 (ancilla + 2 equal registers), got {qc}")
+        raise ValueError(
+            f"need odd qubit count >=3 (ancilla + 2 equal registers), got {qc}"
+        )
     m = (qc - 1) // 2
     anc = 0
     data_q = list(range(1, 1 + m))
@@ -59,7 +61,9 @@ def n_data_angles_for(qc: int) -> int:
     return 2 * m  # RX + RY per data qubit
 
 
-def variational_ops(train_q: list[int], layer_names: tuple[str, ...], theta_offset: int = 0):
+def variational_ops(
+    train_q: list[int], layer_names: tuple[str, ...], theta_offset: int = 0
+):
     """Ops for the trainable register; returns (ops, n_theta)."""
     ops: list[Op] = []
     j = theta_offset

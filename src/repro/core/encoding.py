@@ -44,8 +44,11 @@ def amplitude_encoding(values: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
         raise ValueError(f"amplitude encoding needs a power-of-two length, got {dim}")
     norm = jnp.linalg.norm(values, axis=-1, keepdims=True)
     # Guard the all-zero patch: fall back to |0...0>.
-    safe = jnp.where(norm > 1e-8, values / jnp.maximum(norm, 1e-8),
-                     jnp.zeros_like(values).at[..., 0].set(1.0))
+    safe = jnp.where(
+        norm > 1e-8,
+        values / jnp.maximum(norm, 1e-8),
+        jnp.zeros_like(values).at[..., 0].set(1.0),
+    )
     return safe.astype(jnp.float32), jnp.zeros_like(safe, dtype=jnp.float32)
 
 

@@ -37,7 +37,17 @@ def x() -> Mat:
 
 
 def swap() -> Mat:
-    m = jnp.zeros((4, 4), jnp.float32).at[0, 0].set(1).at[1, 2].set(1).at[2, 1].set(1).at[3, 3].set(1)
+    m = (
+        jnp.zeros((4, 4), jnp.float32)
+        .at[0, 0]
+        .set(1)
+        .at[1, 2]
+        .set(1)
+        .at[2, 1]
+        .set(1)
+        .at[3, 3]
+        .set(1)
+    )
     return m, jnp.zeros_like(m)
 
 
@@ -81,20 +91,24 @@ def ryy(theta) -> Mat:
     c = jnp.cos(theta / 2).astype(jnp.float32)
     s = jnp.sin(theta / 2).astype(jnp.float32)
     z = jnp.zeros_like(c)
-    re = jnp.stack([
-        jnp.stack([c, z, z, z]),
-        jnp.stack([z, c, z, z]),
-        jnp.stack([z, z, c, z]),
-        jnp.stack([z, z, z, c]),
-    ])
+    re = jnp.stack(
+        [
+            jnp.stack([c, z, z, z]),
+            jnp.stack([z, c, z, z]),
+            jnp.stack([z, z, c, z]),
+            jnp.stack([z, z, z, c]),
+        ]
+    )
     # Y⊗Y |00>=-|11>, |01>=|10> basis phases: exp(-i t/2 YY) has +i s on
     # (00,11),(11,00) and -i s on (01,10),(10,01).
-    im = jnp.stack([
-        jnp.stack([z, z, z, s]),
-        jnp.stack([z, z, -s, z]),
-        jnp.stack([z, -s, z, z]),
-        jnp.stack([s, z, z, z]),
-    ])
+    im = jnp.stack(
+        [
+            jnp.stack([z, z, z, s]),
+            jnp.stack([z, z, -s, z]),
+            jnp.stack([z, -s, z, z]),
+            jnp.stack([s, z, z, z]),
+        ]
+    )
     return re, im
 
 
@@ -103,18 +117,22 @@ def rzz(theta) -> Mat:
     c = jnp.cos(theta / 2).astype(jnp.float32)
     s = jnp.sin(theta / 2).astype(jnp.float32)
     z = jnp.zeros_like(c)
-    re = jnp.stack([
-        jnp.stack([c, z, z, z]),
-        jnp.stack([z, c, z, z]),
-        jnp.stack([z, z, c, z]),
-        jnp.stack([z, z, z, c]),
-    ])
-    im = jnp.stack([
-        jnp.stack([-s, z, z, z]),
-        jnp.stack([z, s, z, z]),
-        jnp.stack([z, z, s, z]),
-        jnp.stack([z, z, z, -s]),
-    ])
+    re = jnp.stack(
+        [
+            jnp.stack([c, z, z, z]),
+            jnp.stack([z, c, z, z]),
+            jnp.stack([z, z, c, z]),
+            jnp.stack([z, z, z, c]),
+        ]
+    )
+    im = jnp.stack(
+        [
+            jnp.stack([-s, z, z, z]),
+            jnp.stack([z, s, z, z]),
+            jnp.stack([z, z, s, z]),
+            jnp.stack([z, z, z, -s]),
+        ]
+    )
     return re, im
 
 

@@ -51,7 +51,7 @@ class QuClassiConfig:
 
     @property
     def patch_dim(self) -> int:
-        return self.seg.filter_width ** 2
+        return self.seg.filter_width**2
 
     @property
     def n_patches(self) -> int:
@@ -63,8 +63,9 @@ def init_params(cfg: QuClassiConfig, key: jax.Array) -> dict:
     """Network weights: theta ~ U[0, pi] per class (Algorithm 1 l.2)."""
     k1, k2 = jax.random.split(key)
     params = {
-        "theta": jax.random.uniform(k1, (cfg.n_classes, cfg.n_theta),
-                                    minval=0.0, maxval=jnp.pi),
+        "theta": jax.random.uniform(
+            k1, (cfg.n_classes, cfg.n_theta), minval=0.0, maxval=jnp.pi
+        ),
     }
     if cfg.use_dense:
         scale = 1.0 / jnp.sqrt(cfg.patch_dim)
@@ -73,7 +74,9 @@ def init_params(cfg: QuClassiConfig, key: jax.Array) -> dict:
     return params
 
 
-def encode_patches(cfg: QuClassiConfig, params: dict, patches: jnp.ndarray) -> jnp.ndarray:
+def encode_patches(
+    cfg: QuClassiConfig, params: dict, patches: jnp.ndarray
+) -> jnp.ndarray:
     """(B, Np, w*w) patches -> (B, Np, n_angles) rotation angles."""
     if cfg.use_dense:
         z = patches @ params["w"] + params["b"]            # dense layer (l.10-11)
@@ -82,7 +85,9 @@ def encode_patches(cfg: QuClassiConfig, params: dict, patches: jnp.ndarray) -> j
     return encoding.rotation_angles(patches, cfg.n_angles)
 
 
-def class_fidelities(cfg: QuClassiConfig, params: dict, images: jnp.ndarray) -> jnp.ndarray:
+def class_fidelities(
+    cfg: QuClassiConfig, params: dict, images: jnp.ndarray
+) -> jnp.ndarray:
     """(B, H, W) images -> (B, n_classes) mean patch fidelity per class."""
     spec = cfg.spec
     patches = segmentation.segment(images, cfg.seg)        # (B, Np, P)
@@ -121,8 +126,9 @@ def grad_autodiff(cfg: QuClassiConfig, params: dict, images, labels):
     return loss, g, f
 
 
-def build_class_banks(cfg: QuClassiConfig, params: dict, images: jnp.ndarray,
-                      implicit: bool = False):
+def build_class_banks(
+    cfg: QuClassiConfig, params: dict, images: jnp.ndarray, implicit: bool = False
+):
     """The distributable work unit: one circuit bank per class (Algorithm 1).
 
     Returns (banks, angles) where banks[c] covers every (patch, shifted-theta)
@@ -139,9 +145,14 @@ def build_class_banks(cfg: QuClassiConfig, params: dict, images: jnp.ndarray,
     return banks, angles
 
 
-def grad_shift(cfg: QuClassiConfig, params: dict, images, labels,
-               executor: shift_rule.Executor | None = None,
-               implicit: bool | None = None):
+def grad_shift(
+    cfg: QuClassiConfig,
+    params: dict,
+    images,
+    labels,
+    executor: shift_rule.Executor | None = None,
+    implicit: bool | None = None,
+):
     """Paper-faithful distributed gradient: execute per-class circuit banks
     (optionally through the co-Manager) and assemble theta gradients.
 

@@ -45,8 +45,9 @@ def segment(images: jnp.ndarray, cfg: SegmentationConfig) -> jnp.ndarray:
     for i in range(ph):
         for j in range(pw):
             r, c = i * cfg.stride, j * cfg.stride
-            rows.append(x[:, r:r + cfg.filter_width, c:c + cfg.filter_width]
-                        .reshape(b, -1))
+            rows.append(
+                x[:, r : r + cfg.filter_width, c : c + cfg.filter_width].reshape(b, -1)
+            )
     return jnp.stack(rows, axis=1)  # (B, ph*pw, w*w)
 
 

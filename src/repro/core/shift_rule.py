@@ -30,7 +30,7 @@ from repro.core import fidelity as fid
 from repro.core.sim import CircuitSpec
 
 SHIFT = jnp.pi / 2
-_SQ2 = 2.0 ** 0.5
+_SQ2 = 2.0**0.5
 C_PLUS = (_SQ2 + 1.0) / (4.0 * _SQ2)
 C_MINUS = (_SQ2 - 1.0) / (4.0 * _SQ2)
 
@@ -69,10 +69,10 @@ def group_descriptors(n_params: int, four_term: bool):
 def _split_results(f: jnp.ndarray, b: int, p: int, four_term: bool):
     """fidelities (C,) -> (f0 (B,), f_plus (P,B), f_minus (P,B)[, f3p, f3m])."""
     f0 = f[:b]
-    body = f[b:b + 2 * p * b].reshape(2, p, b)
+    body = f[b : b + 2 * p * b].reshape(2, p, b)
     out = [f0, body[0], body[1]]
     if four_term:
-        tail = f[b + 2 * p * b:].reshape(2, p, b)
+        tail = f[b + 2 * p * b :].reshape(2, p, b)
         out += [tail[0], tail[1]]
     return tuple(out)
 
@@ -152,13 +152,16 @@ class ShiftBank:
         blocks += [shifted(s) for s in shift_values(self.four_term)]
         theta_bank = jnp.concatenate(blocks, 0)
         data_bank = jnp.tile(self.data, (self.n_groups, 1))
-        return CircuitBank(theta_bank, data_bank, n_samples=b, n_params=p,
-                           four_term=self.four_term)
+        return CircuitBank(
+            theta_bank, data_bank, n_samples=b, n_params=p, four_term=self.four_term
+        )
 
 
-def build_bank(theta: jnp.ndarray, data: jnp.ndarray, four_term: bool = False) -> CircuitBank:
+def build_bank(
+    theta: jnp.ndarray, data: jnp.ndarray, four_term: bool = False
+) -> CircuitBank:
     """Build the circuit bank for a sample batch. theta: (P,), data: (B, D)."""
-    p, = theta.shape
+    (p,) = theta.shape
     b = data.shape[0]
     eye = jnp.eye(p, dtype=theta.dtype)
 
@@ -167,27 +170,35 @@ def build_bank(theta: jnp.ndarray, data: jnp.ndarray, four_term: bool = False) -
         t = theta[None, :] + s * eye
         return jnp.broadcast_to(t[:, None, :], (p, b, p))
 
-    blocks = [jnp.broadcast_to(theta[None, :], (b, p)),
-              shifted(SHIFT).reshape(p * b, p),
-              shifted(-SHIFT).reshape(p * b, p)]
+    blocks = [
+        jnp.broadcast_to(theta[None, :], (b, p)),
+        shifted(SHIFT).reshape(p * b, p),
+        shifted(-SHIFT).reshape(p * b, p),
+    ]
     if four_term:
-        blocks += [shifted(3 * SHIFT).reshape(p * b, p),
-                   shifted(-3 * SHIFT).reshape(p * b, p)]
+        blocks += [
+            shifted(3 * SHIFT).reshape(p * b, p),
+            shifted(-3 * SHIFT).reshape(p * b, p),
+        ]
     theta_bank = jnp.concatenate(blocks, 0)
 
     reps = theta_bank.shape[0] // b
     data_bank = jnp.tile(data, (reps, 1))
-    return CircuitBank(theta_bank, data_bank, n_samples=b, n_params=p, four_term=four_term)
+    return CircuitBank(
+        theta_bank, data_bank, n_samples=b, n_params=p, four_term=four_term
+    )
 
 
-def build_shift_bank(theta: jnp.ndarray, data: jnp.ndarray,
-                     four_term: bool = False) -> ShiftBank:
+def build_shift_bank(
+    theta: jnp.ndarray, data: jnp.ndarray, four_term: bool = False
+) -> ShiftBank:
     """Build the implicit bank. theta: (P,) or per-sample (B, P); data: (B, D)."""
     b = data.shape[0]
     if theta.ndim == 1:
         theta = jnp.broadcast_to(theta[None, :], (b, theta.shape[0]))
-    return ShiftBank(theta, data, n_samples=b, n_params=theta.shape[1],
-                     four_term=four_term)
+    return ShiftBank(
+        theta, data, n_samples=b, n_params=theta.shape[1], four_term=four_term
+    )
 
 
 def group_bank_sets(items):
@@ -242,8 +253,9 @@ def run_bank(executor: Executor, bank) -> jnp.ndarray:
     return executor(bank.theta, bank.data)
 
 
-def assemble_gradient(spec: CircuitSpec, bank: CircuitBank, fids: jnp.ndarray,
-                      labels: jnp.ndarray):
+def assemble_gradient(
+    spec: CircuitSpec, bank: CircuitBank, fids: jnp.ndarray, labels: jnp.ndarray
+):
     """-> (loss (scalar), grad_theta (P,), per-sample fidelities (B,)).
 
     The classical Quantum State Analyst step: chain dL/dF through the
@@ -265,10 +277,15 @@ def assemble_gradient(spec: CircuitSpec, bank: CircuitBank, fids: jnp.ndarray,
     return loss, grad, f0
 
 
-def parameter_shift_grad(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
-                         labels: jnp.ndarray, executor: Executor | None = None,
-                         exact_controlled: bool = False,
-                         implicit: bool | None = None):
+def parameter_shift_grad(
+    spec: CircuitSpec,
+    theta: jnp.ndarray,
+    data: jnp.ndarray,
+    labels: jnp.ndarray,
+    executor: Executor | None = None,
+    exact_controlled: bool = False,
+    implicit: bool | None = None,
+):
     """One full Algorithm-1 gradient step's worth of circuit-bank work.
 
     Builds the bank, executes it (by default locally; in the distributed
@@ -289,11 +306,16 @@ def parameter_shift_grad(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarra
     return assemble_gradient(spec, bank, fids, labels)
 
 
-def autodiff_grad(spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray,
-                  labels: jnp.ndarray):
+def autodiff_grad(
+    spec: CircuitSpec, theta: jnp.ndarray, data: jnp.ndarray, labels: jnp.ndarray
+):
     """Exact gradient through the simulator (validation oracle for the rule)."""
+
     def loss_fn(t):
-        f = fid.fidelity_batch(spec, jnp.broadcast_to(t, (data.shape[0],) + t.shape), data)
+        f = fid.fidelity_batch(
+            spec, jnp.broadcast_to(t, (data.shape[0],) + t.shape), data
+        )
         return fid.bce_loss(f, labels).mean(), f
+
     (loss, f), g = jax.value_and_grad(loss_fn, has_aux=True)(theta)
     return loss, g, f

@@ -25,7 +25,7 @@ State = tuple[jnp.ndarray, jnp.ndarray]
 
 
 def zero_state(n_qubits: int, batch: tuple[int, ...] = ()) -> State:
-    dim = 2 ** n_qubits
+    dim = 2**n_qubits
     re = jnp.zeros(batch + (dim,), jnp.float32).at[..., 0].set(1.0)
     im = jnp.zeros(batch + (dim,), jnp.float32)
     return re, im
@@ -47,21 +47,25 @@ def apply_gate(state: State, u: G.Mat, qubits: Sequence[int], n_qubits: int) -> 
     axes = [nb + q for q in qubits]
     rest = [nb + i for i in range(n_qubits) if i not in set(qubits)]
     perm = list(range(nb)) + axes + rest
-    t_re = jnp.transpose(t[0], perm).reshape(batch + (2 ** k, -1))
-    t_im = jnp.transpose(t[1], perm).reshape(batch + (2 ** k, -1))
+    t_re = jnp.transpose(t[0], perm).reshape(batch + (2**k, -1))
+    t_im = jnp.transpose(t[1], perm).reshape(batch + (2**k, -1))
 
     u_re, u_im = u
     # complex matmul: (U_re + i U_im) @ (t_re + i t_im)
-    o_re = jnp.einsum("ij,...jk->...ik", u_re, t_re) - jnp.einsum("ij,...jk->...ik", u_im, t_im)
-    o_im = jnp.einsum("ij,...jk->...ik", u_re, t_im) + jnp.einsum("ij,...jk->...ik", u_im, t_re)
+    o_re = jnp.einsum("ij,...jk->...ik", u_re, t_re) - jnp.einsum(
+        "ij,...jk->...ik", u_im, t_im
+    )
+    o_im = jnp.einsum("ij,...jk->...ik", u_re, t_im) + jnp.einsum(
+        "ij,...jk->...ik", u_im, t_re
+    )
 
     o_re = o_re.reshape(batch + (2,) * n_qubits)
     o_im = o_im.reshape(batch + (2,) * n_qubits)
     inv = [0] * (nb + n_qubits)
     for i, p in enumerate(perm):
         inv[p] = i
-    o_re = jnp.transpose(o_re, inv).reshape(batch + (2 ** n_qubits,))
-    o_im = jnp.transpose(o_im, inv).reshape(batch + (2 ** n_qubits,))
+    o_re = jnp.transpose(o_re, inv).reshape(batch + (2**n_qubits,))
+    o_im = jnp.transpose(o_im, inv).reshape(batch + (2**n_qubits,))
     return o_re, o_im
 
 

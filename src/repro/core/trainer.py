@@ -41,12 +41,26 @@ class TrainReport:
         return self.epochs[-1].test_accuracy if self.epochs else 0.0
 
 
-def train(cfg: QuClassiConfig, train_set, test_set, *,
-          epochs: int = 10, batch_size: int = 8, lr: float = 1e-3,
-          grad_mode: str = "shift", executor=None, optimizer: str = "sgd",
-          gateway=None, client_id: str = "trainer", bank_mode: str = "auto",
-          priority: int = 1, slo_ms: Optional[float] = None, policy=None,
-          seed: int = 0, log: Optional[Callable[[str], None]] = None) -> TrainReport:
+def train(
+    cfg: QuClassiConfig,
+    train_set,
+    test_set,
+    *,
+    epochs: int = 10,
+    batch_size: int = 8,
+    lr: float = 1e-3,
+    grad_mode: str = "shift",
+    executor=None,
+    optimizer: str = "sgd",
+    gateway=None,
+    client_id: str = "trainer",
+    bank_mode: str = "auto",
+    priority: int = 1,
+    slo_ms: Optional[float] = None,
+    policy=None,
+    seed: int = 0,
+    log: Optional[Callable[[str], None]] = None,
+) -> TrainReport:
     """Train QuClassi per Algorithm 1.
 
     ``grad_mode``: 'shift' (paper-faithful circuit-bank path, optionally
@@ -90,9 +104,11 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
         gw_opts = dict(priority=priority, slo_ms=slo_ms)
         if policy is not None:
             gw_opts["weight"] = policy.weight
-        executor = (gateway.shift_executor(cfg.spec, client_id, **gw_opts)
-                    if bank_mode == "implicit"
-                    else gateway.executor(cfg.spec, client_id, **gw_opts))
+        executor = (
+            gateway.shift_executor(cfg.spec, client_id, **gw_opts)
+            if bank_mode == "implicit"
+            else gateway.executor(cfg.spec, client_id, **gw_opts)
+        )
     (xtr, ytr), (xte, yte) = train_set, test_set
     xtr, xte = pipeline.clean(xtr), pipeline.clean(xte)
     params = quclassi.init_params(cfg, jax.random.PRNGKey(seed))
@@ -104,12 +120,13 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
         t0 = time.perf_counter()                      # line 5: epoch timer
         losses, n_circ = [], 0
         for bi, (xb, yb) in enumerate(
-                pipeline.batches(xtr, ytr, batch_size, seed=seed * 997 + epoch)):
+            pipeline.batches(xtr, ytr, batch_size, seed=seed * 997 + epoch)
+        ):
             xb, yb = jnp.asarray(xb), jnp.asarray(yb)
             if grad_mode == "shift":
-                loss, grads, _ = quclassi.grad_shift(cfg, params, xb, yb,
-                                                     executor=executor,
-                                                     implicit=implicit)
+                loss, grads, _ = quclassi.grad_shift(
+                    cfg, params, xb, yb, executor=executor, implicit=implicit
+                )
                 n_circ += quclassi.total_bank_circuits(cfg, xb.shape[0])
             else:
                 loss, grads, _ = quclassi.grad_autodiff(cfg, params, xb, yb)
@@ -117,11 +134,17 @@ def train(cfg: QuClassiConfig, train_set, test_set, *,
             params = optimizers.apply_updates(params, updates)
             losses.append(float(loss))
         wall = time.perf_counter() - t0               # lines 24-25
-        tr_acc = float(quclassi.accuracy(cfg, params, jnp.asarray(xtr), jnp.asarray(ytr)))
-        te_acc = float(quclassi.accuracy(cfg, params, jnp.asarray(xte), jnp.asarray(yte)))
+        tr_acc = float(
+            quclassi.accuracy(cfg, params, jnp.asarray(xtr), jnp.asarray(ytr))
+        )
+        te_acc = float(
+            quclassi.accuracy(cfg, params, jnp.asarray(xte), jnp.asarray(yte))
+        )
         rec = EpochRecord(epoch, float(np.mean(losses)), tr_acc, te_acc, wall, n_circ)
         records.append(rec)                           # line 26: accuracy/epoch
         if log:
-            log(f"epoch {epoch}: loss={rec.loss:.4f} train_acc={tr_acc:.3f} "
-                f"test_acc={te_acc:.3f} wall={wall:.2f}s circuits={n_circ}")
+            log(
+                f"epoch {epoch}: loss={rec.loss:.4f} train_acc={tr_acc:.3f} "
+                f"test_acc={te_acc:.3f} wall={wall:.2f}s circuits={n_circ}"
+            )
     return TrainReport(records, params)

@@ -25,6 +25,16 @@ Backpressure is two-level, both bounded per tenant:
     cap is skipped by the fair scheduler until results return, so one heavy
     tenant cannot monopolize the coalescer's buffers either.
 
+A third, GLOBAL bound arms calibrated admission control: with
+``max_system_pending`` set (see ``repro.scale.knee.calibrate_admission`` —
+knee throughput x knee p99 x slack, per Little's law), once the total
+OUTSTANDING count (queued + dequeued-but-not-completed, i.e. every admitted
+circuit still inside the system) reaches the cap, a submit is rejected when
+the tenant already holds its weighted share of the cap (floored at one
+circuit, so light interactive tenants retain liveness while the heavy
+hitters above their share shed).  Past the saturation knee this converts
+unbounded queueing — certain SLO misses — into prompt ``Backpressure``.
+
 The gateway is clock-agnostic: every entry point takes ``now`` (virtual
 seconds under the simulation's event loop, ``time.perf_counter()`` in the
 real data plane).
@@ -39,6 +49,7 @@ blocks on an event and is safe to call from any thread.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 from collections import deque
 from typing import Any, Hashable, Optional
@@ -130,6 +141,10 @@ class TenantState:
     queue: deque = dataclasses.field(default_factory=deque)
     in_flight: int = 0
     vpass: float = 0.0    # stride-scheduling virtual pass (within its tier)
+    #: the (priority, vpass, cid) entry currently live in the scheduler heap
+    #: for this tenant, or None; compared by IDENTITY so popped entries from
+    #: an earlier registration can never masquerade as current.
+    heap_key: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
 
 class Gateway:
@@ -142,6 +157,7 @@ class Gateway:
         target_lanes: int | None = None,
         max_pending: int = 100_000,
         max_in_flight: int = 100_000,
+        max_system_pending: int | None = None,
         telemetry: Telemetry | None = None,
     ):
         from repro.kernels.vqc_statevector import LANES
@@ -154,8 +170,23 @@ class Gateway:
         )
         self.telemetry = telemetry or Telemetry(lanes=lanes)
         self._defaults = dict(max_pending=max_pending, max_in_flight=max_in_flight)
+        self.max_system_pending = max_system_pending
         self.tenants: dict[str, TenantState] = {}
         self._seq = 0
+        # scheduler heap of (priority, vpass, cid): every ELIGIBLE tenant
+        # (non-empty queue, below its in-flight cap) has exactly one entry
+        # carrying its current pass; stale entries are invalidated lazily on
+        # pop via the tenant's ``heap_key`` identity marker.  Makes the fair
+        # dequeue O(log T) instead of an O(T) scan — the difference between
+        # minutes and hours on a 10k-tenant storm.
+        self._heap: list[tuple] = []
+        self._pending_total = 0     # sum of all tenant queue depths
+        self._inflight_total = 0    # sum of all tenant in-flight counts
+        self._weight_total = 0.0    # sum of registered tenant weights
+        # min vpass per priority tier, for O(1) late-joiner placement; an
+        # entry goes None (dirty -> recompute on next use) when the tenant
+        # that owned the minimum advances its pass.
+        self._tier_vmin: dict[int, float | None] = {}
         # serializes queue/coalescer/telemetry mutation against the async
         # dispatcher's pump + completion threads; re-entrant because flush()
         # pumps and submit() may auto-register under the same lock.
@@ -186,11 +217,24 @@ class Gateway:
             # a late joiner starts at the current minimum virtual pass OF ITS
             # TIER — not 0, which would hand it absolute priority within the
             # tier until it "caught up" with tenants served for a while.
-            st.vpass = min(
-                (t.vpass for t in self.tenants.values() if t.priority == priority),
-                default=0.0,
-            )
+            vmin = self._tier_vmin.get(priority)
+            if vmin is None:
+                vmin = min(
+                    (t.vpass for t in self.tenants.values() if t.priority == priority),
+                    default=0.0,
+                )
+            st.vpass = vmin
+            self._tier_vmin[priority] = vmin  # joiner AT the min keeps it exact
+            prev = self.tenants.get(client_id)
+            if prev is not None:  # re-registration replaces the old state
+                self._weight_total -= prev.weight
+                self._pending_total -= len(prev.queue)
+                self._inflight_total -= prev.in_flight
+                if prev.priority != priority:
+                    self._tier_vmin[prev.priority] = None
+            self._weight_total += weight
             self.tenants[client_id] = st
+            self._mark_ready(client_id, st)
             self.telemetry.set_slo(client_id, st.slo_s)
             return st
 
@@ -216,6 +260,26 @@ class Gateway:
                 raise Backpressure(
                     f"{client_id}: {len(st.queue)} pending >= {st.max_pending}"
                 )
+            cap = self.max_system_pending
+            outstanding = self._pending_total + self._inflight_total
+            if cap is not None and outstanding >= cap:
+                # system saturated (every admitted circuit still inside it
+                # counts — queued OR in flight): shed from tenants at/above
+                # their weighted share of the cap (floored at one circuit,
+                # so light tenants keep liveness while the hitters above
+                # share take the hit).
+                share = max(1.0, cap * st.weight / max(self._weight_total, 1e-9))
+                mine = len(st.queue) + st.in_flight
+                if mine + 1 > share:
+                    self.telemetry.on_reject(client_id)
+                    self.telemetry.trace.circuit_reject(
+                        self._seq, client_id, key, now
+                    )
+                    raise Backpressure(
+                        f"{client_id}: system at admission cap "
+                        f"({outstanding} >= {cap}) and tenant above its "
+                        f"weighted share ({mine} >= {share:.1f})"
+                    )
             fut = CircuitFuture(client_id, self._seq, now)
             flush_by = (
                 None
@@ -236,6 +300,8 @@ class Gateway:
                 )
             )
             self._seq += 1
+            self._pending_total += 1
+            self._mark_ready(client_id, st)
             self.telemetry.on_submit(client_id, now)
             self.telemetry.trace.circuit_submit(
                 fut.seq, client_id, key, now, queue_depth=len(st.queue)
@@ -243,17 +309,35 @@ class Gateway:
             return fut
 
     # ------------------------------------------------- fair dequeue + pump
+    def _mark_ready(self, cid: str, st: TenantState) -> None:
+        """Arm the tenant's scheduler-heap entry if it is eligible for
+        dequeue and has none live.  ``heap_key`` holds the live entry (by
+        identity); priority/vpass only change while no entry is live, so a
+        live entry always carries the tenant's current pass."""
+        if st.heap_key is None and st.queue and st.in_flight < st.max_in_flight:
+            entry = (st.priority, st.vpass, cid)
+            st.heap_key = entry
+            heapq.heappush(self._heap, entry)
+
     def _next_client(self) -> Optional[str]:
         """Two-level pick: strict priority tier first, then smallest virtual
         pass within the tier (weighted fair); ties break on client id for
-        determinism.  One O(T) pass — this runs once per dequeued circuit."""
-        best = None
-        for cid, st in self.tenants.items():
-            if not st.queue or st.in_flight >= st.max_in_flight:
-                continue
-            if best is None or (st.priority, st.vpass, cid) < best:
-                best = (st.priority, st.vpass, cid)
-        return best[2] if best else None
+        determinism.  O(log T) heap pop with lazy invalidation — entries
+        that no longer match their tenant's ``heap_key`` (superseded) or
+        whose tenant turned ineligible are discarded; every eligible tenant
+        has a current entry, so the first live hit IS the global minimum,
+        exactly what the old O(T) scan returned."""
+        while self._heap:
+            entry = heapq.heappop(self._heap)
+            st = self.tenants.get(entry[2])
+            if st is None or entry is not st.heap_key:
+                continue  # stale: superseded or from a dead registration
+            st.heap_key = None  # consumed; caller re-arms after the dequeue
+            if st.queue and st.in_flight < st.max_in_flight:
+                return entry[2]
+            # current but ineligible (drained / at in-flight cap): drop it;
+            # submit()/complete()/fail()/evict() re-arm on state change.
+        return None
 
     def pump(self, now: float) -> list[CoalescedBatch]:
         """Move admitted circuits into the coalescer in priority-then-fair
@@ -267,8 +351,15 @@ class Gateway:
                     break
                 st = self.tenants[cid]
                 item = st.queue.popleft()
+                self._pending_total -= 1
+                vmin = self._tier_vmin.get(st.priority)
+                if vmin is not None and st.vpass <= vmin:
+                    # the tier minimum may have advanced: recompute lazily
+                    self._tier_vmin[st.priority] = None
                 st.vpass += 1.0 / st.weight
                 st.in_flight += 1
+                self._inflight_total += 1
+                self._mark_ready(cid, st)
                 tr.circuit_stage(item.seq, "admit", now)
                 batches.extend(self.coalescer.add(item))
             batches.extend(self.coalescer.flush_due(now))
@@ -309,7 +400,10 @@ class Gateway:
         with self._lock:
             for i, m in enumerate(batch.members):
                 st = self.tenants[m.client_id]
-                st.in_flight = max(0, st.in_flight - 1)
+                if st.in_flight > 0:
+                    st.in_flight -= 1
+                    self._inflight_total -= 1
+                self._mark_ready(m.client_id, st)
                 if m.future is not None:
                     m.future.set(values[i] if values is not None else None)
                 self.telemetry.on_complete(m.client_id, m.arrival, now)
@@ -322,7 +416,10 @@ class Gateway:
         with self._lock:
             for m in batch.members:
                 st = self.tenants[m.client_id]
-                st.in_flight = max(0, st.in_flight - 1)
+                if st.in_flight > 0:
+                    st.in_flight -= 1
+                    self._inflight_total -= 1
+                self._mark_ready(m.client_id, st)
                 if m.future is not None:
                     m.future.set_error(exc)
                 self.telemetry.trace.circuit_end(m.seq, "fail", now)
@@ -336,7 +433,10 @@ class Gateway:
         with self._lock:
             for m in batch.members:
                 st = self.tenants[m.client_id]
-                st.in_flight = max(0, st.in_flight - 1)
+                if st.in_flight > 0:
+                    st.in_flight -= 1
+                    self._inflight_total -= 1
+                self._mark_ready(m.client_id, st)
                 if m.future is not None:
                     m.future.set_error(
                         DeadlineExceeded(
@@ -366,8 +466,8 @@ class Gateway:
 
     @property
     def idle(self) -> bool:
-        """True when nothing is queued or buffered (in-flight may remain)."""
+        """True when nothing is queued or buffered (in-flight may remain).
+        O(1) via the pending counter — this is polled once per completion,
+        so an O(T) tenant scan would dominate storm-scale simulations."""
         with self._lock:
-            return self.coalescer.buffered == 0 and all(
-                not st.queue for st in self.tenants.values()
-            )
+            return self.coalescer.buffered == 0 and self._pending_total == 0

@@ -22,5 +22,5 @@ def rng():
     return np.random.default_rng(0)
 
 
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration test")
+# the `slow` marker is registered in pyproject.toml ([tool.pytest.ini_options]),
+# which also excludes it from default runs via addopts = -m "not slow"

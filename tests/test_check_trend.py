@@ -1,0 +1,205 @@
+"""benchmarks/check_trend.py: the benchmark-regression gate itself."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import check_trend  # noqa: E402
+
+SCALE = "BENCH_scale.json"
+
+
+def scale_payload(**overrides):
+    """A minimal artifact covering every BENCH_scale.json gate."""
+    payload = {
+        "knee": {"offered_cps": 1000.0, "achieved_cps": 900.0, "p99_latency_s": 4.0},
+        "p99_at_80pct_knee_s": 3.0,
+        "attainment_at_knee": 0.999,
+        "admission": {"reject_fraction": 0.4, "attainment_admitted": 0.99},
+        "determinism": {"repeat_identical": 1},
+    }
+    for path, value in overrides.items():
+        node = payload
+        *parents, leaf = path.split(".")
+        for p in parents:
+            node = node[p]
+        if value is None:
+            del node[leaf]
+        else:
+            node[leaf] = value
+    return payload
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    emitted, baselines = tmp_path / "emitted", tmp_path / "baselines"
+    emitted.mkdir(), baselines.mkdir()
+    (baselines / SCALE).write_text(json.dumps(scale_payload()))
+    return emitted, baselines
+
+
+def run_check(emitted, baselines, **payload_overrides):
+    (emitted / SCALE).write_text(json.dumps(scale_payload(**payload_overrides)))
+    return check_trend.check(
+        str(emitted), str(baselines), verbose=False, artifacts=(SCALE,)
+    )
+
+
+def test_in_band_passes(dirs):
+    emitted, baselines = dirs
+    # small in-band drift in a tolerant direction: still green
+    assert run_check(emitted, baselines, **{"knee.offered_cps": 950.0}) == []
+
+
+def test_out_of_band_regression_fails(dirs):
+    emitted, baselines = dirs
+    failures = run_check(emitted, baselines, **{"knee.offered_cps": 500.0})
+    assert len(failures) == 1
+    assert "knee.offered_cps" in failures[0]
+    assert "want higher" in failures[0]
+
+
+def test_lower_direction_gate(dirs):
+    emitted, baselines = dirs
+    # p99 inflating past the band regresses a "lower" gate
+    failures = run_check(emitted, baselines, **{"knee.p99_latency_s": 6.0})
+    assert len(failures) == 1 and "p99_latency_s" in failures[0]
+    # p99 improving (dropping) never trips it
+    assert run_check(emitted, baselines, **{"knee.p99_latency_s": 1.0}) == []
+
+
+def test_all_regressions_reported_in_one_pass(dirs):
+    """Not fail-on-first: every out-of-band metric lands in one report."""
+    emitted, baselines = dirs
+    failures = run_check(
+        emitted,
+        baselines,
+        **{
+            "knee.offered_cps": 100.0,
+            "knee.p99_latency_s": 99.0,
+            "determinism.repeat_identical": 0,
+        },
+    )
+    text = "\n".join(failures)
+    assert len(failures) == 3
+    for metric in (
+        "knee.offered_cps", "knee.p99_latency_s", "determinism.repeat_identical"
+    ):
+        assert metric in text
+
+
+def test_missing_gated_metric_fails(dirs):
+    emitted, baselines = dirs
+    failures = run_check(emitted, baselines, **{"knee.achieved_cps": None})
+    assert len(failures) == 1
+    assert "missing from the emitted artifact" in failures[0]
+
+
+def test_missing_artifact_fails(dirs):
+    emitted, baselines = dirs
+    failures = check_trend.check(
+        str(emitted), str(baselines), verbose=False, artifacts=(SCALE,)
+    )
+    assert failures and "not emitted" in failures[0]
+
+
+def test_tolerance_scale_loosens_bands(dirs):
+    emitted, baselines = dirs
+    (emitted / SCALE).write_text(
+        json.dumps(scale_payload(**{"knee.offered_cps": 600.0}))
+    )
+    assert check_trend.check(
+        str(emitted), str(baselines), verbose=False, artifacts=(SCALE,)
+    )
+    loose = check_trend.check(
+        str(emitted),
+        str(baselines),
+        verbose=False,
+        artifacts=(SCALE,),
+        tolerance_scale=2.0,
+    )
+    assert loose == []
+
+
+def test_update_baselines_roundtrip(tmp_path):
+    emitted, baselines = tmp_path / "emitted", tmp_path / "baselines"
+    emitted.mkdir()
+    (emitted / SCALE).write_text(json.dumps(scale_payload()))
+    rc = check_trend.main(
+        [
+            "--emitted",
+            str(emitted),
+            "--baselines",
+            str(baselines),
+            "--artifacts",
+            SCALE,
+            "--update-baselines",
+        ]
+    )
+    assert rc == 0
+    assert json.loads((baselines / SCALE).read_text()) == scale_payload()
+    # and the freshly updated baseline gates green
+    rc = check_trend.main(
+        [
+            "--emitted",
+            str(emitted),
+            "--baselines",
+            str(baselines),
+            "--artifacts",
+            SCALE,
+        ]
+    )
+    assert rc == 0
+
+
+def test_main_exit_codes(dirs):
+    emitted, baselines = dirs
+    (emitted / SCALE).write_text(
+        json.dumps(scale_payload(**{"knee.offered_cps": 100.0}))
+    )
+    args = [
+        "--emitted", str(emitted), "--baselines", str(baselines), "--artifacts", SCALE
+    ]
+    assert check_trend.main(args) == 1
+    (emitted / SCALE).write_text(json.dumps(scale_payload()))
+    assert check_trend.main(args) == 0
+
+
+def test_unknown_artifact_rejected(dirs, capsys):
+    emitted, baselines = dirs
+    with pytest.raises(SystemExit):
+        check_trend.main(
+            [
+                "--emitted",
+                str(emitted),
+                "--baselines",
+                str(baselines),
+                "--artifacts",
+                "BENCH_bogus.json",
+            ]
+        )
+
+
+def test_github_step_summary_markdown(dirs, monkeypatch, tmp_path):
+    emitted, baselines = dirs
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    failures = run_check(emitted, baselines, **{"knee.offered_cps": 100.0})
+    assert failures
+    text = summary.read_text()
+    assert "## Benchmark trend gate" in text
+    assert "| artifact | metric | baseline | current | change | status |" in text
+    assert "**REGRESSED**" in text
+    assert "`knee.offered_cps`" in text
+    # every gated metric appears, not just the regressed one
+    assert "`determinism.repeat_identical`" in text
+
+
+def test_flatten():
+    flat = check_trend.flatten(
+        {"a": {"b": 1, "skip": True}, "xs": [2.5, {"c": 3}], "s": "str"}
+    )
+    assert flat == {"a.b": 1.0, "xs.0": 2.5, "xs.1.c": 3.0}

@@ -1,0 +1,330 @@
+"""repro.scale: storm generation, replay, knee finding, admission control."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.scale import (
+    ArrivalProcess,
+    CumulativeTimer,
+    IntervalTicker,
+    SweepPoint,
+    TenantPopulation,
+    WorkloadSpec,
+    calibrate_admission,
+    config_diff,
+    default_fleet,
+    find_knee,
+    replay_sim,
+    standard_populations,
+    sweep,
+)
+from repro.serve.gateway import Backpressure, Gateway
+
+
+def small_spec(n=60, rate=1.0, **kw):
+    return WorkloadSpec(
+        populations=standard_populations(n, rate_per_tenant=rate, slo_scale=2.0),
+        duration_s=8.0,
+        seed=11,
+        **kw,
+    )
+
+
+# ------------------------------------------------------ arrival processes
+@pytest.mark.parametrize("kind", ["poisson", "bursty", "heavy_tail", "diurnal"])
+def test_arrival_process_mean_rate(kind):
+    """Every process realizes its configured mean rate (long window)."""
+    proc = ArrivalProcess(kind=kind, rate=2.0)
+    rng = np.random.default_rng(3)
+    duration = 2000.0
+    n = sum(len(proc.sample(rng, duration)) for _ in range(3)) / 3
+    assert n == pytest.approx(2.0 * duration, rel=0.15)
+
+
+@pytest.mark.parametrize("kind", ["poisson", "bursty", "heavy_tail", "diurnal"])
+def test_arrival_offsets_in_window_and_sorted(kind):
+    proc = ArrivalProcess(kind=kind, rate=5.0)
+    offs = proc.sample(np.random.default_rng(0), 30.0)
+    assert offs == sorted(offs)
+    assert all(0.0 <= t < 30.0 for t in offs)
+
+
+def test_heavy_tail_is_burstier_than_poisson():
+    """Lomax inter-arrivals have a heavier gap tail than exponential."""
+    rng1, rng2 = np.random.default_rng(5), np.random.default_rng(5)
+    ht = ArrivalProcess(kind="heavy_tail", rate=1.0, alpha=1.3)
+    po = ArrivalProcess(kind="poisson", rate=1.0)
+    g_ht = np.diff(ht.sample(rng1, 5000.0))
+    g_po = np.diff(po.sample(rng2, 5000.0))
+    assert np.max(g_ht) > np.max(g_po) * 2
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        ArrivalProcess(kind="weibull")
+    with pytest.raises(ValueError, match="rate"):
+        ArrivalProcess(rate=0.0)
+    with pytest.raises(ValueError, match="alpha"):
+        ArrivalProcess(kind="heavy_tail", alpha=1.0)
+    with pytest.raises(ValueError, match="depth"):
+        ArrivalProcess(kind="diurnal", depth=1.0)
+
+
+# ------------------------------------------------------- trace generation
+def test_generate_is_deterministic():
+    t1, t2 = small_spec().generate(), small_spec().generate()
+    assert t1.tenants == t2.tenants
+    assert t1.arrivals == t2.arrivals
+    assert t1.n_circuits == t2.n_circuits
+
+
+def test_generate_different_seed_differs():
+    t1 = small_spec().generate()
+    t2 = dataclasses.replace(small_spec(), seed=12).generate()
+    assert t1.arrivals != t2.arrivals
+
+
+def test_load_scales_offered_rate():
+    spec = small_spec(n=200)
+    n1 = spec.at_load(1.0).generate().n_circuits
+    n3 = spec.at_load(3.0).generate().n_circuits
+    assert n3 == pytest.approx(3 * n1, rel=0.25)
+
+
+def test_population_policies_carried():
+    trace = small_spec(n=100).generate()
+    by_pop = {}
+    for t in trace.tenants:
+        by_pop.setdefault(t.population, t)
+        assert (t.qc, t.n_layers) in {(5, 1), (5, 2), (7, 1), (7, 2)}
+    assert by_pop["interactive"].priority == 0
+    assert by_pop["interactive"].weight == 4.0
+    assert by_pop["interactive"].slo_ms == 4000.0  # 2000 x slo_scale 2
+    assert by_pop["batch"].priority == 1
+    assert by_pop["bursty"].priority == 2
+    summary = trace.summary()
+    assert summary["n_tenants"] == trace.n_tenants
+    assert set(summary["tenants_by_population"]) == {
+        "interactive", "batch", "bursty",
+    }
+
+
+def test_spec_validation():
+    pops = standard_populations(30)
+    with pytest.raises(ValueError, match="duplicate"):
+        WorkloadSpec(populations=(pops[0], pops[0]))
+    with pytest.raises(ValueError, match="load"):
+        WorkloadSpec(populations=pops, load=0.0)
+    with pytest.raises(ValueError, match="unknown circuit spec"):
+        TenantPopulation(
+            name="x", n_tenants=1, arrival=ArrivalProcess(),
+            circuit_mix=((9, 9, 1.0),),
+        )
+
+
+# --------------------------------------------------------------- replay
+def test_replay_sim_completes_everything():
+    res = replay_sim(small_spec().generate(), workers=default_fleet(1))
+    assert res.completed == res.submitted
+    assert res.rejected == 0
+    assert res.slo_attainment is not None
+    assert res.p99_latency_s > 0
+    assert res.achieved_cps > 0
+
+
+def test_replay_sim_deterministic():
+    spec = small_spec()
+    r1 = replay_sim(spec.generate(), workers=default_fleet(1))
+    r2 = replay_sim(spec.generate(), workers=default_fleet(1))
+    assert r1.row() == r2.row()
+
+
+def test_replay_admission_cap_sheds_load():
+    """A tight global cap on an overloaded storm rejects without losing
+    accounting: completed + rejected == submitted, and the simulation's
+    reject counter agrees with the replay aggregate."""
+    trace = small_spec(n=120, rate=4.0).generate()
+    res = replay_sim(
+        trace, workers=default_fleet(1), max_system_pending=64,
+        keep_report=True,
+    )
+    assert res.rejected > 0
+    assert res.completed + res.rejected == res.submitted
+    assert res.report.rejected == res.rejected
+    assert 0 < res.reject_fraction < 1
+
+
+# ------------------------------------------------- gateway admission unit
+def test_gateway_global_cap_weighted_share():
+    gw = Gateway(target=8, deadline=10.0, lanes=8, max_system_pending=4)
+    gw.register_client("heavy", weight=1.0)
+    gw.register_client("light", weight=1.0)
+    for i in range(4):
+        gw.submit("heavy", "k", None, now=0.0)
+    # system at cap and heavy above its share (2 = 4 * 1/2): shed
+    with pytest.raises(Backpressure, match="admission cap"):
+        gw.submit("heavy", "k", None, now=0.0)
+    # the light tenant holds none of the cap: share floor keeps it live
+    gw.submit("light", "k", None, now=0.0)
+    assert gw.telemetry.tenants["heavy"].rejected == 1
+    assert gw.telemetry.tenants["light"].rejected == 0
+
+
+def test_gateway_cap_counts_in_flight():
+    """Outstanding = queued + in flight: dequeuing into the coalescer must
+    not free admission headroom."""
+    gw = Gateway(target=100, deadline=10.0, lanes=100, max_system_pending=3)
+    gw.register_client("a", weight=1.0)
+    for _ in range(3):
+        gw.submit("a", "k", None, now=0.0)
+    gw.pump(0.0)  # queue drains into the coalescer -> in flight
+    with pytest.raises(Backpressure, match="admission cap"):
+        gw.submit("a", "k", None, now=0.0)
+
+
+def test_heap_scheduler_matches_reference_scan():
+    """The O(log T) heap dequeue must reproduce the reference O(T) scan's
+    order exactly — priority tier, then vpass, then client id."""
+    def reference_order(tenants_spec, submits):
+        state = {
+            cid: dict(vpass=0.0, queue=0, prio=p, weight=w)
+            for cid, (p, w) in tenants_spec.items()
+        }
+        for cid in submits:
+            state[cid]["queue"] += 1
+        order = []
+        while True:
+            avail = [
+                (s["prio"], s["vpass"], cid)
+                for cid, s in state.items() if s["queue"]
+            ]
+            if not avail:
+                return order
+            _, _, cid = min(avail)
+            s = state[cid]
+            s["queue"] -= 1
+            s["vpass"] += 1.0 / s["weight"]
+            order.append(cid)
+
+    tenants_spec = {
+        "a": (0, 4.0), "b": (1, 1.0), "c": (1, 2.0),
+        "d": (1, 1.0), "e": (2, 0.5),
+    }
+    rng = np.random.default_rng(2)
+    submits = [
+        list(tenants_spec)[i]
+        for i in rng.integers(0, len(tenants_spec), 60)
+    ]
+    gw = Gateway(target=1, deadline=10.0, lanes=1)
+    for cid, (prio, w) in tenants_spec.items():
+        gw.register_client(cid, priority=prio, weight=w)
+    for cid in submits:
+        gw.submit(cid, "k", None, now=0.0)
+    batches = gw.pump(0.0)  # target=1 lane -> one batch per dequeue, in order
+    got = [b.members[0].client_id for b in batches]
+    assert got == reference_order(tenants_spec, submits)
+
+
+# ----------------------------------------------------------- knee finding
+def point(load, offered, achieved, att, p99=1.0):
+    return SweepPoint(
+        load=load, n_tenants=10, offered_cps=offered, achieved_cps=achieved,
+        p99_latency_s=p99, slo_attainment=att, reject_fraction=0.0,
+        queue_depth_p99=None, coalesce_wait_share=None, makespan_s=10.0,
+    )
+
+
+def test_find_knee_locates_last_healthy_point():
+    pts = [
+        point(1, 100, 98, 1.0),
+        point(2, 200, 190, 1.0),
+        point(3, 300, 270, 0.995),
+        point(4, 400, 290, 0.90),
+    ]
+    rep = find_knee(pts, efficiency_floor=0.85, attainment_floor=0.99)
+    assert rep.knee.load == 3
+    assert rep.cliff.load == 4
+    assert rep.saturated
+    assert rep.point_near_offered(0.8 * 300).load == 2
+
+
+def test_find_knee_unsaturated_sweep():
+    pts = [point(1, 100, 99, 1.0), point(2, 200, 197, 1.0)]
+    rep = find_knee(pts)
+    assert not rep.saturated
+    assert rep.cliff is None
+    assert rep.knee.load == 2  # best point seen: a lower bound only
+
+
+def test_find_knee_degenerate_and_empty():
+    rep = find_knee([point(1, 100, 10, 0.5)])
+    assert rep.saturated and rep.knee.load == 1 and rep.cliff.load == 1
+    with pytest.raises(ValueError, match="empty sweep"):
+        find_knee([])
+
+
+def test_calibrate_admission():
+    p = point(3, 300, 280, 1.0, p99=2.0)
+    assert calibrate_admission(p, slack=0.5) == 280  # ceil(280*2*0.5)
+    assert calibrate_admission(p, slack=0.5, floor=1000) == 1000
+    with pytest.raises(ValueError, match="slack"):
+        calibrate_admission(p, slack=0.0)
+
+
+# ------------------------------------------------------------ ergonomics
+def test_cumulative_timer():
+    t = iter([0.0, 1.0, 5.0, 7.5])
+    timer = CumulativeTimer(clock=lambda: next(t))
+    with timer.time("step"):
+        pass
+    with timer.time("step"):
+        pass
+    assert timer.total("step") == pytest.approx(3.5)
+    assert timer.stats()["step"] == {
+        "count": 2, "total_s": 3.5, "mean_s": 1.75,
+    }
+
+
+def test_interval_ticker():
+    ticker = IntervalTicker(10.0, clock=lambda: 0.0)
+    assert ticker.tick(now=0.0)       # first always fires
+    assert not ticker.tick(now=5.0)
+    assert ticker.tick(now=10.0)
+    assert ticker.ticks == 2
+    with pytest.raises(ValueError):
+        IntervalTicker(0.0)
+
+
+def test_config_diff():
+    base = {"a": 1, "b": {"c": 2, "d": 3}, "gone": 9}
+    cur = {"a": 1, "b": {"c": 5, "d": 3}, "new": 7}
+    assert config_diff(base, cur) == [
+        "b.c: 2 -> 5",
+        "gone: 9 -> removed",
+        "new: added -> 7",
+    ]
+
+
+# ------------------------------------------------------- slow: full sweep
+@pytest.mark.slow
+def test_storm_sweep_finds_knee_deterministically():
+    """1k-tenant storm: the sweep crosses the knee (attainment degrades
+    past it) and the same seed reproduces the identical curve."""
+    spec = WorkloadSpec(
+        populations=standard_populations(
+            1000, rate_per_tenant=0.4, slo_scale=2.0
+        ),
+        duration_s=20.0,
+        seed=7,
+    )
+    fleet = default_fleet(1)
+    loads = (1.0, 3.0, 4.0)
+    pts = sweep(spec, loads, workers=fleet)
+    rep = find_knee(pts, efficiency_floor=0.80, attainment_floor=0.99)
+    assert rep.saturated
+    assert rep.cliff is not None
+    assert rep.cliff.slo_attainment < 1.0  # attainment < 100% past the knee
+    assert rep.knee.offered_cps >= 1000.0  # 1k tenants saturate past 1k c/s
+    pts2 = sweep(spec, loads, workers=fleet)
+    assert [p.row() for p in pts] == [p.row() for p in pts2]
