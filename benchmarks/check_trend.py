@@ -55,9 +55,17 @@ GATES = [
     # different values), and gating it would trap a baseline refresh from a
     # full run; kernel_bench asserts lane-fill parity analytically instead.
     ("BENCH_kernel.json", r"multibank\.\d+\.launch_ratio$", "higher", 0.01),
+    # multi-use suffix replay: per-variant span replay on parameter-tied
+    # circuits; the ratio dropping means variants started re-simulating
+    # more than their dependent span
+    ("BENCH_kernel.json", r"multiuse\.\d+\.gate_apps_ratio$", "higher", 0.01),
     # VMEM-aware checkpoint spilling: launch counts are analytic; more
     # launches for a given register width = a perf regression
     ("BENCH_kernel.json", r"spill\.\d+\.launches$", "lower", 0.01),
+    # double-buffered spill DMAs: the backward launch must keep overlapping
+    # boundary fetches with compute, without growing the launch count
+    ("BENCH_kernel.json", r"spill_overlap\.\d+\.overlap_ratio$", "higher", 0.01),
+    ("BENCH_kernel.json", r"spill_overlap\.\d+\.launches$", "lower", 0.01),
     ("BENCH_gateway.json", r"^system_cps_gateway$", "higher", 0.25),
     ("BENCH_gateway.json", r"^system_gain$", "higher", 0.25),
     ("BENCH_gateway.json", r"fig6\.\d+\.cps_gateway$", "higher", 0.25),

@@ -217,6 +217,113 @@ def multibank_rows(batch: int = 64, qc: int = 7, nl: int = 3):
     return out
 
 
+def multiuse_rows(batch: int = 64):
+    """Multi-use suffix replay: parameter-tied ansatz (every variational
+    op mirrored across the register, twins SHARING the parameter — 2x the
+    variational depth at the same parameter count) through the suffix-replay
+    planner vs the same bank materialized.  Each variant replays only its
+    parameter's dependent span [first use .. last use] from a checkpoint at
+    the first use; the materialized bank re-simulates the whole circuit per
+    group.  Ratios are analytic and trend-gated; wall time is interpret-mode
+    color only."""
+    out = []
+    for qc, nl in ((5, 1), (7, 3)):
+        spec = circuits.build_tied_quclassi_circuit(qc, nl)
+        key = jax.random.PRNGKey(2)
+        theta = jax.random.uniform(
+            key, (spec.n_theta,), jnp.float32, minval=0.0, maxval=np.pi
+        )
+        data = jax.random.uniform(
+            jax.random.fold_in(key, 1),
+            (batch, spec.n_data),
+            jnp.float32,
+            minval=0.0,
+            maxval=np.pi,
+        )
+        bank = shift_rule.build_shift_bank(theta, data)
+        mat = bank.materialize()
+
+        implicit = jax.jit(lambda t, d: ops.vqc_fidelity_shiftbank(spec, t, d, False))
+        materialized = jax.jit(lambda t, d: ops.vqc_fidelity(spec, t, d))
+        t_impl = time_fn(implicit, bank.theta, bank.data)
+        t_mat = time_fn(materialized, mat.theta, mat.data)
+        err = float(
+            jnp.abs(
+                implicit(bank.theta, bank.data) - materialized(mat.theta, mat.data)
+            ).max()
+        )
+        assert err < 1e-5, (qc, nl, err)
+
+        plan = K.build_shift_plan(spec)
+        cost = K.shift_cost_info(spec)
+        assert cost["use_implicit"], (qc, nl, cost)
+        out.append(
+            {
+                "qc": qc,
+                "layers": nl,
+                "batch": batch,
+                "n_params": spec.n_theta,
+                "n_train_ops": len(plan.train_ops),
+                "replay_depth_max": cost["replay_depth_max"],
+                "implicit_us_per_circuit": round(t_impl / bank.n_circuits * 1e6, 2),
+                "materialized_us_per_circuit": round(t_mat / bank.n_circuits * 1e6, 2),
+                "max_err": f"{err:.1e}",
+                "gate_apps_implicit": cost["gate_apps_implicit"],
+                "gate_apps_materialized": cost["gate_apps_materialized"],
+                "gate_apps_ratio": round(
+                    cost["gate_apps_materialized"] / cost["gate_apps_implicit"], 2
+                ),
+            }
+        )
+    # acceptance: >= 3x analytic gate-application reduction on the 2-reuse
+    # 7q/3l tied ansatz (each variant replays a 2-op span, not the stack)
+    r7 = next(r for r in out if r["qc"] == 7 and r["layers"] == 3)
+    assert r7["gate_apps_ratio"] >= 3.0, r7
+    return out
+
+
+def spill_overlap_rows():
+    """Double-buffered spill DMAs: boundary-fetch overlap of the depth-tiled
+    backward launch at the production tile (TB = 512).  overlap_ratio =
+    fraction of boundary fetches issued while the previous tile computes
+    ((n_tiles - 1) / n_tiles — the warm-up fetch cannot overlap);
+    spill_buffer_bytes = the second ping-pong VMEM buffer the footprint now
+    reports.  The live half drives the launch observer and checks the
+    emitted tile events ping-pong the two buffers."""
+    out = []
+    for qc in (13, 17):  # m = 6 (fused), m = 8 (spilled)
+        spec = circuits.build_quclassi_circuit(qc, 3)
+        info = K.shift_execution_info(spec, 512)
+        events = []
+        prev = ops.set_launch_observer(events.append)
+        try:
+            ops._notify_launch(spec, 512, False, None)
+        finally:
+            ops.set_launch_observer(prev)
+        tiles = [e for e in events if e.get("mode") == "spill_tile"]
+        assert len(events) == info["launches"], (qc, events)
+        assert all(
+            e["buffer"] == i % 2 and e["overlapped"] == (i > 0)
+            for i, e in enumerate(tiles)
+        ), tiles
+        out.append(
+            {
+                "qc": qc,
+                "m": K.build_shift_plan(spec).m,
+                "mode": info["mode"],
+                "launches": info["launches"],
+                "spill_tiles": info["n_tiles"],
+                "overlap_ratio": info.get("overlap_ratio", 0.0),
+                "spill_buffer_bytes": info.get("spill_buffer_bytes", 0),
+                "observer_tile_events": len(tiles),
+            }
+        )
+    wide = out[-1]
+    assert wide["mode"] == "spill" and wide["observer_tile_events"] > 1, wide
+    assert wide["overlap_ratio"] > 0.5, wide
+    return out
+
+
 def spill_rows():
     """VMEM-aware checkpoint spilling: execution-mode + launch-count report
     for widening registers at the production tile (TB = 512).  Wide
@@ -239,11 +346,17 @@ def spill_rows():
                 "vmem_bytes": info["vmem_bytes"],
                 "vmem_budget": info["vmem_budget"],
                 "spilled_bytes": info.get("spilled_bytes", 0),
+                "spill_buffer_bytes": info.get("spill_buffer_bytes", 0),
             }
         )
     assert out[0]["mode"] == "fused", out[0]       # narrow: single sweep
     assert out[-1]["mode"] == "spill", out[-1]     # m = 8: tiled fast path
-    assert all(r["vmem_bytes"] <= r["vmem_budget"] for r in out), out
+    # tiling budgets the checkpoint set; the reported footprint additionally
+    # carries the second ping-pong boundary buffer (headroom below physical
+    # VMEM covers it)
+    assert all(
+        r["vmem_bytes"] - r["spill_buffer_bytes"] <= r["vmem_budget"] for r in out
+    ), out
     return out
 
 
@@ -287,6 +400,18 @@ def main(quick: bool = False):
     )
 
     print(
+        "\n## multi-use suffix replay: parameter-tied ansatz, per-variant "
+        "span replay vs materialized"
+    )
+    multiuse_table = multiuse_rows(batch=16 if quick else 64)
+    _print_table(multiuse_table)
+    print(
+        "# gate_apps_ratio = analytic gate-application reduction of "
+        "suffix replay on parameter-reusing circuits (acceptance: >= 3x "
+        "at tied 7q/3l)"
+    )
+
+    print(
         "\n## VMEM-aware checkpoint spilling: execution mode by register "
         "width (TB = 512)"
     )
@@ -297,11 +422,25 @@ def main(quick: bool = False):
         "1 + spill_tiles launches instead of falling back to the "
         "materialized bank"
     )
+
+    print(
+        "\n## double-buffered spill DMAs: boundary-fetch overlap of the "
+        "depth-tiled backward launch"
+    )
+    overlap_table = spill_overlap_rows()
+    _print_table(overlap_table)
+    print(
+        "# overlap_ratio = boundary fetches issued during the previous "
+        "tile's compute; observer_tile_events = live per-tile launch "
+        "events ping-ponging the two VMEM buffers"
+    )
     return {
         "fused": fused_table,
         "shift_bank": shift_table,
         "multibank": multibank_table,
+        "multiuse": multiuse_table,
         "spill": spill_table,
+        "spill_overlap": overlap_table,
     }
 
 

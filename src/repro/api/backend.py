@@ -29,7 +29,7 @@ from repro.core import shift_rule
 from repro.core.sim import CircuitSpec
 from repro.kernels.vqc_statevector import (
     LANES,
-    build_shift_plan,
+    shift_cost_info,
     shift_execution_info,
 )
 
@@ -57,9 +57,12 @@ class CostModel:
     ``bank_cost_units``: gate applications x padded kernel lanes — the same
     unit ``serve.dispatcher.batch_cost_units`` charges to worker CRU, so a
     backend's estimate slots straight into the serving EWMA.  Shift-capable
-    backends pay the prefix-reuse cost (data pass + forward pass + deepest
-    suffix + one gate per variant); everything else pays the full gate
-    sequence per materialized row.
+    backends pay the analytic prefix-reuse cost from
+    ``kernels.shift_cost_info`` (data pass + forward pass + deepest suffix
+    + each variant's replay span — one gate for single-use parameters, the
+    [first, last] dependent span for multi-use ones); everything else pays
+    the full gate sequence per materialized row.  Multi-use-param banks are
+    therefore no longer mis-charged the full materialized cost.
 
     ``bank_vmem_bytes``: modeled per-device VMEM working set (post
     depth-tile spilling for shift banks), divided over ``n_shards`` for
@@ -81,14 +84,10 @@ class CostModel:
         if not isinstance(bank, shift_rule.ShiftBank) or not self.shiftbank:
             n = bank.n_circuits
             return self._materialized_units(spec, n) / self.n_shards
-        plan = build_shift_plan(spec)
-        if plan is None:  # no product structure: the bank materializes
+        cost = shift_cost_info(spec, bank.four_term)
+        if not cost["use_implicit"]:  # no structure / replay dearer: materialize
             return self._materialized_units(spec, bank.n_circuits) / self.n_shards
-        n_train = len(plan.train_ops)
-        positions = [p for p in plan.theta_pos if p >= 0]
-        n_variants = bank.n_shifts * len(positions)
-        max_suffix = max((n_train - p for p in positions), default=0)
-        gate_apps = len(plan.data_ops) + n_train + max_suffix + n_variants
+        gate_apps = cost["gate_apps_implicit"]
         return float(gate_apps * self._lanes(bank.n_samples)) / self.n_shards
 
     def bank_vmem_bytes(self, spec: CircuitSpec, bank) -> int:

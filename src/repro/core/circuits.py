@@ -116,6 +116,38 @@ def build_quclassi_circuit(qc: int, n_layers: int) -> CircuitSpec:
     return CircuitSpec(n_qubits=qc, ops=ops, n_theta=n_theta, n_data=n_data)
 
 
+def _mirror_twin(op: Op, train_q: list[int]) -> Op:
+    """The register-mirrored twin of a variational op: each qubit at local
+    index i maps to local index m-1-i.  Two-qubit pairs stay ascending
+    (pair (i, i+1) mirrors to (m-2-i, m-1-i)), so cry/crz twins keep the
+    (control, target) order the kernel requires."""
+    m = len(train_q)
+    base = train_q[0]
+    mirrored = tuple(sorted(train_q[m - 1 - (q - base)] for q in op.qubits))
+    return Op(op.gate, mirrored, op.param)
+
+
+def build_tied_quclassi_circuit(qc: int, n_layers: int) -> CircuitSpec:
+    """A weight-tied (2-reuse) hardware-efficient variant of the QuClassi
+    circuit: every variational parameter drives TWO gates — the original
+    gate and its register-mirrored twin at the same angle (the parameter
+    sharing common in the hardware-efficient architectures surveyed in
+    Sünkel et al.).  Same parameter count as ``build_quclassi_circuit``,
+    twice the variational depth.  Exercises the multi-use suffix-replay
+    shift plans: the twin sits adjacent to its original, so each variant
+    replays a two-gate span from one checkpoint instead of falling back to
+    the (1+2P)x materialized bank."""
+    anc, data_q, train_q = registers(qc)
+    enc_ops, n_data = encoding_ops(data_q)
+    var_ops, n_theta = variational_ops(train_q, layers_for_count(n_layers))
+    tied: list[Op] = []
+    for op in var_ops:
+        tied.append(op)
+        tied.append(_mirror_twin(op, train_q))
+    ops = tuple(enc_ops + tied + swap_test_ops(anc, data_q, train_q))
+    return CircuitSpec(n_qubits=qc, ops=ops, n_theta=n_theta, n_data=n_data)
+
+
 def circuit_depth(spec: CircuitSpec) -> int:
     return len(spec.ops)
 

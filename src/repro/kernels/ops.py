@@ -74,6 +74,27 @@ def _notify_launch(spec, n_lanes, four_term, groups, banks=1):
     info["lanes"] = n_lanes
     info["banks"] = banks
     obs(info)
+    if info["mode"] != "spill":
+        return
+    # spill path: one event per depth-tile launch segment (the summary event
+    # above covers the forward launch), so traces show the double-buffered
+    # backward sweep — tile order, which ping-pong boundary buffer each tile
+    # fetches into, and whether that fetch overlapped the previous tile's
+    # compute.  Total events = info["launches"].
+    n_tiles = info["n_tiles"]
+    for order in range(n_tiles):
+        obs(
+            {
+                "mode": "spill_tile",
+                "tile": n_tiles - 1 - order,  # tiles run deepest-first
+                "tile_order": order,
+                "buffer": order % 2,
+                "boundary_bytes": info["spill_buffer_bytes"],
+                "overlapped": order > 0,
+                "lanes": n_lanes,
+                "banks": banks,
+            }
+        )
 
 
 # ------------------------------------------------- shift-structured banks
@@ -87,7 +108,7 @@ def _shiftgroups_jit(
 ) -> jnp.ndarray:
     from repro.core import shift_rule
 
-    if K.build_shift_plan(spec) is not None:
+    if K.use_shift_plan(spec, four_term, groups):
         return jnp.clip(
             K.vqc_shift_fidelity(spec, theta, data, four_term=four_term, groups=groups),
             0.0,
@@ -117,10 +138,13 @@ def vqc_fidelity_shiftgroups(
 
     ``theta (B, P)`` / ``data (B, D)`` are the IMPLICIT bank — base angles
     only.  Uses the prefix-reuse kernel when the circuit matches the
-    SWAP-test product structure (spilling prefix checkpoints to HBM in
-    depth tiles when the register is too wide for VMEM); otherwise
-    materializes just the requested groups and runs the standard fused
-    kernel (same results, more work).
+    SWAP-test product structure AND the analytic suffix-replay cost beats
+    materializing the requested groups (``K.shift_cost_info`` — multi-use
+    parameters replay their dependent span per variant, so deep reuse with
+    a small group request can flip the decision); spills prefix checkpoints
+    to HBM in depth tiles when the register is too wide for VMEM.
+    Otherwise materializes just the requested groups and runs the standard
+    fused kernel (same results, more work).
     """
     _notify_launch(spec, theta.shape[0], four_term, groups)
     return _shiftgroups_jit(spec, theta, data, four_term, groups)
@@ -162,7 +186,7 @@ def _shiftgroups_multibank_jit(
     spec: CircuitSpec, thetas, datas, four_term: bool, group_sets: tuple
 ) -> tuple:
     union = tuple(sorted({g for gs in group_sets for g in gs}))
-    if K.build_shift_plan(spec) is None:
+    if not K.use_shift_plan(spec, four_term, union):
         return tuple(
             _shiftgroups_jit(spec, t, d, four_term, gs)
             for t, d, gs in zip(thetas, datas, group_sets)
@@ -198,8 +222,9 @@ def vqc_fidelity_shiftgroups_multibank(
     group set in ONE launch.  Returns a tuple of (len(group_sets[k]), B_k)
     fidelity blocks, each bit-identical per lane to the per-bank path.
 
-    Circuits without the verified product structure fall back to per-bank
-    materialized execution (correct, not fused).
+    Circuits without the verified product structure — or whose suffix-replay
+    cost for the union group set exceeds materializing it — fall back to
+    per-bank materialized execution (correct, not fused).
     """
     if _launch_observer is not None:
         union = tuple(sorted({g for gs in group_sets for g in gs}))

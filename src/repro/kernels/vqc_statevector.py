@@ -32,6 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sim import CircuitSpec
 
@@ -335,25 +336,33 @@ def vqc_state(
 #
 #   1. data register: ONE pass (theta-independent, shared by every variant);
 #   2. trainable register FORWARD pass with base angles, checkpointing the
-#      prefix state psi_j just before each parameter's (single) dependent
-#      gate in VMEM — 2*4*2**m*TB bytes per checkpointed prefix;
+#      prefix state psi_k just before each parameter's FIRST dependent gate
+#      in VMEM — 2*4*2**m*TB bytes per checkpointed prefix;
 #   3. trainable register BACKWARD pass holding the reversed-suffix state
-#      chi_j = (U_suffix_j)^dagger psi_d; a rotation gate's shifted variant
-#      G_j(theta_j + s) then satisfies
+#      chi_k = (U_suffix_k)^dagger psi_d.  A single-use rotation gate's
+#      shifted variant G_j(theta_j + s) then satisfies
 #         F(j, s) = |<psi_d| U_suf G_j(theta_j+s) |psi_j>|^2
 #                 = |<chi_j| G_j(theta_j+s) |psi_j>|^2,
-#      i.e. each of the 2P (or 4P) variants costs ONE gate application plus
-#      one 2**m-dim inner product instead of a full-circuit simulation.
+#      i.e. ONE gate application plus one 2**m-dim inner product instead of
+#      a full-circuit simulation.  A MULTI-USE parameter (positions
+#      k_1 < ... < k_r) anchors at its LAST dependent gate: chi at k_r + 1
+#      covers the unshifted remainder, and the variant REPLAYS only ops
+#      k_1..k_r from the k_1 checkpoint with the shift added to each of its
+#      own gates — replay depth k_r - k_1 + 1 gates per variant, still far
+#      from the full-circuit resimulation the materialized bank pays.
 #
 # Per sample-tile the kernel reads (P + D) * TB angle floats (vs
-# (P+D) * (1+2P) * TB materialized) and applies D_g + 2*T_g + n_variants
+# (P+D) * (1+2P) * TB materialized) and applies D_g + 2*T_g + sum(replay_j)
 # register-local gates (vs (1+2P) * G full-state gates) — the ratios
 # ``shift_bank_stats`` reports and benchmarks/kernel_bench.py tracks.
 #
 # Circuits that don't match the verified structure (interleaved registers,
-# multi-use parameters, theta on the data register, non-SWAP-test tail)
-# return ``None`` from ``build_shift_plan`` and fall back to the
-# materialized-bank path in ``kernels.ops``.
+# theta on the data register, non-rotation theta gates, non-SWAP-test tail)
+# return ``None`` from ``build_shift_plan``.  Circuits WITH a plan whose
+# suffix-replay cost exceeds the materialized bank's (a parameter reused
+# across most of the circuit) are routed to the materialized path by the
+# analytic ``shift_cost_info`` comparison in ``kernels.ops`` — the binary
+# plan-exists decision became a cost crossover.
 
 ROT_GATES = ("rx", "ry", "rz", "ryy", "rzz", "cry", "crz")
 
@@ -363,15 +372,29 @@ class ShiftPlan:
     """Static execution plan for the prefix-reuse shift kernel.
 
     ``data_ops`` / ``train_ops`` are the body ops remapped to register-local
-    qubit indices (register width ``m``); ``theta_pos[j]`` is the index into
-    ``train_ops`` of parameter j's unique dependent gate, or -1 when the
-    parameter drives no gate (its shifted fidelity is the base fidelity).
+    qubit indices (register width ``m``); ``theta_positions[j]`` is the
+    ascending tuple of indices into ``train_ops`` of parameter j's dependent
+    gates — empty when the parameter drives no gate (its shifted fidelity is
+    the base fidelity), length > 1 for multi-use parameters (executed by
+    suffix replay over the [first, last] span).
     """
 
     m: int
     data_ops: tuple
     train_ops: tuple
-    theta_pos: tuple[int, ...]
+    theta_positions: tuple[tuple[int, ...], ...]
+
+    @property
+    def theta_pos(self) -> tuple[int, ...]:
+        """Legacy single-position view: parameter j's FIRST dependent gate
+        (its checkpoint position), or -1 when it drives no gate."""
+        return tuple(ps[0] if ps else -1 for ps in self.theta_positions)
+
+    def replay_depth(self, j: int) -> int:
+        """Gates a shift variant of parameter j replays from its checkpoint
+        (1 for single-use parameters, 0 for unused ones)."""
+        ps = self.theta_positions[j]
+        return (ps[-1] - ps[0] + 1) if ps else 0
 
 
 def _remap_op(op, mapping):
@@ -408,7 +431,7 @@ def build_shift_plan(spec: CircuitSpec) -> ShiftPlan | None:
 
     # --- body: every op entirely inside one register; theta only on train
     data_ops, train_ops = [], []
-    theta_pos: dict[int, int] = {}
+    theta_pos: dict[int, list[int]] = {}
     for op in ops[:k]:
         qs = set(op.qubits)
         is_theta = op.param is not None and op.param[0] == "theta"
@@ -421,9 +444,11 @@ def build_shift_plan(spec: CircuitSpec) -> ShiftPlan | None:
                 return None
             if is_theta:
                 j = op.param[1]
-                if j in theta_pos or op.gate not in ROT_GATES:
-                    return None  # multi-use params need full suffix replay
-                theta_pos[j] = len(train_ops)
+                if op.gate not in ROT_GATES:
+                    return None  # no shift rule for non-rotation theta gates
+                # multi-use params accumulate their positions; the kernel
+                # replays the [first, last] span per shift variant.
+                theta_pos.setdefault(j, []).append(len(train_ops))
             train_ops.append(_remap_op(op, train_map))
         else:
             return None  # op straddles registers / touches ancilla
@@ -431,9 +456,12 @@ def build_shift_plan(spec: CircuitSpec) -> ShiftPlan | None:
     for op in data_ops + train_ops:
         if op.gate in ("cry", "crz") and op.qubits[0] > op.qubits[1]:
             return None
-    pos = tuple(theta_pos.get(j, -1) for j in range(spec.n_theta))
+    pos = tuple(tuple(theta_pos.get(j, ())) for j in range(spec.n_theta))
     return ShiftPlan(
-        m=m, data_ops=tuple(data_ops), train_ops=tuple(train_ops), theta_pos=pos
+        m=m,
+        data_ops=tuple(data_ops),
+        train_ops=tuple(train_ops),
+        theta_positions=pos,
     )
 
 
@@ -454,10 +482,15 @@ def _inner_fidelity(chi, phi):
 
 
 def _collect_variants(plan: ShiftPlan, shifts, groups, n_params: int):
-    """Static (trace-time) map: train-op position -> [(group, param, shift)].
+    """Static (trace-time) map: ANCHOR train-op position -> [(group, param,
+    shift)].
 
-    Position -1 collects groups whose parameter drives no gate (their
-    shifted fidelity is the base fidelity)."""
+    A variant anchors at its parameter's LAST dependent gate — the backward
+    pass's chi there covers the unshifted circuit remainder, and the shifted
+    part replays forward from the checkpoint at the parameter's FIRST
+    dependent gate (one gate for single-use parameters).  Position -1
+    collects groups whose parameter drives no gate (their shifted fidelity
+    is the base fidelity)."""
     wanted = set(groups)
     variants = {}
     for s_idx, s in enumerate(shifts):
@@ -465,11 +498,23 @@ def _collect_variants(plan: ShiftPlan, shifts, groups, n_params: int):
             g = 1 + s_idx * n_params + j
             if g not in wanted:
                 continue
-            if plan.theta_pos[j] < 0:
-                variants.setdefault(-1, []).append((g, j, s))  # unused param
-            else:
-                variants.setdefault(plan.theta_pos[j], []).append((g, j, s))
+            ps = plan.theta_positions[j]
+            variants.setdefault(ps[-1] if ps else -1, []).append((g, j, s))
     return variants
+
+
+def _replay_variant(plan: ShiftPlan, j: int, s: float, state, theta_blk, data_blk):
+    """Suffix replay for one shift variant: apply parameter j's dependent
+    span of train ops to its checkpoint ``state``, the shift ``s`` added to
+    every gate the parameter drives.  Single-use parameters degenerate to
+    the one shifted gate application of the original kernel."""
+    first, last = plan.theta_positions[j][0], plan.theta_positions[j][-1]
+    re, im = state
+    for k in range(first, last + 1):
+        op = plan.train_ops[k]
+        delta = s if op.param == ("theta", j) else 0.0
+        re, im = _apply_one(op, re, im, plan.m, theta_blk, data_blk, delta=delta)
+    return re, im
 
 
 def _shiftbank_kernel(
@@ -492,12 +537,17 @@ def _shiftbank_kernel(
 
     wanted = set(groups)
     variants = _collect_variants(plan, shifts, groups, n_params)
+    anchors = sorted(k for k in variants if k >= 0)
+    firsts = {
+        plan.theta_positions[j][0] for a in anchors for (_, j, _) in variants[a]
+    }
 
-    # 2. forward pass with base angles, checkpointing each needed prefix.
+    # 2. forward pass with base angles, checkpointing the prefix before each
+    #    anchored parameter's FIRST dependent gate.
     checkpoints = {}
     t_re, t_im = _zero_tile(dim, tb)
     for k, op in enumerate(plan.train_ops):
-        if k in variants:
+        if k in firsts:
             checkpoints[k] = (t_re, t_im)
         t_re, t_im = _apply_one(op, t_re, t_im, plan.m, theta_blk, data_blk)
 
@@ -508,18 +558,20 @@ def _shiftbank_kernel(
     for g, _, _ in variants.get(-1, ()):  # shifting an unused param is a no-op
         rows[g] = f0
 
-    # 3. backward pass: chi = (suffix)^dagger psi_d; one gate + one inner
-    #    product per variant.
+    # 3. backward pass: chi = (suffix)^dagger psi_d; one suffix replay + one
+    #    inner product per variant (a single gate for single-use params).
+    #    chi below the shallowest anchor is never consumed — stop there.
+    lowest = anchors[0] if anchors else len(plan.train_ops)
     c_re, c_im = d_re, d_im
-    for k in range(len(plan.train_ops) - 1, -1, -1):
+    for k in range(len(plan.train_ops) - 1, lowest - 1, -1):
         op = plan.train_ops[k]
         for g, j, s in variants.get(k, ()):
-            p_re, p_im = checkpoints[k]
-            v_re, v_im = _apply_one(
-                op, p_re, p_im, plan.m, theta_blk, data_blk, delta=s
+            first = plan.theta_positions[j][0]
+            v_re, v_im = _replay_variant(
+                plan, j, s, checkpoints[first], theta_blk, data_blk
             )
             rows[g] = _inner_fidelity((c_re, c_im), (v_re, v_im))
-        if k > 0:  # nothing consumes chi before op 0
+        if k > lowest:
             c_re, c_im = _apply_one(
                 op, c_re, c_im, plan.m, theta_blk, data_blk, invert=True
             )
@@ -535,11 +587,16 @@ def _shiftbank_kernel(
 # alone exceeds a TPU core's ~16 MB VMEM and the launch cannot lower.
 # Rather than ejecting those circuits to the (1+2P)x-slower materialized
 # path, the shift executor SPILLS: the train-op sequence is cut into depth
-# tiles of at most ``cap`` checkpointed positions, the forward launch
-# writes each tile's boundary prefix state to HBM (a pallas output), and
-# one backward launch per tile re-derives its <= cap checkpoints from the
-# spilled boundary in VMEM, consumes the reversed-suffix state chi handed
-# over from the previous tile, and emits its variants' fidelity rows.
+# tiles of at most ``cap`` checkpointed positions (a multi-use parameter's
+# [first, last] replay span is atomic — tile boundaries never split it),
+# the forward launch writes each tile's boundary prefix state to HBM (a
+# pallas output), and ONE double-buffered backward launch sweeps every
+# tile: each tile re-derives its <= cap checkpoints from the spilled
+# boundary, consumes the reversed-suffix state chi carried over from the
+# previous (deeper) tile in VMEM, and emits its variants' fidelity rows.
+# The boundary fetches ping-pong between two VMEM buffers — tile t+1's
+# async HBM copy is started before tile t's compute, so the fetch latency
+# the old per-tile launches serialized now hides under gate application.
 # Same op-application order per lane as the single sweep -> identical
 # results; cost is one extra in-register forward pass (the recompute) plus
 # 2 * (n_tiles + 1) register states of HBM spill traffic.
@@ -563,26 +620,128 @@ def checkpoint_vmem_bytes(plan: ShiftPlan, n_positions: int, tb: int) -> int:
     return (n_positions + _RESERVED_STATES) * _state_bytes(plan.m, tb)
 
 
+def _merge_spans(plan: ShiftPlan, positions):
+    """Merge variant anchor positions into atomic (first, n_checkpoints)
+    segments.
+
+    Each anchor drags its parameter's whole [first, last] replay span along
+    (single-use/point positions span themselves).  Overlapping spans fuse
+    into one segment — a tile boundary inside a span would strand a replay's
+    checkpoint in the previous tile.  Returns ascending (lo, n_ckpt) pairs
+    where ``lo`` is the segment's first checkpoint position and ``n_ckpt``
+    its distinct checkpoint count."""
+    first_of = {ps[-1]: ps[0] for ps in plan.theta_positions if ps}
+    segments: list[list] = []  # [lo, hi_anchor, {checkpoint positions}]
+    for f, k in sorted((first_of.get(k, k), k) for k in positions):
+        if segments and f <= segments[-1][1]:
+            segments[-1][1] = max(segments[-1][1], k)
+            segments[-1][2].add(f)
+        else:
+            segments.append([f, k, {f}])
+    return [(seg[0], len(seg[2])) for seg in segments]
+
+
 def plan_depth_tiles(
     plan: ShiftPlan, positions, tb: int, vmem_budget: int = VMEM_BUDGET_BYTES
 ):
-    """Cut checkpointed positions into depth tiles that fit the budget.
+    """Cut variant anchor positions into depth tiles that fit the budget.
 
-    ``positions``: ascending train-op indices needing a prefix checkpoint.
-    Returns None when every checkpoint fits in one sweep (no spilling),
-    else a tuple of (lo, hi) train-op ranges — tile t re-derives its
-    checkpoints from the spilled boundary state at op ``lo`` and walks chi
-    from op ``hi`` down to ``lo``.
+    ``positions``: ascending train-op indices of variant anchors (a
+    parameter's last dependent gate; equal to its checkpoint position for
+    single-use parameters).  Returns None when every checkpoint fits in one
+    sweep (no spilling), else a tuple of (lo, hi) train-op ranges — tile t
+    re-derives its checkpoints from the spilled boundary state at op ``lo``
+    and walks chi from op ``hi`` down to ``lo``.  Multi-use replay spans are
+    atomic: a segment never straddles a tile boundary (an oversized segment
+    becomes its own tile).  Single-use plans tile exactly as before.
     """
     positions = sorted(positions)
     if not positions:
         return None
     cap = max(1, vmem_budget // _state_bytes(plan.m, tb) - _RESERVED_STATES)
-    if len(positions) <= cap:
+    segments = _merge_spans(plan, positions)
+    if sum(n for _, n in segments) <= cap:
         return None
-    chunks = [positions[i : i + cap] for i in range(0, len(positions), cap)]
-    bounds = [c[0] for c in chunks] + [len(plan.train_ops)]
+    chunks: list[list] = []
+    cur, cur_n = [], 0
+    for lo, n in segments:
+        if cur and cur_n + n > cap:
+            chunks.append(cur)
+            cur, cur_n = [], 0
+        cur.append((lo, n))
+        cur_n += n
+    if cur:
+        chunks.append(cur)
+    bounds = [c[0][0] for c in chunks] + [len(plan.train_ops)]
     return tuple(zip(bounds[:-1], bounds[1:]))
+
+
+def plan_gate_apps(plan: ShiftPlan, shifts, groups, n_params: int) -> int:
+    """Analytic per-lane gate applications of the prefix-reuse execution for
+    the requested groups: the data-register pass + the forward pass + the
+    backward inverse walk down to the shallowest anchor + every variant's
+    suffix replay (one gate for single-use parameters, the [first, last]
+    span for multi-use ones)."""
+    variants = _collect_variants(plan, shifts, groups, n_params)
+    anchors = [k for k in variants if k >= 0]
+    total = len(plan.data_ops) + len(plan.train_ops)
+    if not anchors:
+        return total
+    total += len(plan.train_ops) - min(anchors)
+    for k in anchors:
+        for _, j, _ in variants[k]:
+            total += plan.replay_depth(j)
+    return total
+
+
+@functools.lru_cache(maxsize=None)
+def shift_cost_info(
+    spec: CircuitSpec,
+    four_term: bool = False,
+    groups: tuple[int, ...] | None = None,
+) -> dict:
+    """Analytic per-lane cost of executing a shift bank implicitly (prefix
+    reuse + suffix replay) vs materialized ((1+2P)x full-circuit rows), and
+    the mode the ops layer selects.  This replaces the old binary
+    plan-exists -> fused decision: a plan whose replay cost exceeds the
+    materialized bank's (a parameter reused across most of the circuit)
+    routes to materialization.  The coalescer's ``batch_cost_units`` and
+    ``api.backend.CostModel`` charge from the same numbers, so placement
+    and admission see the true suffix-replay cost."""
+    from repro.core.shift_rule import shift_values
+
+    n_shifts = 4 if four_term else 2
+    n_groups = 1 + n_shifts * spec.n_theta
+    if groups is None:
+        groups = tuple(range(n_groups))
+    materialized = len(spec.ops) * len(groups)
+    plan = build_shift_plan(spec)
+    if plan is None:
+        return {
+            "gate_apps_implicit": None,
+            "gate_apps_materialized": materialized,
+            "replay_depth_max": 0,
+            "use_implicit": False,
+        }
+    shifts = tuple(float(s) for s in shift_values(four_term))
+    implicit = plan_gate_apps(plan, shifts, groups, spec.n_theta)
+    depth = max((plan.replay_depth(j) for j in range(spec.n_theta)), default=0)
+    return {
+        "gate_apps_implicit": implicit,
+        "gate_apps_materialized": materialized,
+        "replay_depth_max": depth,
+        "use_implicit": implicit < materialized,
+    }
+
+
+def use_shift_plan(
+    spec: CircuitSpec,
+    four_term: bool = False,
+    groups: tuple[int, ...] | None = None,
+) -> bool:
+    """True when the implicit prefix-reuse path analytically beats
+    materializing the requested groups (requires a plan to exist)."""
+    return shift_cost_info(spec, four_term, groups)["use_implicit"]
 
 
 def shift_execution_info(
@@ -595,22 +754,32 @@ def shift_execution_info(
     vmem_budget: int = VMEM_BUDGET_BYTES,
 ) -> dict:
     """Static execution-mode report: which path a shift bank takes and what
-    it costs.  ``mode`` is "materialize" (no product structure), "fused"
-    (single-sweep prefix-reuse launch) or "spill" (VMEM-tiled prefix reuse);
-    the dispatcher's worker-VMEM model and the benchmarks both read this."""
+    it costs.  ``mode`` is "materialize" (no product structure, or replay
+    analytically dearer than materializing), "fused" (single-sweep
+    prefix-reuse launch) or "spill" (VMEM-tiled prefix reuse; ``launches``
+    counts the forward launch plus one per depth-tile segment of the
+    double-buffered backward launch); the dispatcher's worker-VMEM model
+    and the benchmarks both read this."""
     plan = build_shift_plan(spec)
     n_shifts = 4 if four_term else 2
     n_groups = 1 + n_shifts * spec.n_theta
     if groups is None:
         groups = tuple(range(n_groups))
     tb_eff = kernel_tb(n_samples, tb)
-    if plan is None:
+    cost = shift_cost_info(spec, four_term, tuple(groups))
+    base = {
+        "gate_apps_implicit": cost["gate_apps_implicit"],
+        "gate_apps_materialized": cost["gate_apps_materialized"],
+        "replay_depth_max": cost["replay_depth_max"],
+        "vmem_budget": vmem_budget,
+    }
+    if plan is None or not cost["use_implicit"]:
         return {
             "mode": "materialize",
             "launches": 1,
             "n_tiles": 0,
             "vmem_bytes": _state_bytes(spec.n_qubits, tb_eff),
-            "vmem_budget": vmem_budget,
+            **base,
         }
     from repro.core.shift_rule import shift_values
 
@@ -618,21 +787,35 @@ def shift_execution_info(
     positions = sorted(k for k in variants if k >= 0)
     tiles = plan_depth_tiles(plan, positions, tb_eff, vmem_budget)
     if tiles is None:
+        n_ckpt = len({plan.theta_positions[j][0] for k in positions
+                      for (_, j, _) in variants[k]})
         return {
             "mode": "fused",
             "launches": 1,
             "n_tiles": 0,
-            "vmem_bytes": checkpoint_vmem_bytes(plan, len(positions), tb_eff),
-            "vmem_budget": vmem_budget,
+            "vmem_bytes": checkpoint_vmem_bytes(plan, n_ckpt, tb_eff),
+            **base,
         }
-    cap = max(1, vmem_budget // _state_bytes(plan.m, tb_eff) - _RESERVED_STATES)
+    # live checkpoints of the fullest tile; +1 state for the second
+    # ping-pong boundary buffer of the double-buffered backward launch.
+    # Tiling itself still budgets without the extra buffer (bit-identical
+    # plan selection) — the 14 MB nominal budget already reserves the
+    # double-buffering headroom below the ~16 MB physical VMEM.
+    n_ckpt_max = max(
+        len({plan.theta_positions[j][0] for k in positions if lo <= k < hi
+             for (_, j, _) in variants[k]})
+        for lo, hi in tiles
+    )
     return {
         "mode": "spill",
         "launches": 1 + len(tiles),
         "n_tiles": len(tiles),
-        "vmem_bytes": checkpoint_vmem_bytes(plan, cap, tb_eff),
+        "vmem_bytes": checkpoint_vmem_bytes(plan, n_ckpt_max, tb_eff)
+        + _state_bytes(plan.m, tb_eff),
+        "spill_buffer_bytes": _state_bytes(plan.m, tb_eff),
         "spilled_bytes": 2 * (len(tiles) + 1) * _state_bytes(plan.m, tb_eff),
-        "vmem_budget": vmem_budget,
+        "overlap_ratio": round((len(tiles) - 1) / len(tiles), 4),
+        **base,
     }
 
 
@@ -664,61 +847,83 @@ def _shift_forward_kernel(
 
 def _shift_tile_kernel(
     plan: ShiftPlan,
-    lo: int,
-    hi: int,
-    tile_rows,
-    emit_chi: bool,
+    tile_plan,
     theta_ref,
     data_ref,
-    bnd_ref,
     chi_ref,
+    bnd_hbm_ref,
     rows_ref,
-    chi_out_ref=None,
+    buf_a,
+    buf_b,
+    sems,
 ):
-    """Spill-mode backward launch for one depth tile.
+    """Double-buffered spill backward launch: EVERY depth tile in one call.
 
-    Re-derives the tile's prefix checkpoints from the spilled boundary
-    state (train-op ``lo``), walks chi down from ``hi`` applying the same
-    inverse-gate sequence as the single-sweep kernel, and emits one
-    fidelity row per ``tile_rows`` entry ((group, param, shift, pos),
-    descending pos).  ``chi_out_ref`` hands chi at ``lo`` to the next
-    (shallower) tile."""
+    ``tile_plan``: ((tile_index, lo, hi, rows_t), ...) deepest tile first,
+    each rows_t a tuple of (group, param, shift, anchor) in descending
+    anchor order; ``bnd_hbm_ref`` holds the forward launch's tile-boundary
+    prefix states in HBM (memory space ANY, full array — sliced here by
+    tile index and lane-grid position).  Two VMEM boundary buffers
+    ping-pong: the async copy for the NEXT (shallower) tile's boundary is
+    started before the current tile's compute, so the HBM fetch latency
+    the old one-launch-per-tile path serialized now overlaps gate
+    application.  chi is carried across tiles in registers (no HBM chi
+    round-trip).  Per-lane op-application order is identical to the serial
+    per-tile kernels — results are bit-identical."""
     tb = theta_ref.shape[-1]
     dim = 2**plan.m
+    i = pl.program_id(0)
     theta_blk = theta_ref[...]
     data_blk = data_ref[...]
-    positions = {pos for (_, _, _, pos) in tile_rows}
-    last = max(positions)
+    bufs = (buf_a, buf_b)
 
-    re, im = bnd_ref[:dim, :], bnd_ref[dim:, :]
-    checkpoints = {}
-    for k in range(lo, last + 1):
-        if k in positions:
-            checkpoints[k] = (re, im)
-        if k < last:
-            re, im = _apply_one(
-                plan.train_ops[k], re, im, plan.m, theta_blk, data_blk
-            )
+    def fetch(slot, pos):
+        t = tile_plan[pos][0]
+        return pltpu.make_async_copy(
+            bnd_hbm_ref.at[pl.ds(2 * t * dim, 2 * dim), pl.ds(i * tb, tb)],
+            bufs[slot],
+            sems.at[slot],
+        )
 
+    fetch(0, 0).start()  # warm-up: the deepest tile's boundary
     c_re, c_im = chi_ref[:dim, :], chi_ref[dim:, :]
-    rows = {}
-    for k in range(hi - 1, lo - 1, -1):
-        op = plan.train_ops[k]
-        for g, _, s, pos in tile_rows:
-            if pos != k:
-                continue
-            p_re, p_im = checkpoints[k]
-            v_re, v_im = _apply_one(
-                op, p_re, p_im, plan.m, theta_blk, data_blk, delta=s
-            )
-            rows[g] = _inner_fidelity((c_re, c_im), (v_re, v_im))
-        if k > lo or emit_chi:
-            c_re, c_im = _apply_one(
-                op, c_re, c_im, plan.m, theta_blk, data_blk, invert=True
-            )
-    rows_ref[...] = jnp.stack([rows[g] for g, _, _, _ in tile_rows], axis=0)
-    if emit_chi:
-        chi_out_ref[...] = jnp.concatenate([c_re, c_im], axis=0)
+    out_rows = []
+    for pos, (t, lo, hi, rows_t) in enumerate(tile_plan):
+        slot = pos % 2
+        if pos + 1 < len(tile_plan):
+            fetch(1 - slot, pos + 1).start()  # next boundary in flight
+        fetch(slot, pos).wait()
+        # re-derive this tile's checkpoints from its boundary prefix state
+        firsts = {plan.theta_positions[j][0] for (_, j, _, _) in rows_t}
+        last = max(firsts)
+        re, im = bufs[slot][:dim, :], bufs[slot][dim:, :]
+        checkpoints = {}
+        for k in range(lo, last + 1):
+            if k in firsts:
+                checkpoints[k] = (re, im)
+            if k < last:
+                re, im = _apply_one(
+                    plan.train_ops[k], re, im, plan.m, theta_blk, data_blk
+                )
+        # chi walk + per-variant suffix replay, same order as the single
+        # sweep; chi at lo seeds the next (shallower) tile directly.
+        rows = {}
+        for k in range(hi - 1, lo - 1, -1):
+            op = plan.train_ops[k]
+            for g, j, s, anchor in rows_t:
+                if anchor != k:
+                    continue
+                first = plan.theta_positions[j][0]
+                v = _replay_variant(
+                    plan, j, s, checkpoints[first], theta_blk, data_blk
+                )
+                rows[g] = _inner_fidelity((c_re, c_im), v)
+            if k > lo or pos + 1 < len(tile_plan):
+                c_re, c_im = _apply_one(
+                    op, c_re, c_im, plan.m, theta_blk, data_blk, invert=True
+                )
+        out_rows.extend(rows[g] for g, _, _, _ in rows_t)
+    rows_ref[...] = jnp.stack(out_rows, axis=0)
 
 
 def _shift_fidelity_spilled(
@@ -732,8 +937,13 @@ def _shift_fidelity_spilled(
     tb: int,
     interpret: bool,
 ) -> jnp.ndarray:
-    """Orchestrate the spilled execution: 1 forward + ``len(tiles)``
-    backward launches; boundary/chi states round-trip HBM between them."""
+    """Orchestrate the spilled execution: one forward launch writes the
+    tile-boundary prefix states to HBM, then ONE double-buffered backward
+    launch sweeps every depth tile (``_shift_tile_kernel``), overlapping
+    each tile's boundary fetch with the previous tile's compute.
+    ``shift_execution_info``'s "launches" (1 + n_tiles) counts the forward
+    launch plus the backward launch's per-tile segments — the unit the
+    launch observer reports and the trend gate pins."""
     p, lanes = theta_t.shape
     d = data_t.shape[0]
     dim = 2**plan.m
@@ -763,33 +973,34 @@ def _shift_fidelity_spilled(
     for g, _, _ in variants.get(-1, ()):
         rows_by_group[g] = f0[0]
 
-    chi = d_state
-    for t in range(n_tiles - 1, -1, -1):
+    tile_plan = []
+    for t in range(n_tiles - 1, -1, -1):  # deepest tile first
         lo, hi = tiles[t]
-        tile_rows = tuple(
+        rows_t = tuple(
             (g, j, s, k)
             for k in range(hi - 1, lo - 1, -1)
             for (g, j, s) in variants.get(k, ())
         )
-        emit_chi = t > 0
-        out_specs = [lane_spec(len(tile_rows))]
-        out_shape = [jax.ShapeDtypeStruct((len(tile_rows), lanes), jnp.float32)]
-        if emit_chi:
-            out_specs.append(lane_spec(2 * dim))
-            out_shape.append(jax.ShapeDtypeStruct((2 * dim, lanes), jnp.float32))
-        outs = pl.pallas_call(
-            functools.partial(_shift_tile_kernel, plan, lo, hi, tile_rows, emit_chi),
-            grid=grid,
-            in_specs=in_specs + [lane_spec(2 * dim), lane_spec(2 * dim)],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(theta_t, data_t, boundaries[2 * t * dim : 2 * (t + 1) * dim], chi)
-        rows_t = outs[0]
-        if emit_chi:
-            chi = outs[1]
-        for i, (g, _, _, _) in enumerate(tile_rows):
-            rows_by_group[g] = rows_t[i]
+        tile_plan.append((t, lo, hi, rows_t))
+    tile_plan = tuple(tile_plan)
+    all_rows = tuple(r for (_, _, _, rows_t) in tile_plan for r in rows_t)
+
+    rows_out = pl.pallas_call(
+        functools.partial(_shift_tile_kernel, plan, tile_plan),
+        grid=grid,
+        in_specs=in_specs
+        + [lane_spec(2 * dim), pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=lane_spec(len(all_rows)),
+        out_shape=jax.ShapeDtypeStruct((len(all_rows), lanes), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2 * dim, tb), jnp.float32),
+            pltpu.VMEM((2 * dim, tb), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(theta_t, data_t, d_state, boundaries)
+    for idx, (g, _, _, _) in enumerate(all_rows):
+        rows_by_group[g] = rows_out[idx]
     return jnp.stack([rows_by_group[g] for g in groups], axis=0)
 
 
@@ -883,17 +1094,12 @@ def shift_bank_stats(
     g_full = len(spec.ops)
     mat_gates = n_groups * g_full * n_samples
     mat_angle_floats = n_groups * n_samples * (p + d)
-    plan = build_shift_plan(spec)
-    if plan is None:  # fallback executes the same work
+    cost = shift_cost_info(spec, four_term)
+    if not cost["use_implicit"]:  # fallback executes the same work
         impl_gates = mat_gates
         impl_angle_floats = mat_angle_floats
     else:
-        n_variants = sum(1 for j in range(p) if plan.theta_pos[j] >= 0) * (
-            4 if four_term else 2
-        )
-        impl_gates = (
-            len(plan.data_ops) + 2 * len(plan.train_ops) + n_variants
-        ) * n_samples
+        impl_gates = cost["gate_apps_implicit"] * n_samples
         impl_angle_floats = n_samples * (p + d)
     return {
         "n_groups": n_groups,

@@ -40,8 +40,8 @@ from repro.core.sim import CircuitSpec
 from repro.kernels import ops as kops
 from repro.kernels.vqc_statevector import (
     LANES,
-    build_shift_plan,
     kernel_tb,
+    shift_cost_info,
     shift_execution_info,
 )
 from repro.serve.coalescer import CoalescedBatch
@@ -189,12 +189,15 @@ def batch_cost_units(batch: CoalescedBatch) -> float:
     """Analytic work units of one batch: gate applications x padded lanes.
 
     Row batches pay the full gate sequence over their padded lane tile.
-    Shift-group batches pay the FUSED prefix-reuse cost: the data-register
-    pass, the trainable-register forward pass, the backward pass down to
-    the DEEPEST suffix any coalesced group (of any bank) needs, and one
-    gate + inner product per shift variant of the UNION group set — all of
-    it over the sum of the banks' padded lane segments, since the fused
-    launch computes the union groups for every lane.
+    Shift-group batches pay the analytic cost of the path the ops layer
+    will actually take (``kernels.shift_cost_info`` on the UNION group
+    set): the fused prefix-reuse cost — data-register pass, forward pass,
+    backward pass down to the shallowest anchor, and each variant's suffix
+    replay (one gate for single-use parameters, the [first, last] span for
+    multi-use ones) — over the sum of the banks' padded lane segments,
+    since the fused launch computes the union groups for every lane; or,
+    when no plan exists / replay is analytically dearer, the per-bank
+    materialized fallback cost.
     """
     spec = batch_spec(batch)
     if not isinstance(batch.key, ShiftGroupKey):
@@ -202,9 +205,9 @@ def batch_cost_units(batch: CoalescedBatch) -> float:
         return float(len(spec.ops) * pad)
     banks, group_sets, _ = bank_partition(batch)
     pad_b = sum(math.ceil(b.n_samples / LANES) * LANES for b in banks)
-    plan = build_shift_plan(spec)
-    union = sorted({g for gs in group_sets for g in gs})
-    if plan is None:
+    union = tuple(sorted({g for gs in group_sets for g in gs}))
+    cost = shift_cost_info(spec, batch.key.four_term, union)
+    if not cost["use_implicit"]:
         # fallback materializes each bank's requested groups separately
         return float(
             len(spec.ops)
@@ -213,21 +216,7 @@ def batch_cost_units(batch: CoalescedBatch) -> float:
                 for b, gs in zip(banks, group_sets)
             )
         )
-    n_params = banks[0].n_params
-    n_train = len(plan.train_ops)
-    max_suffix = 0
-    n_variants = 0
-    for g in union:
-        if g == 0:
-            continue
-        j = (g - 1) % n_params
-        pos = plan.theta_pos[j]
-        if pos < 0:
-            continue  # parameter drives no gate: base fidelity
-        n_variants += 1
-        max_suffix = max(max_suffix, n_train - pos)
-    gate_apps = len(plan.data_ops) + n_train + max_suffix + n_variants
-    return float(gate_apps * pad_b)
+    return float(cost["gate_apps_implicit"] * pad_b)
 
 
 # ------------------------------------------------------- worker VMEM model
@@ -249,7 +238,7 @@ def kernel_span_args(batch: CoalescedBatch) -> dict:
         info = shift_execution_info(
             spec, lanes, four_term=batch.key.four_term, groups=union
         )
-        return {
+        args = {
             "kind": "shift",
             "mode": info["mode"],
             "launches": info["launches"],
@@ -259,6 +248,14 @@ def kernel_span_args(batch: CoalescedBatch) -> dict:
             "lanes": lanes,
             "members": batch.n,
         }
+        if info["mode"] == "spill":
+            # boundary-fetch shape of the double-buffered backward launch:
+            # n_tiles fetches ping-ponging two VMEM buffers, all but the
+            # first overlapping the previous tile's compute.
+            args["spill_buffer_bytes"] = info["spill_buffer_bytes"]
+            args["boundary_fetches"] = info["n_tiles"]
+            args["overlap_ratio"] = info["overlap_ratio"]
+        return args
     padded = batch.padded(LANES)
     return {
         "kind": "rows",

@@ -369,6 +369,80 @@ def test_kernel_launch_observer():
     assert info["vmem_bytes"] > 0
 
 
+def test_spill_launch_observer_emits_per_tile_events():
+    """On the spill path the observer fires once per depth-tile launch
+    segment after the summary event, exposing the double-buffered backward
+    sweep: deepest-first tile order, ping-pong buffer alternation, and
+    which fetches overlapped the previous tile's compute."""
+    from repro.core.circuits import build_quclassi_circuit
+    from repro.kernels import ops as kops
+    from repro.kernels import vqc_statevector as K
+
+    spec = build_quclassi_circuit(17, 3)  # m = 8: spills at TB = 512
+    info = K.shift_execution_info(spec, 512)
+    assert info["mode"] == "spill" and info["n_tiles"] > 1
+    seen = []
+    prev = kops.set_launch_observer(seen.append)
+    try:
+        # the emission helper the public wrappers call per launch; driving
+        # it directly keeps the test free of a 512-lane m = 8 execution
+        kops._notify_launch(spec, 512, False, None)
+    finally:
+        kops.set_launch_observer(prev)
+    assert len(seen) == info["launches"]  # summary + one per tile
+    summary, tiles = seen[0], seen[1:]
+    assert summary["mode"] == "spill"
+    assert len(tiles) == info["n_tiles"]
+    for order, ev in enumerate(tiles):
+        assert ev["mode"] == "spill_tile"
+        assert ev["tile_order"] == order
+        assert ev["tile"] == info["n_tiles"] - 1 - order  # deepest-first
+        assert ev["buffer"] == order % 2                  # ping-pong
+        assert ev["overlapped"] == (order > 0)
+        assert ev["boundary_bytes"] == info["spill_buffer_bytes"]
+        assert ev["lanes"] == 512 and ev["banks"] == 1
+
+
+def test_kernel_span_args_spill_metadata():
+    """Trace spans of spilled shift batches carry the boundary-fetch shape
+    (buffer bytes, fetch count, overlap ratio) so Perfetto shows the DMA
+    overlap; fused batches carry none of it."""
+    import jax.numpy as jnp
+
+    from repro.core import shift_rule
+    from repro.core.circuits import build_quclassi_circuit
+    from repro.serve import ShiftGroupKey
+    from repro.serve.coalescer import CoalescedBatch, PendingCircuit
+    from repro.serve.dispatcher import kernel_span_args
+
+    def shift_batch(spec, b):
+        theta = jnp.zeros((spec.n_theta,), jnp.float32)
+        data = jnp.zeros((b, spec.n_data), jnp.float32)
+        bank = shift_rule.build_shift_bank(theta, data)
+        key = ShiftGroupKey(spec, False)
+        members = [
+            PendingCircuit(key, "t", g, 0.0, (bank, g), lanes=b)
+            for g in range(bank.n_groups)
+        ]
+        return CoalescedBatch(key=key, members=members, created=0.0)
+
+    wide = build_quclassi_circuit(17, 3)
+    args = kernel_span_args(shift_batch(wide, 512))
+    assert args["kind"] == "shift" and args["mode"] == "spill"
+    assert args["boundary_fetches"] == args["n_tiles"] > 1
+    assert args["launches"] == args["n_tiles"] + 1
+    assert args["spill_buffer_bytes"] > 0
+    assert 0 < args["overlap_ratio"] < 1
+    # footprint already includes the second ping-pong boundary buffer
+    assert args["vmem_bytes"] > args["spill_buffer_bytes"]
+
+    narrow = build_quclassi_circuit(5, 1)
+    fused = kernel_span_args(shift_batch(narrow, 8))
+    assert fused["mode"] == "fused"
+    for k in ("spill_buffer_bytes", "boundary_fetches", "overlap_ratio"):
+        assert k not in fused
+
+
 if __name__ == "__main__":
     import sys
 

@@ -1,0 +1,229 @@
+"""Property tests for the multi-use suffix-replay shift plans.
+
+Random SWAP-test-structured circuits with REPEATED parameters — arbitrary
+reuse counts, interleavings, and gate mixes — must produce shift-bank
+fidelities that match the ``materialize()`` + dense-oracle reference to
+<= 1e-5 on every execution path: the single-sweep fused kernel, the fused
+multi-bank launch, and the depth-tiled spilled path (including a genuinely
+wide m = 8 register).  The plan's cost accounting must agree with a direct
+count over the generated circuit.
+
+The generator is a plain seeded ``random.Random`` walk so a fixed seed set
+always runs; when hypothesis is installed it additionally drives the seed
+space (and shrinks failures to a minimal seed).
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import shift_rule
+from repro.core.sim import CircuitSpec, Op
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels import vqc_statevector as K
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal environments: deterministic seeds only
+    HAVE_HYPOTHESIS = False
+
+SINGLE_GATES = ("rx", "ry", "rz")
+PAIR_GATES = ("ryy", "rzz", "cry", "crz")
+TB = 128
+
+
+def random_multiuse_spec(seed, m_max=2, n_params_max=3, n_ops_max=8):
+    """A random product-structure circuit whose trainable stack reuses
+    parameters: encoding on the data register, a random gate list on the
+    trainable register where each gate draws its parameter from a small
+    pool (so repeats are the norm), then the SWAP-test tail."""
+    rng = random.Random(seed)
+    m = rng.randint(1, m_max)
+    n_params = rng.randint(1, n_params_max)
+    n_ops = rng.randint(n_params, n_ops_max)
+    anc = 0
+    data_q = list(range(1, 1 + m))
+    train_q = list(range(1 + m, 1 + 2 * m))
+    ops = [Op("rx", (q,), ("data", i)) for i, q in enumerate(data_q)]
+    for _ in range(n_ops):
+        j = rng.randrange(n_params)
+        if m > 1 and rng.random() < 0.5:
+            gate = rng.choice(PAIR_GATES)
+            a = rng.randrange(m - 1)
+            ops.append(Op(gate, (train_q[a], train_q[a + 1]), ("theta", j)))
+        else:
+            gate = rng.choice(SINGLE_GATES)
+            ops.append(Op(gate, (rng.choice(train_q),), ("theta", j)))
+    ops.append(Op("h", (anc,)))
+    ops += [Op("cswap", (anc, d, t)) for d, t in zip(data_q, train_q)]
+    ops.append(Op("h", (anc,)))
+    return CircuitSpec(
+        n_qubits=1 + 2 * m, ops=tuple(ops), n_theta=n_params, n_data=m
+    )
+
+
+def _reference(spec, bank):
+    mat = bank.materialize()
+    return np.asarray(
+        ref.vqc_fidelity_ref(spec, mat.theta, mat.data)
+    ).reshape(bank.n_groups, bank.n_samples)
+
+
+def _bank(spec, seed, b=2, four_term=False):
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.uniform(
+        key, (spec.n_theta,), jnp.float32, minval=0.0, maxval=np.pi
+    )
+    data = jax.random.uniform(
+        jax.random.fold_in(key, 1), (b, spec.n_data), jnp.float32,
+        minval=0.0, maxval=np.pi,
+    )
+    return shift_rule.build_shift_bank(theta, data, four_term=four_term)
+
+
+def check_fused(seed, four_term):
+    spec = random_multiuse_spec(seed)
+    plan = K.build_shift_plan(spec)
+    assert plan is not None
+    bank = _bank(spec, seed, four_term=four_term)
+    got = np.asarray(
+        K.vqc_shift_fidelity(spec, bank.theta, bank.data, four_term=four_term)
+    )
+    np.testing.assert_allclose(got, _reference(spec, bank), atol=1e-5)
+    # plan bookkeeping agrees with a direct scan of the generated circuit
+    for j in range(spec.n_theta):
+        uses = [
+            i for i, op in enumerate(plan.train_ops)
+            if op.param == ("theta", j)
+        ]
+        assert plan.theta_positions[j] == tuple(uses)
+        assert plan.replay_depth(j) == ((uses[-1] - uses[0] + 1) if uses else 0)
+
+
+def check_spilled(seed):
+    """Force a one-checkpoint budget so every replay span becomes its own
+    depth tile (or merges with its overlap neighbours)."""
+    spec = random_multiuse_spec(seed)
+    plan = K.build_shift_plan(spec)
+    assert plan is not None
+    bank = _bank(spec, seed)
+    budget = K.checkpoint_vmem_bytes(plan, 1, TB)
+    got = np.asarray(
+        K.vqc_shift_fidelity(
+            spec, bank.theta, bank.data, tb=TB, vmem_budget=budget
+        )
+    )
+    np.testing.assert_allclose(got, _reference(spec, bank), atol=1e-5)
+
+
+def check_multibank(seed):
+    spec = random_multiuse_spec(seed)
+    b1 = _bank(spec, seed)
+    b2 = _bank(spec, seed + 1, b=3)
+    gs = (tuple(range(b1.n_groups)), tuple(range(0, b2.n_groups, 2)))
+    got = kops.vqc_fidelity_shiftgroups_multibank(
+        spec, (b1.theta, b2.theta), (b1.data, b2.data), False, gs
+    )
+    for bank, groups, out in zip((b1, b2), gs, got):
+        want = _reference(spec, bank)[list(groups)]
+        np.testing.assert_allclose(np.asarray(out), want, atol=1e-5)
+
+
+def check_ops_layer(seed):
+    """Whatever side of the cost crossover a random circuit lands on, the
+    public ops wrapper returns the reference fidelities."""
+    spec = random_multiuse_spec(seed)
+    bank = _bank(spec, seed)
+    got = np.asarray(kops.vqc_fidelity_shiftgroups(spec, bank.theta, bank.data))
+    np.testing.assert_allclose(got, _reference(spec, bank), atol=1e-5)
+    cost = K.shift_cost_info(spec)
+    assert cost["gate_apps_implicit"] is not None
+    assert cost["use_implicit"] == (
+        cost["gate_apps_implicit"] < cost["gate_apps_materialized"]
+    )
+
+
+# ------------------------------------------- deterministic seed coverage
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("four_term", [False, True])
+def test_fused_replay_matches_materialized(seed, four_term):
+    check_fused(seed, four_term)
+
+
+@pytest.mark.parametrize("seed", range(100, 103))
+def test_spilled_replay_matches_materialized(seed):
+    check_spilled(seed)
+
+
+@pytest.mark.parametrize("seed", range(200, 203))
+def test_multibank_replay_matches_per_bank(seed):
+    check_multibank(seed)
+
+
+@pytest.mark.parametrize("seed", range(300, 304))
+def test_ops_layer_selection_always_correct(seed):
+    check_ops_layer(seed)
+
+
+def test_wide_register_multiuse_spill_m8():
+    """Deterministic anchor at m = 8 (the acceptance width): a tied stack
+    on a wide register runs the spilled path with overlapped boundary
+    fetches and matches the full-sweep result."""
+    m = 8
+    anc = 0
+    data_q = list(range(1, 1 + m))
+    train_q = list(range(1 + m, 1 + 2 * m))
+    ops = [Op("rx", (q,), ("data", i)) for i, q in enumerate(data_q)]
+    for j in range(6):  # 6 params x 2 adjacent uses
+        q = train_q[j % m]
+        ops.append(Op("ry", (q,), ("theta", j)))
+        ops.append(Op("rz", (q,), ("theta", j)))
+    ops.append(Op("h", (anc,)))
+    ops += [Op("cswap", (anc, d, t)) for d, t in zip(data_q, train_q)]
+    ops.append(Op("h", (anc,)))
+    spec = CircuitSpec(n_qubits=1 + 2 * m, ops=tuple(ops), n_theta=6, n_data=m)
+    plan = K.build_shift_plan(spec)
+    assert plan is not None
+    bank = _bank(spec, 11)
+    budget = K.checkpoint_vmem_bytes(plan, 2, TB)
+    tiles = K.plan_depth_tiles(
+        plan, sorted(ps[-1] for ps in plan.theta_positions), TB, budget
+    )
+    assert tiles is not None and len(tiles) > 1
+    spilled = np.asarray(
+        K.vqc_shift_fidelity(
+            spec, bank.theta, bank.data, tb=TB, vmem_budget=budget
+        )
+    )
+    full = np.asarray(K.vqc_shift_fidelity(spec, bank.theta, bank.data, tb=TB))
+    np.testing.assert_allclose(spilled, full, atol=1e-5)
+
+
+# --------------------------------------------- hypothesis-driven seeds
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), four_term=st.booleans())
+    def test_fused_replay_property(seed, four_term):
+        check_fused(seed, four_term)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_spilled_replay_property(seed):
+        check_spilled(seed)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_multibank_replay_property(seed):
+        check_multibank(seed)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_ops_layer_selection_property(seed):
+        check_ops_layer(seed)
