@@ -25,8 +25,8 @@ Usage:
                                      [--update-baselines]
 
 ``--artifacts`` restricts the pass to a subset (the tier-1 job gates the
-kernel + gateway artifacts; the scale job gates ``BENCH_scale.json``,
-which tier-1 never emits).  ``--update-baselines`` copies the emitted
+kernel + gateway + federated artifacts; the scale job gates
+``BENCH_scale.json``, which tier-1 never emits).  ``--update-baselines`` copies the emitted
 artifacts over the committed baselines (run after an intentional perf
 change, then commit the diff).
 """
@@ -39,7 +39,12 @@ import re
 import shutil
 import sys
 
-ARTIFACTS = ("BENCH_kernel.json", "BENCH_gateway.json", "BENCH_scale.json")
+ARTIFACTS = (
+    "BENCH_kernel.json",
+    "BENCH_gateway.json",
+    "BENCH_scale.json",
+    "BENCH_federated.json",
+)
 
 #: (artifact, path regex, direction, relative tolerance).  ``higher`` means
 #: the metric regressed if current < baseline * (1 - tol); ``lower`` means
@@ -105,6 +110,18 @@ GATES = [
     ("BENCH_scale.json", r"^admission\.attainment_admitted$", "higher", 0.10),
     # same-seed double run must be bit-identical (1 = identical, 0 = drift)
     ("BENCH_scale.json", r"^determinism\.repeat_identical$", "higher", 0.0),
+    # federated rounds (virtual clock, fully seeded -> deterministic): every
+    # configured round must close, quorum rounds must keep beating the sync
+    # barrier under the canonical straggler fault, the straggler tax must
+    # not inflate, masked aggregation must keep reproducing plain FedAvg,
+    # and the same-seed double run (round records + final params) must stay
+    # bit-identical.
+    ("BENCH_federated.json", r"^straggler\.rounds_completed$", "higher", 0.0),
+    ("BENCH_federated.json", r"^straggler\.quorum_over_barrier$", "higher", 0.25),
+    ("BENCH_federated.json", r"^straggler\.quorum_wait_share$", "lower", 0.25),
+    ("BENCH_federated.json", r"^accuracy\.rounds_completed$", "higher", 0.0),
+    ("BENCH_federated.json", r"^secure\.matches_plain$", "higher", 0.0),
+    ("BENCH_federated.json", r"^determinism\.repeat_identical$", "higher", 0.0),
 ]
 
 #: substrings marking wall-clock metrics: never gated, listed informationally.

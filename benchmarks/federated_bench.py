@@ -1,0 +1,299 @@
+"""Federated DQL benchmark: quorum rounds vs the sync barrier (beyond paper).
+
+Three sections, all on the virtual clock (bit-deterministic, so the emitted
+metrics are gateable against a committed baseline):
+
+  straggler : the Fig-6-style heterogeneous tenant mix (5q/7q x 1/2 layers)
+              on the 5/10/15/20-qubit fleet with a 10x slowdown fault on
+              every worker that can hold the 7q banks — the scenario the
+              quorum + deadline policy exists for.  Reports rounds/sec for
+              the sync barrier vs quorum rounds and the straggler tax
+              (``quorum_wait_share``).
+  secure    : pairwise-mask secure aggregation must reproduce the plain
+              FedAvg aggregate (masks cancel in the sum) — reported as a
+              0/1 ``matches_plain`` plus the actual max abs difference.
+  accuracy  : accuracy-vs-rounds for real QuClassi local training (exact
+              autodiff SGD on per-tenant MNIST shards) through the serving
+              gateway, 4 tenants at quorum 0.75.
+
+The determinism section re-runs the straggler-quorum and accuracy runs with
+the same seed and requires bit-identical reports + final parameters — the
+double-run gate CI enforces via ``check_trend.py``.
+
+Usage:  PYTHONPATH=src:. python benchmarks/federated_bench.py
+            [--full] [--seed N] [--out-dir DIR] [--skip-determinism]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+#: the config CI runs (and the committed baseline was emitted with).
+CI_DEFAULTS = dict(
+    n_rounds=4,
+    quorum=0.5,  # 2-of-4: close on the healthy-worker tenants
+    n_circuits=16,
+    slowdown_factor=10.0,
+    accuracy_rounds=2,
+    accuracy_quorum=0.75,
+    n_per_class=12,
+    local_steps=1,
+    lr=0.1,
+    seed=7,
+)
+
+FULL_OVERRIDES = dict(n_rounds=8, accuracy_rounds=5, n_per_class=40)
+
+
+def _fleet():
+    from repro.comanager.worker import WorkerConfig
+
+    return [
+        WorkerConfig("w1", 5),
+        WorkerConfig("w2", 10),
+        WorkerConfig("w3", 15),
+        WorkerConfig("w4", 20),
+    ]
+
+
+def _fig6_tenants(n_circuits):
+    from repro.federated import TenantSpec
+
+    return [
+        TenantSpec("t5a", qc=5, n_layers=1, n_circuits=n_circuits),
+        TenantSpec("t5b", qc=5, n_layers=2, n_circuits=n_circuits),
+        TenantSpec("t7a", qc=7, n_layers=1, n_circuits=n_circuits),
+        TenantSpec("t7b", qc=7, n_layers=2, n_circuits=n_circuits),
+    ]
+
+
+def _toy_update_fn(seed):
+    """Deterministic synthetic delta trees: seeded on (tenant, round)."""
+
+    def update_fn(tenant, round_idx, params):
+        ent = [seed, round_idx] + [ord(c) for c in tenant]
+        g = np.random.default_rng(np.random.SeedSequence(ent))
+        return {k: 0.01 * g.standard_normal(np.shape(v)) for k, v in params.items()}
+
+    return update_fn
+
+
+# ---------------------------------------------------------------- sections
+def run_straggler(cfg):
+    """Barrier vs quorum rounds under the canonical slowdown fault: every
+    worker wide enough for the 7q banks runs 10x slow, so the 7q tenants
+    straggle and the sync barrier pays for them every round."""
+    from repro.comanager.faults import FaultSpec
+    from repro.federated import FederatedConfig, run_federated
+
+    params0 = {"theta": np.random.default_rng(cfg["seed"]).standard_normal((2, 10))}
+    faults = {
+        w: FaultSpec(kind="slowdown", at=0.0, factor=cfg["slowdown_factor"])
+        for w in ("w2", "w3", "w4")
+    }
+    reports = {}
+    for mode, barrier in (("barrier", True), ("quorum", False)):
+        fed = FederatedConfig(
+            n_rounds=cfg["n_rounds"],
+            quorum=cfg["quorum"],
+            barrier=barrier,
+            seed=cfg["seed"],
+        )
+        reports[mode] = run_federated(
+            fed,
+            _fig6_tenants(cfg["n_circuits"]),
+            _toy_update_fn(cfg["seed"]),
+            params0,
+            _fleet(),
+            gateway=True,
+            worker_failures=dict(faults),
+        )
+    q, b = reports["quorum"], reports["barrier"]
+    return reports, {
+        "rounds_completed": len(q.rounds),
+        "barrier_rps": round(b.rounds_per_second, 6),
+        "quorum_rps": round(q.rounds_per_second, 6),
+        "quorum_over_barrier": round(
+            q.rounds_per_second / max(b.rounds_per_second, 1e-9), 6
+        ),
+        "quorum_wait_share": round(q.quorum_wait_share, 6),
+        "barrier_wait_share": round(b.quorum_wait_share, 6),
+        "participation": {t: dict(c) for t, c in sorted(q.participation.items())},
+    }
+
+
+def run_secure(cfg):
+    """Masked aggregation == plain aggregation: one in-process round each
+    way over the same updates; the pairwise masks must cancel in the sum."""
+    from repro.federated import FederatedConfig, FederatedCoordinator
+
+    rng = np.random.default_rng(cfg["seed"])
+    params0 = {"theta": rng.standard_normal((3, 7)), "phi": rng.standard_normal(5)}
+    tenants = ["a", "b", "c", "d"]
+    updates = {
+        t: {k: 0.1 * rng.standard_normal(np.shape(v)) for k, v in params0.items()}
+        for t in tenants
+    }
+    finals = {}
+    for secure in (False, True):
+        fed = FederatedConfig(n_rounds=1, secure_aggregation=secure, seed=cfg["seed"])
+        co = FederatedCoordinator(fed, params0)
+        co.begin_round(0, 0.0, tenants)
+        for t in tenants:
+            co.offer(t, updates[t], 0.5)
+        co.close_round(1.0)
+        finals[secure] = co.params
+    diff = max(
+        float(np.abs(finals[True][k] - finals[False][k]).max()) for k in params0
+    )
+    return {"matches_plain": int(diff <= 1e-6), "max_abs_diff": diff}
+
+
+def run_accuracy(cfg):
+    """Accuracy-vs-rounds: real QuClassi local SGD on per-tenant MNIST
+    shards, aggregated through the gateway-side round loop at quorum 0.75."""
+    from repro.federated import (
+        FederatedConfig,
+        TenantSpec,
+        make_quclassi_eval_fn,
+        make_quclassi_update_fn,
+        run_federated,
+        shard_dataset,
+    )
+
+    import jax
+
+    from repro.core.quclassi import QuClassiConfig, init_params
+    from repro.data import mnist
+
+    qcfg = QuClassiConfig(qc=5, n_layers=1)
+    x, y = mnist.make_pair_dataset(
+        3, 6, n_per_class=cfg["n_per_class"], seed=cfg["seed"]
+    )
+    (xtr, ytr), (xte, yte) = mnist.train_test_split(x, y)
+    names = ["alice", "bob", "carol", "dave"]
+    shards = shard_dataset(xtr, ytr, names, seed=cfg["seed"])
+    tenants = [TenantSpec(n, qc=5, n_layers=1, n_circuits=16) for n in names]
+    fed = FederatedConfig(
+        n_rounds=cfg["accuracy_rounds"],
+        quorum=cfg["accuracy_quorum"],
+        seed=cfg["seed"],
+    )
+    report = run_federated(
+        fed,
+        tenants,
+        make_quclassi_update_fn(
+            qcfg, shards, lr=cfg["lr"], local_steps=cfg["local_steps"]
+        ),
+        init_params(qcfg, jax.random.PRNGKey(cfg["seed"])),
+        _fleet(),
+        eval_fn=make_quclassi_eval_fn(qcfg, (xte, yte)),
+        gateway=True,
+    )
+    return report, {
+        "rounds_completed": len(report.rounds),
+        "accuracy_by_round": [round(a, 6) for a in report.accuracy_by_round],
+        "final_accuracy": round(report.accuracy_by_round[-1], 6),
+        "rounds_per_second": round(report.rounds_per_second, 6),
+    }
+
+
+def _fingerprint(report):
+    """Everything the double-run must reproduce bit-identically: the full
+    report summary plus the final parameter bytes."""
+    return (
+        json.dumps(report.summary(), sort_keys=True, default=float),
+        tuple((k, report.params[k].tobytes()) for k in sorted(report.params)),
+    )
+
+
+# -------------------------------------------------------------------- main
+def run(quick=True, seed=None, skip_determinism=False):
+    """Run every section and return the BENCH_federated.json payload."""
+    cfg = dict(CI_DEFAULTS)
+    if not quick:
+        cfg.update(FULL_OVERRIDES)
+    if seed is not None:
+        cfg["seed"] = seed
+    t0 = time.time()
+
+    reports, straggler = run_straggler(cfg)
+    print(
+        f"straggler: barrier {straggler['barrier_rps']:g} rounds/s vs "
+        f"quorum {straggler['quorum_rps']:g} rounds/s "
+        f"({straggler['quorum_over_barrier']:g}x), quorum wait share "
+        f"{straggler['quorum_wait_share']:.1%}"
+    )
+    secure = run_secure(cfg)
+    print(
+        f"secure agg: masked vs plain max |diff| = "
+        f"{secure['max_abs_diff']:.2e} "
+        f"({'ok' if secure['matches_plain'] else 'MISMATCH'})"
+    )
+    acc_report, acc = run_accuracy(cfg)
+    print(
+        f"accuracy: {acc['rounds_completed']} rounds -> "
+        f"{acc['accuracy_by_round']} (final {acc['final_accuracy']:g})"
+    )
+
+    repeat_identical = 0
+    if not skip_determinism:
+        reports2, _ = run_straggler(cfg)
+        acc_report2, _ = run_accuracy(cfg)
+        repeat_identical = int(
+            _fingerprint(reports["quorum"]) == _fingerprint(reports2["quorum"])
+            and _fingerprint(acc_report) == _fingerprint(acc_report2)
+        )
+        print(
+            f"determinism: same-seed double run "
+            f"{'identical' if repeat_identical else 'DIVERGED'}"
+        )
+        if not repeat_identical:
+            print("ERROR: same-seed federated run not reproducible", file=sys.stderr)
+
+    return {
+        "config": dict(cfg),
+        "straggler": straggler,
+        "secure": secure,
+        "accuracy": acc,
+        "determinism": {"repeat_identical": repeat_identical},
+        "harness": {"wall_s": round(time.time() - t0, 1)},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="more rounds + larger shards (CI runs the quick defaults)",
+    )
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--out-dir", default=".", help="directory for BENCH_federated.json")
+    ap.add_argument(
+        "--skip-determinism",
+        action="store_true",
+        help="skip the same-seed double run (emits repeat_identical=0)",
+    )
+    args = ap.parse_args(argv)
+    payload = run(
+        quick=not args.full,
+        seed=args.seed,
+        skip_determinism=args.skip_determinism,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+    path = os.path.join(args.out_dir, "BENCH_federated.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"[artifact] wrote {path}")
+    ok = payload["determinism"]["repeat_identical"] or args.skip_determinism
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

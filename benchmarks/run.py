@@ -9,8 +9,10 @@
 
 Every run emits machine-readable artifacts — ``BENCH_kernel.json`` (fused
 kernel wall time + analytic traffic ratios, shift-bank gate-application and
-angle-byte ratios) and ``BENCH_gateway.json`` (coalescing throughput +
-latency) — so the perf trajectory is tracked across PRs; CI uploads them.
+angle-byte ratios), ``BENCH_gateway.json`` (coalescing throughput +
+latency) and ``BENCH_federated.json`` (quorum vs barrier round throughput,
+secure-aggregation parity, accuracy-vs-rounds) — so the perf trajectory is
+tracked across PRs; CI uploads them.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--full | --quick]
                                                 [--out-dir DIR]
@@ -98,6 +100,12 @@ def main() -> None:
         trace_path=os.path.join(args.out_dir, "trace_gateway.json"),
     )
     _write_artifact(args.out_dir, "BENCH_gateway.json", gateway_result)
+
+    section("Federated DQL: quorum rounds vs sync barrier (beyond paper)")
+    from benchmarks import federated_bench
+
+    federated_result = federated_bench.run(quick=not args.full)
+    _write_artifact(args.out_dir, "BENCH_federated.json", federated_result)
 
     if args.full:
         from benchmarks import accuracy

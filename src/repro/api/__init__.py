@@ -41,6 +41,10 @@ _LAZY = {
     "ClusterConfig": "repro.api.config",
     "FaultSpec": "repro.comanager.faults",
     "FaultToleranceConfig": "repro.comanager.faults",
+    "FederatedConfig": "repro.federated",
+    "FederatedReport": "repro.federated",
+    "FederatedSession": "repro.federated",
+    "TenantSpec": "repro.federated",
     "ObservabilityConfig": "repro.obs.config",
     "ServingConfig": "repro.api.config",
     "SimulationConfig": "repro.api.config",

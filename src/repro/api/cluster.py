@@ -186,6 +186,84 @@ class QuantumCluster:
         )
         return sim.run()
 
+    # ----------------------------------------------------------- federated
+    def federated_session(
+        self,
+        tenants,
+        config=None,
+        *,
+        update_fn=None,
+        params0=None,
+        qcfg=None,
+        dataset=None,
+        eval_set=None,
+        lr: float = 0.1,
+        local_steps: int = 1,
+        worker_failures: dict | None = None,
+        simulation=None,
+    ):
+        """Open a federated DQL session over this cluster's fleet
+        (``repro.federated``): per-tenant local training on private shards,
+        gateway-side FedAvg rounds closing on quorum + deadline, on the
+        virtual clock.
+
+        ``tenants``: ``TenantSpec`` list, or plain names (default spec).
+        Either pass ``update_fn`` + ``params0`` directly, or ``qcfg`` + a
+        ``dataset`` ``(images, labels)`` — the dataset is then sharded
+        deterministically across tenants and the local update is
+        ``local_steps`` of exact-gradient SGD at ``lr`` (``eval_set`` adds
+        per-round held-out accuracy).  Returns a ``FederatedSession``;
+        call ``.run()`` for the ``FederatedReport``."""
+        from repro.federated import (
+            FederatedConfig,
+            FederatedSession,
+            TenantSpec,
+            make_quclassi_eval_fn,
+            make_quclassi_update_fn,
+            shard_dataset,
+        )
+
+        config = config or FederatedConfig()
+        specs = [
+            t if isinstance(t, TenantSpec) else TenantSpec(name=t)
+            for t in tenants
+        ]
+        eval_fn = None
+        if update_fn is None:
+            if qcfg is None or dataset is None:
+                raise ValueError(
+                    "pass update_fn + params0, or qcfg + dataset to build "
+                    "the QuClassi local-training update"
+                )
+            import jax
+
+            from repro.core import quclassi
+
+            shards = shard_dataset(
+                dataset[0], dataset[1], [t.name for t in specs], seed=config.seed
+            )
+            update_fn = make_quclassi_update_fn(
+                qcfg, shards, lr=lr, local_steps=local_steps
+            )
+            if params0 is None:
+                params0 = quclassi.init_params(
+                    qcfg, jax.random.PRNGKey(config.seed)
+                )
+            if eval_set is not None:
+                eval_fn = make_quclassi_eval_fn(qcfg, eval_set)
+        elif params0 is None:
+            raise ValueError("params0 is required with an explicit update_fn")
+        return FederatedSession(
+            self,
+            config,
+            specs,
+            update_fn,
+            params0,
+            eval_fn=eval_fn,
+            worker_failures=worker_failures,
+            simulation=simulation,
+        )
+
 
 class Session:
     """One tenant's handle on the cluster: submit, train, observe.

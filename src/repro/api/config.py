@@ -95,6 +95,11 @@ class ServingConfig:
     #: over its weighted share gets ``Backpressure`` at submit.  Calibrate
     #: at the throughput knee with ``repro.scale.knee`` (None = never shed).
     max_system_pending: Optional[int] = None
+    #: per-priority-tier outstanding caps (tier -> cap): bounds each tier's
+    #: queued + in-flight circuits independently of the global cap, so a
+    #: low-tier burst cannot consume a high tier's admission headroom;
+    #: shedding is weighted-fair within the tier.  None = no tier caps.
+    max_pending_per_tier: Optional[dict[int, int]] = None
     #: tracing + metrics knobs (None = trace everything at the defaults;
     #: ``ObservabilityConfig.disabled()`` turns the recorder off).
     observability: Optional[ObservabilityConfig] = None
@@ -121,6 +126,12 @@ class ServingConfig:
             raise ValueError(
                 f"max_system_pending must be >= 1, got {self.max_system_pending}"
             )
+        if self.max_pending_per_tier is not None:
+            for tier, cap in self.max_pending_per_tier.items():
+                if cap < 1:
+                    raise ValueError(
+                        f"max_pending_per_tier[{tier}] must be >= 1, got {cap}"
+                    )
         if self.target is not None:
             # fail where the typo is written, not at first (lazy) runtime
             # construction deep inside the coalescer.
@@ -148,6 +159,8 @@ class ServingConfig:
             kw["worker_vmem_bytes"] = self.worker_vmem_bytes
         if self.max_system_pending is not None:
             kw["max_system_pending"] = self.max_system_pending
+        if self.max_pending_per_tier is not None:
+            kw["max_pending_per_tier"] = dict(self.max_pending_per_tier)
         return kw
 
 
@@ -181,6 +194,8 @@ class SimulationConfig:
     #: global weighted-fair outstanding cap — the knee-calibrated admission
     #: control (``repro.scale.knee``); None = admit everything.
     gateway_max_system_pending: Optional[int] = None
+    #: per-priority-tier outstanding caps (tier -> cap); None = no tier caps.
+    gateway_max_pending_per_tier: Optional[dict[int, int]] = None
     #: gateway-mode tracing + metrics knobs (None = trace everything).
     observability: Optional[ObservabilityConfig] = None
 
@@ -205,6 +220,13 @@ class SimulationConfig:
             value = getattr(self, name)
             if value is not None and value < 1:
                 raise ValueError(f"{name} must be >= 1, got {value}")
+        if self.gateway_max_pending_per_tier is not None:
+            for tier, cap in self.gateway_max_pending_per_tier.items():
+                if cap < 1:
+                    raise ValueError(
+                        f"gateway_max_pending_per_tier[{tier}] must be >= 1, "
+                        f"got {cap}"
+                    )
 
     def simulation_kwargs(self) -> dict:
         """The ``SystemSimulation`` keyword view of this config.

@@ -30,6 +30,7 @@ class EventLoop:
         self._seq = itertools.count()
         self.now = 0.0
         self.handlers: dict[str, Callable[[float, Any], None]] = {}
+        self._stopped = False
 
     def schedule(self, time: float, kind: str, payload: Any = None) -> _Entry:
         if time < self.now - 1e-12:
@@ -44,10 +45,20 @@ class EventLoop:
     def on(self, kind: str, fn: Callable[[float, Any], None]) -> None:
         self.handlers[kind] = fn
 
+    def stop(self) -> None:
+        """Terminally stop the loop: ``run`` returns after the handler that
+        called this (and any later ``run`` returns immediately).  Used by
+        controllers layered on the simulation — e.g. the federated round
+        driver, whose experiment ends at the final round close even when
+        straggler jobs (a crashed worker's stalled tenant) would keep
+        heartbeat events circulating forever."""
+        self._stopped = True
+
     def run(self, until: float = float("inf"), max_events: int = 10_000_000) -> float:
-        """Dispatch events in order until the heap drains or ``until``."""
+        """Dispatch events in order until the heap drains, ``until`` is
+        passed, or a handler calls ``stop()``."""
         n = 0
-        while self._heap and n < max_events:
+        while self._heap and n < max_events and not self._stopped:
             e = self._heap[0]
             if e.time > until:
                 break

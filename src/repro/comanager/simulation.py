@@ -105,6 +105,7 @@ class SystemSimulation:
         gateway_async: bool = False,
         gateway_max_pending: int | None = None,
         gateway_max_system_pending: int | None = None,
+        gateway_max_pending_per_tier: dict[int, int] | None = None,
         tenant_weights: dict[str, float] | None = None,
         tenant_priorities: dict[str, int] | None = None,
         tenant_slos_ms: dict[str, float] | None = None,
@@ -172,8 +173,9 @@ class SystemSimulation:
         open-loop instead of arriving as one epoch-sized burst — the
         high-traffic serving stand-in used by benchmarks/gateway_throughput.
 
-        ``gateway_max_pending`` / ``gateway_max_system_pending`` (gateway
-        mode): per-tenant and global admission caps.  A submission the
+        ``gateway_max_pending`` / ``gateway_max_system_pending`` /
+        ``gateway_max_pending_per_tier`` (gateway mode): per-tenant, global,
+        and per-priority-tier admission caps.  A submission the
         gateway rejects (``Backpressure``) is counted in
         ``SimulationReport.rejected`` and drained — shed load, not executed
         work.  The global cap is the weighted-fair admission control the
@@ -225,6 +227,13 @@ class SystemSimulation:
         self.gateway_async = gateway_async
         self.arrivals = arrivals or {}
         self.rejected = 0
+        #: fired as ``cb(client_id, t)`` when a job's last circuit finishes —
+        #: the hook round-structured controllers (repro.federated) ride to
+        #: observe per-tenant update arrival times on the virtual clock.
+        self.job_callbacks: list = []
+        self._tenant_weights = dict(tenant_weights or {})
+        self._tenant_priorities = dict(tenant_priorities or {})
+        self._tenant_slos_ms = dict(tenant_slos_ms or {})
         if gateway:
             from repro.kernels.vqc_statevector import LANES
             from repro.serve.gateway import Backpressure, Gateway
@@ -235,6 +244,8 @@ class SystemSimulation:
             gw_kwargs = {}
             if gateway_max_pending is not None:
                 gw_kwargs["max_pending"] = gateway_max_pending
+            if gateway_max_pending_per_tier is not None:
+                gw_kwargs["max_pending_per_tier"] = gateway_max_pending_per_tier
             self.gateway = Gateway(
                 target=gateway_target or LANES,
                 deadline=gateway_deadline,
@@ -507,6 +518,8 @@ class SystemSimulation:
         if self._remaining[cid] == 0:
             job = self.jobs[cid]
             self._results[cid] = JobResult(cid, job.n_circuits, job.submit_time, t)
+            for cb in self.job_callbacks:
+                cb(cid, t)
 
     def _drain(self, t: float) -> None:
         def launch(task, wid):
@@ -565,13 +578,54 @@ class SystemSimulation:
             self.manager.drain_pending(t, launch)
 
     # ---------------------------------------------------------------- run
-    def run(self) -> SimulationReport:
+    def submit_job(
+        self,
+        job: JobSpec,
+        *,
+        weight: float = 1.0,
+        priority: int = 1,
+        slo_ms: float | None = None,
+    ) -> None:
+        """Admit a job into a running (or not-yet-run) simulation.
+
+        The constructor's job list is closed-world: every client is known at
+        t=0 and its policy overrides are validated up front.  Round-structured
+        controllers (the federated driver) instead open jobs as virtual time
+        advances — a tenant's round-r local-training job is only knowable
+        when round r-1 closes — so this entry point registers the job's
+        gateway client with an explicit policy and schedules its submission
+        at ``max(job.submit_time, now)``."""
+        if job.client_id in self.jobs:
+            raise ValueError(f"job {job.client_id!r} already submitted")
+        self.jobs[job.client_id] = job
+        if self.gateway is not None:
+            self.gateway.register_client(
+                job.client_id,
+                weight=self._tenant_weights.get(job.client_id, weight),
+                priority=self._tenant_priorities.get(job.client_id, priority),
+                slo_ms=self._tenant_slos_ms.get(job.client_id, slo_ms),
+            )
+        self.loop.schedule(max(job.submit_time, self.loop.now), "submit", job)
+
+    def start(self) -> None:
+        """Schedule worker registrations, the liveness sweep, and every
+        pre-declared job; the caller then drives ``loop.run`` itself (the
+        federated driver interleaves round control events) and collects the
+        report with ``finish()``.  ``run()`` remains the one-shot path."""
         for wid in self.workers:
             self.loop.schedule(0.0, "register", wid)
         self.loop.schedule(self.heartbeat_period, "liveness", None)
         for job in self.jobs.values():
             self.loop.schedule(job.submit_time, "submit", job)
+
+    def run(self) -> SimulationReport:
+        self.start()
         end = self.loop.run(until=self.run_until)
+        return self.finish(end)
+
+    def finish(self, end: float | None = None) -> SimulationReport:
+        if end is None:
+            end = self.loop.now
         makespan = max((r.finish_time for r in self._results.values()), default=end)
         # noise ledger: retention of each completed circuit on its worker
         rets, reg = [], self.manager.task_registry

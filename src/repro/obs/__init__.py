@@ -6,6 +6,7 @@ float.  See ``trace.TraceRecorder`` for the hook surface and
 ``histogram.LogHistogram`` for the fixed-memory aggregation primitive.
 """
 from repro.obs.config import (
+    FEDERATED_STAGES,
     LIFECYCLE_STAGES,
     RECOVERY_STAGES,
     ObservabilityConfig,
@@ -15,6 +16,7 @@ from repro.obs.trace import (
     OUTCOMES,
     STAGE_METRICS,
     CircuitTrace,
+    RoundEvent,
     TraceBuffer,
     TraceRecorder,
     WorkerSpan,
@@ -23,6 +25,7 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "FEDERATED_STAGES",
     "LIFECYCLE_STAGES",
     "OUTCOMES",
     "RECOVERY_STAGES",
@@ -30,6 +33,7 @@ __all__ = [
     "CircuitTrace",
     "LogHistogram",
     "ObservabilityConfig",
+    "RoundEvent",
     "TraceBuffer",
     "TraceRecorder",
     "WorkerSpan",

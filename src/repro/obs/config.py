@@ -37,6 +37,17 @@ RECOVERY_STAGES = frozenset(
     {"retried", "hedged", "worker_offline", "migrated", "requeue"}
 )
 
+#: federated-round lifecycle stages (``repro.federated``): these are
+#: ROUND-level events recorded via ``TraceRecorder.round_event`` — one per
+#: aggregation-round transition, not per circuit — so they never appear
+#: inside a ``CircuitTrace`` and are exempt from the pipeline-order check.
+FEDERATED_STAGES = (
+    "round_start",
+    "update_received",
+    "update_late",
+    "round_aggregated",
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class ObservabilityConfig:
@@ -70,11 +81,12 @@ class ObservabilityConfig:
         if self.stages is not None:
             if not isinstance(self.stages, tuple):
                 object.__setattr__(self, "stages", tuple(self.stages))
-            unknown = sorted(set(self.stages) - set(LIFECYCLE_STAGES))
+            valid = set(LIFECYCLE_STAGES) | set(FEDERATED_STAGES)
+            unknown = sorted(set(self.stages) - valid)
             if unknown:
                 raise ValueError(
                     f"unknown stage(s) {unknown}; valid stages: "
-                    f"{list(LIFECYCLE_STAGES)}"
+                    f"{list(LIFECYCLE_STAGES) + list(FEDERATED_STAGES)}"
                 )
 
     @classmethod
@@ -82,4 +94,9 @@ class ObservabilityConfig:
         return cls(enabled=False, sample_rate=0.0)
 
 
-__all__ = ["LIFECYCLE_STAGES", "RECOVERY_STAGES", "ObservabilityConfig"]
+__all__ = [
+    "FEDERATED_STAGES",
+    "LIFECYCLE_STAGES",
+    "RECOVERY_STAGES",
+    "ObservabilityConfig",
+]

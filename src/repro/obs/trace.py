@@ -34,6 +34,7 @@ from collections import deque
 from typing import Any, Iterable, Optional
 
 from repro.obs.config import (
+    FEDERATED_STAGES,
     LIFECYCLE_STAGES,
     RECOVERY_STAGES,
     ObservabilityConfig,
@@ -87,6 +88,30 @@ class CircuitTrace:
             "outcome": self.outcome,
             "queue_depth": self.queue_depth,
         }
+
+
+@dataclasses.dataclass
+class RoundEvent:
+    """One federated aggregation-round transition (``FEDERATED_STAGES``).
+
+    Round-level, not circuit-level: a round's local-training circuits carry
+    ordinary ``CircuitTrace`` records; these mark the coordinator's control
+    decisions (round opened, update arrived on time / late, aggregate
+    applied) so straggler waits are visible next to the data plane."""
+
+    round_idx: int
+    stage: str
+    ts: float
+    tenant: Optional[str] = None
+    args: Optional[dict] = None
+
+    def to_dict(self) -> dict:
+        out = {"round": self.round_idx, "stage": self.stage, "ts": self.ts}
+        if self.tenant is not None:
+            out["tenant"] = self.tenant
+        if self.args:
+            out["args"] = dict(self.args)
+        return out
 
 
 @dataclasses.dataclass
@@ -190,6 +215,7 @@ class TraceBuffer:
         written file directly in https://ui.perfetto.dev."""
         circuits = self.records(CircuitTrace)
         spans = self.records(WorkerSpan)
+        rounds = self.records(RoundEvent)
         tenants = sorted({c.tenant for c in circuits})
         workers = sorted({s.worker for s in spans})
         pid_of = {t: 1 + i for i, t in enumerate(tenants)}
@@ -281,6 +307,31 @@ class TraceBuffer:
                 }
             )
 
+        if rounds:
+            # dedicated control-plane row, present only for federated runs
+            # so non-federated golden traces stay byte-identical.
+            fed_pid = 2001
+            events.append(_meta(fed_pid, "process_name", name="federated rounds"))
+            events.append(_meta(fed_pid, "process_sort_index", sort_index=200))
+            for r in rounds:
+                args: dict[str, Any] = {"round": r.round_idx}
+                if r.tenant is not None:
+                    args["tenant"] = r.tenant
+                if r.args:
+                    args.update(r.args)
+                events.append(
+                    {
+                        "ph": "i",
+                        "s": "p",
+                        "cat": "round",
+                        "name": f"{r.stage} r{r.round_idx}",
+                        "pid": fed_pid,
+                        "tid": 1,
+                        "ts": r.ts * us,
+                        "args": args,
+                    }
+                )
+
         trace = {"traceEvents": events, "displayTimeUnit": "ms"}
         if path is not None:
             with open(path, "w") as f:
@@ -317,6 +368,7 @@ class TraceRecorder:
         self.coalescer_lanes = LogHistogram(v_min=0.5, growth=1.3, n_buckets=64)
         self.timelines: dict[str, WorkerTimeline] = {}
         self.kernel_launches: dict[str, int] = {}
+        self.round_counts: dict[str, int] = {}
         self.events = 0
         self._next_span = 0
 
@@ -453,6 +505,48 @@ class TraceRecorder:
             )
             self._next_span += 1
 
+    # -------------------------------------------------- federated rounds
+    def round_event(
+        self,
+        round_idx: int,
+        stage: str,
+        now: float,
+        *,
+        tenant: Optional[str] = None,
+        args: Optional[dict] = None,
+    ) -> None:
+        """One federated-round transition (``FEDERATED_STAGES``): round-level
+        control events from ``repro.federated`` — not tied to any circuit
+        sequence number, so they bypass sampling (a handful per round) but
+        respect the ``stages`` filter and the ring buffer like everything
+        else."""
+        if not self.enabled:
+            return
+        if stage not in FEDERATED_STAGES:
+            raise ValueError(
+                f"unknown federated stage {stage!r}; valid: "
+                f"{list(FEDERATED_STAGES)}"
+            )
+        if self._stage_ok is not None and stage not in self._stage_ok:
+            return
+        with self._lock:
+            self.events += 1
+            self.round_counts[stage] = self.round_counts.get(stage, 0) + 1
+            self.buffer.append(
+                RoundEvent(
+                    round_idx=round_idx,
+                    stage=stage,
+                    ts=now,
+                    tenant=tenant,
+                    args=args,
+                )
+            )
+
+    def round_records(self) -> list[dict]:
+        """Finished federated round events (oldest first)."""
+        with self._lock:
+            return [r.to_dict() for r in self.buffer.records(RoundEvent)]
+
     def coalescer_sample(self, members: int, lanes: int) -> None:
         """Coalescer buffer depth after one pump (member count and
         lane-weighted) — the queue the size-or-deadline policy drains."""
@@ -518,6 +612,8 @@ class TraceRecorder:
             }
             if self.kernel_launches:
                 out["kernel_launches"] = dict(sorted(self.kernel_launches.items()))
+            if self.round_counts:
+                out["rounds"] = dict(sorted(self.round_counts.items()))
             if self.queue_depth.count:
                 out["queue_depth"] = self.queue_depth.snapshot()
             if self.coalescer_depth.count:

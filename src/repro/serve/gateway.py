@@ -158,6 +158,7 @@ class Gateway:
         max_pending: int = 100_000,
         max_in_flight: int = 100_000,
         max_system_pending: int | None = None,
+        max_pending_per_tier: dict[int, int] | None = None,
         telemetry: Telemetry | None = None,
     ):
         from repro.kernels.vqc_statevector import LANES
@@ -171,6 +172,19 @@ class Gateway:
         self.telemetry = telemetry or Telemetry(lanes=lanes)
         self._defaults = dict(max_pending=max_pending, max_in_flight=max_in_flight)
         self.max_system_pending = max_system_pending
+        # per-priority-tier admission caps: the global weighted-fair cap
+        # alone still lets a low-tier burst consume headroom a high tier
+        # needs between refresh points; a tier cap bounds each tier's
+        # outstanding circuits (queued + in flight) independently, shedding
+        # weighted-fair WITHIN the tier.
+        for tier, tier_cap in (max_pending_per_tier or {}).items():
+            if tier_cap < 1:
+                raise ValueError(
+                    f"max_pending_per_tier[{tier}] must be >= 1, got {tier_cap}"
+                )
+        self.max_pending_per_tier = dict(max_pending_per_tier or {})
+        self._tier_outstanding: dict[int, int] = {}
+        self._tier_weight: dict[int, float] = {}
         self.tenants: dict[str, TenantState] = {}
         self._seq = 0
         # scheduler heap of (priority, vpass, cid): every ELIGIBLE tenant
@@ -230,9 +244,16 @@ class Gateway:
                 self._weight_total -= prev.weight
                 self._pending_total -= len(prev.queue)
                 self._inflight_total -= prev.in_flight
+                self._tier_weight[prev.priority] -= prev.weight
+                self._tier_outstanding[prev.priority] = self._tier_outstanding.get(
+                    prev.priority, 0
+                ) - (len(prev.queue) + prev.in_flight)
                 if prev.priority != priority:
                     self._tier_vmin[prev.priority] = None
             self._weight_total += weight
+            self._tier_weight[priority] = (
+                self._tier_weight.get(priority, 0.0) + weight
+            )
             self.tenants[client_id] = st
             self._mark_ready(client_id, st)
             self.telemetry.set_slo(client_id, st.slo_s)
@@ -280,6 +301,27 @@ class Gateway:
                         f"({outstanding} >= {cap}) and tenant above its "
                         f"weighted share ({mine} >= {share:.1f})"
                     )
+            tier_cap = self.max_pending_per_tier.get(st.priority)
+            if tier_cap is not None:
+                tier_out = self._tier_outstanding.get(st.priority, 0)
+                if tier_out >= tier_cap:
+                    # tier saturated: shed weighted-fair WITHIN the tier
+                    # (same floor-at-one rule as the global cap), so one
+                    # tier's burst can never consume another tier's headroom
+                    tier_w = max(self._tier_weight.get(st.priority, 0.0), 1e-9)
+                    share = max(1.0, tier_cap * st.weight / tier_w)
+                    mine = len(st.queue) + st.in_flight
+                    if mine + 1 > share:
+                        self.telemetry.on_reject(client_id)
+                        self.telemetry.trace.circuit_reject(
+                            self._seq, client_id, key, now
+                        )
+                        raise Backpressure(
+                            f"{client_id}: tier {st.priority} at admission "
+                            f"cap ({tier_out} >= {tier_cap}) and tenant "
+                            f"above its weighted share ({mine} >= "
+                            f"{share:.1f})"
+                        )
             fut = CircuitFuture(client_id, self._seq, now)
             flush_by = (
                 None
@@ -301,6 +343,9 @@ class Gateway:
             )
             self._seq += 1
             self._pending_total += 1
+            self._tier_outstanding[st.priority] = (
+                self._tier_outstanding.get(st.priority, 0) + 1
+            )
             self._mark_ready(client_id, st)
             self.telemetry.on_submit(client_id, now)
             self.telemetry.trace.circuit_submit(
@@ -403,6 +448,9 @@ class Gateway:
                 if st.in_flight > 0:
                     st.in_flight -= 1
                     self._inflight_total -= 1
+                    self._tier_outstanding[st.priority] = (
+                        self._tier_outstanding.get(st.priority, 1) - 1
+                    )
                 self._mark_ready(m.client_id, st)
                 if m.future is not None:
                     m.future.set(values[i] if values is not None else None)
@@ -419,6 +467,9 @@ class Gateway:
                 if st.in_flight > 0:
                     st.in_flight -= 1
                     self._inflight_total -= 1
+                    self._tier_outstanding[st.priority] = (
+                        self._tier_outstanding.get(st.priority, 1) - 1
+                    )
                 self._mark_ready(m.client_id, st)
                 if m.future is not None:
                     m.future.set_error(exc)
@@ -436,6 +487,9 @@ class Gateway:
                 if st.in_flight > 0:
                     st.in_flight -= 1
                     self._inflight_total -= 1
+                    self._tier_outstanding[st.priority] = (
+                        self._tier_outstanding.get(st.priority, 1) - 1
+                    )
                 self._mark_ready(m.client_id, st)
                 if m.future is not None:
                     m.future.set_error(

@@ -52,6 +52,12 @@ class TenantStats:
     #: end-to-end latency SLO in seconds (None = best-effort tenant).
     slo_s: float | None = None
     slo_misses: int = 0
+    #: federated participation counters (repro.federated): updates that
+    #: made a round's quorum, arrived after the deadline (folded or not),
+    #: and updates dropped entirely (staleness limit / crashed tenant).
+    fed_participated: int = 0
+    fed_late: int = 0
+    fed_dropped: int = 0
 
     @property
     def circuits_per_second(self) -> float:
@@ -182,6 +188,8 @@ class Telemetry:
         self.migrated_batches = 0
         self.migrated_circuits = 0
         self.worker_events: dict[str, dict[str, int]] = {}
+        # federated aggregation rounds closed (repro.federated coordinator).
+        self.federated_rounds = 0
         self.service = ServiceModel()
 
     def _tenant(self, client_id: str) -> TenantStats:
@@ -270,6 +278,28 @@ class Telemetry:
     def on_worker_offline(self, worker_id: str) -> None:
         self._worker_events(worker_id)["offline_trips"] += 1
 
+    def on_federated_update(self, client_id: str, status: str) -> None:
+        """One federated-round outcome for ``client_id``: ``participated``
+        (made quorum), ``late`` (arrived past the deadline — folded into the
+        next round or discounted away), or ``dropped`` (never arrived /
+        exceeded the staleness limit)."""
+        s = self._tenant(client_id)
+        if status == "participated":
+            s.fed_participated += 1
+        elif status == "late":
+            s.fed_late += 1
+        elif status == "dropped":
+            s.fed_dropped += 1
+        else:
+            raise ValueError(
+                f"unknown federated update status {status!r}; valid: "
+                "participated / late / dropped"
+            )
+
+    def on_round_aggregated(self) -> None:
+        """One federated aggregation round closed by the coordinator."""
+        self.federated_rounds += 1
+
     def on_complete(self, client_id: str, submit_time: float, now: float) -> None:
         s = self._tenant(client_id)
         s.completed += 1
@@ -305,6 +335,12 @@ class Telemetry:
             out["slo_s"] = s.slo_s
             out["slo_misses"] = s.slo_misses
             out["slo_attainment"] = round(s.slo_attainment, 4)
+        if s.fed_participated or s.fed_late or s.fed_dropped:
+            out["federated"] = {
+                "participated": s.fed_participated,
+                "late": s.fed_late,
+                "dropped": s.fed_dropped,
+            }
         return out
 
     def summary(self) -> dict:
@@ -347,6 +383,8 @@ class Telemetry:
             out["fleet"] = {
                 w: dict(ev) for w, ev in sorted(self.worker_events.items())
             }
+        if self.federated_rounds:
+            out["federated_rounds"] = self.federated_rounds
         if slo_done:
             out["slo_misses"] = slo_misses
             out["slo_attainment"] = round(1.0 - slo_misses / slo_done, 4)

@@ -1,0 +1,265 @@
+"""Federated DQL subsystem (repro.federated): round state machine, quorum vs
+sync-barrier equivalence, straggler fold-in determinism, crash tolerance,
+secure aggregation, DP accounting, and the telemetry/trace plumbing."""
+import numpy as np
+import pytest
+
+from repro.comanager.faults import FaultSpec
+from repro.comanager.worker import WorkerConfig
+from repro.federated import (
+    FederatedConfig,
+    FederatedCoordinator,
+    TenantSpec,
+    fedavg,
+    run_federated,
+)
+from repro.obs import TraceRecorder
+
+
+def toy_update_fn(seed):
+    def update_fn(tenant, round_idx, params):
+        ent = [seed, round_idx] + [ord(c) for c in tenant]
+        g = np.random.default_rng(np.random.SeedSequence(ent))
+        return {
+            k: 0.01 * g.standard_normal(np.shape(v)) for k, v in params.items()
+        }
+
+    return update_fn
+
+
+def fleet():
+    return [
+        WorkerConfig("w1", 5),
+        WorkerConfig("w2", 10),
+        WorkerConfig("w3", 15),
+        WorkerConfig("w4", 20),
+    ]
+
+
+def fig6_tenants(n_circuits=8):
+    return [
+        TenantSpec("t5a", qc=5, n_layers=1, n_circuits=n_circuits),
+        TenantSpec("t5b", qc=5, n_layers=2, n_circuits=n_circuits),
+        TenantSpec("t7a", qc=7, n_layers=1, n_circuits=n_circuits),
+        TenantSpec("t7b", qc=7, n_layers=2, n_circuits=n_circuits),
+    ]
+
+
+PARAMS0 = {"theta": np.linspace(-1.0, 1.0, 12).reshape(3, 4), "phi": np.ones(5)}
+
+
+def fingerprint(report):
+    import json
+
+    return (
+        json.dumps(report.summary(), sort_keys=True, default=float),
+        tuple((k, report.params[k].tobytes()) for k in sorted(report.params)),
+    )
+
+
+# -------------------------------------------------------------------- config
+def test_config_validation():
+    with pytest.raises(ValueError):
+        FederatedConfig(quorum=0.0)
+    with pytest.raises(ValueError):
+        FederatedConfig(quorum=1.5)
+    with pytest.raises(ValueError):
+        FederatedConfig(late_policy="maybe")
+    with pytest.raises(ValueError):
+        FederatedConfig(dp_noise_multiplier=1.0)  # noise needs a clip norm
+    with pytest.raises(ValueError):
+        TenantSpec("evil@r3")  # '@r' is the round-job-id separator
+
+
+def test_fedavg_weighted_closed_form():
+    u = {"a": {"x": np.array([1.0, 0.0])}, "b": {"x": np.array([0.0, 1.0])}}
+    out = fedavg(u, weights={"a": 3.0, "b": 1.0})
+    np.testing.assert_allclose(out["x"], [0.75, 0.25])
+    plain = fedavg(u)
+    np.testing.assert_allclose(plain["x"], [0.5, 0.5])
+
+
+# --------------------------------------------------- quorum vs barrier modes
+def test_quorum_one_degenerates_to_sync_barrier():
+    """quorum=1.0 with an unreachable deadline takes the quorum code path
+    but must close every round at the same instant, with the same on-time
+    set and bit-identical parameters, as the sync barrier."""
+    reports = {}
+    for mode, kw in (
+        ("barrier", dict(barrier=True)),
+        ("quorum", dict(barrier=False, quorum=1.0, round_deadline_s=1e5)),
+    ):
+        cfg = FederatedConfig(n_rounds=3, seed=11, **kw)
+        reports[mode] = run_federated(
+            cfg, fig6_tenants(), toy_update_fn(11), PARAMS0, fleet(),
+            gateway=True,
+        )
+    b, q = reports["barrier"], reports["quorum"]
+    assert [r.closed_at for r in b.rounds] == [r.closed_at for r in q.rounds]
+    assert [sorted(r.on_time) for r in b.rounds] == [
+        sorted(r.on_time) for r in q.rounds
+    ]
+    for k in b.params:
+        assert b.params[k].tobytes() == q.params[k].tobytes()
+
+
+def test_crashed_tenant_never_stalls_rounds():
+    """One tenant's only capable worker crashes at t=0: its update can never
+    arrive, yet every configured round still closes by its deadline and the
+    tenant lands in the dropped ledger."""
+    workers = [WorkerConfig("w1", 5), WorkerConfig("w2", 10)]
+    tenants = [
+        TenantSpec("a", qc=5, n_circuits=8),
+        TenantSpec("b", qc=5, n_circuits=8),
+        TenantSpec("big", qc=7, n_circuits=8),  # only fits the crashed w2
+    ]
+    cfg = FederatedConfig(n_rounds=3, quorum=0.5, seed=3)
+    report = run_federated(
+        cfg, tenants, toy_update_fn(3), PARAMS0, workers,
+        gateway=True,
+        worker_failures={"w2": FaultSpec(kind="crash", at=0.0)},
+    )
+    assert len(report.rounds) == 3
+    for rec in report.rounds:
+        assert "big" not in rec.on_time
+        assert rec.deadline is None or rec.closed_at <= rec.deadline + 1e-9
+    assert report.participation["big"]["dropped"] >= 1
+    assert report.participation["big"]["participated"] == 0
+
+
+def test_late_fold_in_deterministic_double_run():
+    """The canonical straggler scenario (slow wide workers) must actually
+    exercise the staleness fold-in path AND reproduce bit-identically on a
+    same-seed double run."""
+    faults = {
+        w: FaultSpec(kind="slowdown", at=0.0, factor=10.0)
+        for w in ("w2", "w3", "w4")
+    }
+
+    def once():
+        cfg = FederatedConfig(n_rounds=4, quorum=0.5, seed=7)
+        return run_federated(
+            cfg, fig6_tenants(16), toy_update_fn(7), PARAMS0, fleet(),
+            gateway=True, worker_failures=dict(faults),
+        )
+
+    r1, r2 = once(), once()
+    assert any(rec.folded for rec in r1.rounds), "no straggler ever folded"
+    assert fingerprint(r1) == fingerprint(r2)
+    assert sum(c["late"] for c in r1.participation.values()) >= 1
+
+
+# --------------------------------------------------------- secure agg and DP
+def test_masked_aggregation_matches_plain_fedavg():
+    rng = np.random.default_rng(0)
+    tenants = ["a", "b", "c", "d"]
+    updates = {
+        t: {k: 0.1 * rng.standard_normal(np.shape(v)) for k, v in PARAMS0.items()}
+        for t in tenants
+    }
+    finals = {}
+    for secure in (False, True):
+        co = FederatedCoordinator(
+            FederatedConfig(n_rounds=1, secure_aggregation=secure, seed=5),
+            PARAMS0,
+        )
+        co.begin_round(0, 0.0, tenants)
+        for t in tenants:
+            assert co.offer(t, updates[t], 0.5) == "participated"
+        co.close_round(1.0)
+        finals[secure] = co.params
+    for k in PARAMS0:
+        assert np.abs(finals[True][k] - finals[False][k]).max() <= 1e-6
+
+
+def test_dp_noise_perturbs_and_accountant_accumulates():
+    upd = {"a": {k: np.ones_like(v) for k, v in PARAMS0.items()}}
+
+    def close_with(noise):
+        cfg = FederatedConfig(
+            n_rounds=1, dp_noise_multiplier=noise, dp_clip=1.0, seed=9
+        )
+        co = FederatedCoordinator(cfg, PARAMS0)
+        co.begin_round(0, 0.0, ["a"])
+        co.offer("a", upd["a"], 0.5)
+        co.close_round(1.0)
+        return co
+
+    clean, noisy = close_with(0.0), close_with(2.0)
+    assert any(
+        np.abs(clean.params[k] - noisy.params[k]).max() > 0 for k in PARAMS0
+    )
+    summary = noisy.accountant.summary(1e-5)
+    assert summary["rounds"] == 1
+    assert summary["epsilon"] > 0
+    assert clean.accountant.rounds == 0  # no noise -> nothing spent
+
+
+def test_nan_update_never_reaches_aggregate():
+    co = FederatedCoordinator(FederatedConfig(n_rounds=1), PARAMS0)
+    co.begin_round(0, 0.0, ["good", "bad"])
+    poison = {k: np.full(np.shape(v), np.nan) for k, v in PARAMS0.items()}
+    assert co.offer("bad", poison, 0.1) == "nan_rejected"
+    good = {k: np.ones(np.shape(v)) for k, v in PARAMS0.items()}
+    assert co.offer("good", good, 0.2) == "participated"
+    rec = co.close_round(1.0)
+    assert rec.nan_rejected == ["bad"] and rec.on_time == ["good"]
+    assert np.isfinite(co.params["theta"]).all()
+    np.testing.assert_allclose(co.params["phi"], PARAMS0["phi"] + 1.0)
+    assert co.participation["bad"]["dropped"] == 1
+
+
+def test_staleness_policy_folds_then_drops():
+    cfg = FederatedConfig(n_rounds=3, staleness_alpha=0.5, max_staleness=1)
+    co = FederatedCoordinator(cfg, PARAMS0)
+    co.begin_round(0, 0.0, ["a", "b"])
+    co.offer("a", {k: np.zeros(np.shape(v)) for k, v in PARAMS0.items()}, 0.1)
+    co.close_round(1.0)
+    upd = {k: np.ones(np.shape(v)) for k, v in PARAMS0.items()}
+    # one round late -> folds with the alpha discount into the next close
+    assert co.offer_late("b", upd, 1.5, trained_round=0) == "late_folded"
+    co.begin_round(1, 2.0, ["a", "b"])
+    co.offer("a", {k: np.zeros(np.shape(v)) for k, v in PARAMS0.items()}, 2.1)
+    rec = co.close_round(3.0)
+    assert rec.folded == ["b"]
+    # weights: a at 1.0 with a zero delta, b folded at 0.5 with ones
+    np.testing.assert_allclose(
+        co.params["phi"], PARAMS0["phi"] + 0.5 / 1.5, atol=1e-12
+    )
+    # beyond max_staleness -> dropped
+    assert co.offer_late("b", upd, 3.5, trained_round=0) == "late_dropped"
+    assert co.participation["b"]["late"] == 1
+    assert co.participation["b"]["dropped"] == 1
+
+
+# ------------------------------------------------------- telemetry and trace
+def test_coordinator_emits_round_trace_events():
+    trace = TraceRecorder()
+    co = FederatedCoordinator(
+        FederatedConfig(n_rounds=1), PARAMS0, trace=trace
+    )
+    co.begin_round(0, 0.0, ["a", "b"])
+    for t in ("a", "b"):
+        co.offer(t, {k: np.zeros(np.shape(v)) for k, v in PARAMS0.items()}, 0.5)
+    co.close_round(1.0)
+    assert trace.round_counts == {
+        "round_start": 1,
+        "update_received": 2,
+        "round_aggregated": 1,
+    }
+    with pytest.raises(ValueError):
+        trace.round_event(0, "not_a_stage", 0.0)
+
+
+def test_gateway_telemetry_carries_federated_counters():
+    cfg = FederatedConfig(n_rounds=2, quorum=0.75, seed=1)
+    report = run_federated(
+        cfg, fig6_tenants(), toy_update_fn(1), PARAMS0, fleet(), gateway=True
+    )
+    gw = report.simulation.gateway_summary
+    assert gw["federated_rounds"] == 2
+    rows = {row["client"]: row for row in gw["tenants"]}
+    fed = rows["t5a"]["federated"]
+    assert fed["participated"] >= 1
+    assert report.rounds_per_second > 0
+    assert 0.0 <= report.quorum_wait_share <= 1.0

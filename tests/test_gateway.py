@@ -305,3 +305,50 @@ def test_two_simulations_have_independent_task_ids():
     ids1 = sorted(tid for _, tid, _ in r1.assignments)
     ids2 = sorted(tid for _, tid, _ in r2.assignments)
     assert ids1 == list(range(5)) and ids2 == list(range(5))
+
+
+# ------------------------------------------------------- per-tier admission
+def test_tier_cap_sheds_saturated_tier_weighted_fair():
+    g = Gateway(target=128, lanes=128, deadline=100.0,
+                max_pending_per_tier={1: 4})
+    g.register_client("a", priority=1)
+    g.register_client("b", priority=1)
+    for i in range(4):
+        g.submit("a", "k", i, now=0.0)
+    # tier full and a holds double its share (4 > 4 * 1/2 = 2)
+    with pytest.raises(Backpressure, match="tier 1 at admission cap"):
+        g.submit("a", "k", 99, now=0.0)
+    assert g.telemetry.tenants["a"].rejected == 1
+    # b is below its within-tier share: the floor-at-one rule keeps it live
+    g.submit("b", "k", 100, now=0.0)
+
+
+def test_tier_cap_does_not_leak_across_tiers():
+    """A saturated low tier never consumes a high tier's headroom (and a
+    tier with no cap configured is never shed)."""
+    g = Gateway(target=128, lanes=128, deadline=100.0,
+                max_pending_per_tier={1: 2})
+    g.register_client("lo", priority=1)
+    g.register_client("hi", priority=0)
+    g.submit("lo", "k", 0, now=0.0)
+    g.submit("lo", "k", 1, now=0.0)
+    with pytest.raises(Backpressure):
+        g.submit("lo", "k", 2, now=0.0)
+    for i in range(10):                      # tier 0: uncapped
+        g.submit("hi", "k", 100 + i, now=0.0)
+
+
+def test_tier_cap_frees_headroom_on_completion():
+    g = Gateway(target=4, lanes=4, deadline=100.0,
+                max_pending_per_tier={1: 4})
+    g.register_client("a", priority=1)
+    for i in range(4):
+        g.submit("a", "k", i, now=0.0)
+    with pytest.raises(Backpressure):
+        g.submit("a", "k", 98, now=0.0)
+    (batch,) = g.pump(now=0.0)
+    # dequeued-but-in-flight circuits still hold their tier slots
+    with pytest.raises(Backpressure):
+        g.submit("a", "k", 99, now=0.0)
+    g.complete(batch, None, now=1.0)
+    g.submit("a", "k", 100, now=1.0)
